@@ -1,0 +1,78 @@
+"""Shared benchmark utilities: timing, measures, synthetic images."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall-time of ``fn(*args)`` (jit'd callables get compiled in
+    warmup); returns seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def random_measure(n: int, seed: int):
+    r = np.random.default_rng(seed)
+    u = r.random(n) + 1e-3
+    return jnp.asarray(u / u.sum())
+
+
+def two_hump_series(n: int, pos1: float, pos2: float,
+                    h1: float = 0.5, h2: float = 0.8, width: float = 0.05):
+    """Paper §4.3: a series on [0,1] with two humps."""
+    t = np.linspace(0, 1, n)
+    sig = (h1 * np.exp(-((t - pos1) / width) ** 2)
+           + h2 * np.exp(-((t - pos2) / width) ** 2))
+    return jnp.asarray(sig)
+
+
+def synthetic_digit(n: int = 28, kind: str = "three"):
+    """Deterministic digit-like grayscale image (no MNIST offline)."""
+    img = np.zeros((n, n))
+    yy, xx = np.mgrid[0:n, 0:n] / (n - 1)
+    if kind == "three":
+        for cy in (0.3, 0.7):
+            r = np.sqrt((yy - cy) ** 2 + (xx - 0.55) ** 2)
+            arc = (np.abs(r - 0.18) < 0.06) & (xx > 0.38)
+            img[arc] = 1.0
+    return jnp.asarray(img / max(img.sum(), 1e-9))
+
+
+def synthetic_horse(n: int, pose: float = 0.0):
+    """Deformable quadruped-ish blob (paper §4.4.2 stand-in): body ellipse,
+    head, and four legs whose angles vary with ``pose``."""
+    yy, xx = np.mgrid[0:n, 0:n] / (n - 1)
+    img = np.zeros((n, n))
+    body = ((xx - 0.5) / 0.28) ** 2 + ((yy - 0.45) / 0.14) ** 2 < 1
+    head = ((xx - 0.82) / 0.10) ** 2 + ((yy - 0.32) / 0.10) ** 2 < 1
+    img[body | head] = 1.0
+    for i, base in enumerate((0.3, 0.42, 0.58, 0.7)):
+        ang = 0.25 * pose * (1 if i % 2 else -1)
+        lx = base + ang * (yy - 0.55)
+        leg = (np.abs(xx - lx) < 0.035) & (yy > 0.5) & (yy < 0.85)
+        img[leg] = 1.0
+    img = img + 1e-4
+    return jnp.asarray(img / img.sum())
+
+
+def image_measure(img):
+    flat = jnp.ravel(img)
+    return flat / flat.sum()
+
+
+def fit_loglog_slope(ns, ts):
+    """Empirical complexity exponent (paper Figs 1-3, 5)."""
+    return float(np.polyfit(np.log(np.asarray(ns)),
+                            np.log(np.asarray(ts)), 1)[0])

@@ -1,0 +1,26 @@
+"""Kernel-level microbenchmarks: FGC operator backends (paper §3 primitive)
++ fused Sinkhorn half-step. On CPU the Pallas kernels run in interpret mode
+(correctness path); their timings are reported for completeness but the
+roofline work for TPU lives in EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import fgc
+
+
+def run(report):
+    r = np.random.default_rng(0)
+    for n in (512, 2048, 8192):
+        x = jnp.asarray(r.normal(size=(n, 128)), jnp.float32)
+        for be in ("scan", "cumsum", "blocked", "dense"):
+            fn = jax.jit(functools.partial(
+                fgc.apply_abs_power, axis=0, power=2, backend=be))
+            t, _ = timeit(fn, x)
+            report.row("kernel_fgc_apply", n=n, backend=be, seconds=t,
+                       gelem_per_s=n * 128 / t / 1e9)

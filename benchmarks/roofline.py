@@ -1,0 +1,105 @@
+"""Roofline reader: turn the dry-run JSON into the §Roofline table
+(compute / memory / collective terms, dominant bottleneck, MODEL_FLOPS
+ratio, one-line prescription per cell)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def _prescription(rec) -> str:
+    dom = rec["dominant"]
+    if dom == "collective":
+        return ("cut TP collectives: dp/fsdp strategy or bf16 cotangents "
+                "(per-layer all-gathers dominate)")
+    if dom == "memory":
+        if rec["shape"].startswith("decode") or rec["shape"] == "long_500k":
+            return "decode is weight/cache-bound: quantize KV, batch more"
+        return "raise microbatches / tighten remat to cut HBM traffic"
+    return "compute-bound: good — chase MFU via fusion/layout"
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(records, mesh="16x16"):
+    out = []
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "skipped": r["skipped"]})
+            continue
+        if "error" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "error": r["error"]})
+            continue
+        t = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s_analytic"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "mfu_bound": r["mfu_bound"],
+            "model_ratio": r["model_vs_counted"],
+            "mem_gib": r["memory_per_device"]["total_bytes"] / 2 ** 30,
+            "fits": r["fits_hbm_16g"],
+            "rx": _prescription(r),
+        })
+    return out
+
+
+def run(report):
+    if not os.path.exists(RESULTS):
+        report.row("roofline", note="dryrun.json missing — run "
+                   "python -m repro.launch.dryrun first")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        for row in rows(load(), mesh):
+            if "skipped" in row or "error" in row:
+                continue
+            report.row(f"roofline_{mesh}",
+                       arch=row["arch"], shape=row["shape"],
+                       compute_ms=round(row["compute_ms"], 2),
+                       memory_ms=round(row["memory_ms"], 2),
+                       collective_ms=round(row["collective_ms"], 2),
+                       dominant=row["dominant"],
+                       mfu_bound=round(row["mfu_bound"], 3),
+                       mem_gib=round(row["mem_gib"], 2))
+
+
+def markdown_table(records, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MFU bound | model/counted | mem GiB | fits 16G | fix |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for row in rows(records, mesh):
+        if "skipped" in row:
+            lines.append(f"| {row['arch']} | {row['shape']} | — | — | — | "
+                         f"skipped | — | — | — | — | {row['skipped'][:40]} |")
+            continue
+        if "error" in row:
+            lines.append(f"| {row['arch']} | {row['shape']} | ERROR: "
+                         f"{row['error'][:60]} |")
+            continue
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['compute_ms']:.2f} | "
+            f"{row['memory_ms']:.2f} | {row['collective_ms']:.2f} | "
+            f"{row['dominant']} | {row['mfu_bound']:.3f} | "
+            f"{row['model_ratio']:.2f} | {row['mem_gib']:.2f} | "
+            f"{'y' if row['fits'] else 'NO'} | {row['rx'][:46]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(markdown_table(recs, mesh))

@@ -1,0 +1,68 @@
+"""Paper Table 2 / Figure 1: 1D random distributions — FGC vs the original
+dense entropic (F)GW: runtime, speed-up ratio, ‖P_Fa − P‖_F."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import random_measure, timeit
+from repro.core import FGWConfig, GWConfig, entropic_fgw, entropic_gw
+from repro.core.grids import Grid1D
+
+NS = (128, 256, 512, 1024, 2048)
+GRAD_NS = (256, 512, 1024, 2048, 4096, 8192)
+
+
+def _solver(n, backend, metric):
+    # kernel-domain Sinkhorn (the paper's regime: the inner OT solve is a
+    # cheap matvec; the GW gradient dominates — that is FGC's target)
+    g = Grid1D(n, 1.0 / (n - 1), 1)
+    if metric == "gw":
+        cfg = GWConfig(eps=5e-2, outer_iters=10, sinkhorn_iters=30,
+                       backend=backend, sinkhorn_mode="kernel")
+        return jax.jit(functools.partial(entropic_gw, g, g, cfg=cfg))
+    cfg = FGWConfig(eps=5e-2, outer_iters=10, sinkhorn_iters=30,
+                    backend=backend, sinkhorn_mode="kernel", theta=0.5)
+    idx = jnp.arange(n, dtype=jnp.float64)
+    c = jnp.abs(idx[:, None] - idx[None, :]) / (n - 1)
+    return jax.jit(lambda mu, nu: entropic_fgw(g, g, c, mu, nu, cfg))
+
+
+def run(report):
+    for metric in ("gw", "fgw"):
+        rows = []
+        for n in NS:
+            mu = random_measure(n, 2 * n)
+            nu = random_measure(n, 2 * n + 1)
+            t_fgc, r_fgc = timeit(_solver(n, "blocked", metric), mu, nu)
+            t_dense, r_dense = timeit(_solver(n, "dense", metric), mu, nu)
+            diff = float(jnp.linalg.norm(r_fgc.plan - r_dense.plan))
+            rows.append((n, t_fgc, t_dense, t_dense / t_fgc, diff))
+            report.row(f"table2_{metric}", n=n, fgc_s=t_fgc, dense_s=t_dense,
+                       speedup=t_dense / t_fgc, plan_diff=diff)
+        report.slopes(f"table2_{metric}", NS,
+                      [r[1] for r in rows], [r[2] for r in rows])
+
+    # gradient-only (Fig. 1 story isolated): D_X Γ D_Y, cubic → quadratic
+    from benchmarks.common import timeit as _t
+    from repro.core.grids import gw_product, gw_product_dense
+    import numpy as _np
+    ts_f, ts_d, ns_d = [], [], []
+    for n in GRAD_NS:
+        g = Grid1D(n, 1.0 / (n - 1), 1)
+        gamma = jnp.asarray(_np.random.default_rng(n).random((n, n)))
+        t_f, _ = _t(jax.jit(lambda x, g=g: gw_product(g, g, x,
+                                                      backend="blocked")),
+                    gamma)
+        ts_f.append(t_f)
+        row = dict(n=n, fgc_s=t_f)
+        if n <= 2048:   # dense cubic gets slow fast
+            t_d, _ = _t(jax.jit(lambda x, g=g: gw_product_dense(g, g, x)),
+                        gamma)
+            ts_d.append(t_d)
+            ns_d.append(n)
+            row.update(dense_s=t_d, speedup=t_d / t_f)
+        report.row("fig1_gradient_only", **row)
+    report.slopes("fig1_gradient_only", ns_d, ts_f[:len(ns_d)], ts_d)

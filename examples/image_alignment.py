@@ -1,0 +1,55 @@
+"""Paper §4.4: 2D FGW image alignment with FGC — digit invariances
+(translation / rotation / reflection) and the deformed-shape task.
+
+Run:  PYTHONPATH=src python examples/image_alignment.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import synthetic_digit, synthetic_horse
+from repro.core import FGWConfig, entropic_fgw
+from repro.core.grids import Grid2D
+
+
+def align(img_a, img_b, n, theta, h=1.0):
+    mu = jnp.ravel(img_a); mu = mu / mu.sum()
+    nu = jnp.ravel(img_b); nu = nu / nu.sum()
+    c = jnp.abs(jnp.ravel(img_a)[:, None] - jnp.ravel(img_b)[None, :])
+    g = Grid2D(n, h, 1)                      # Manhattan pixel metric (k=1)
+    cfg = FGWConfig(eps=5e-1, outer_iters=8, sinkhorn_iters=100,
+                    backend="cumsum", sinkhorn_mode="log", theta=theta)
+    return entropic_fgw(g, g, c, mu, nu, cfg)
+
+
+def main():
+    n = 20
+    img = synthetic_digit(n)
+    a = np.asarray(img)
+    transforms = {"translation": np.roll(a, (2, 2), (0, 1)),
+                  "rotation": np.rot90(a).copy(),
+                  "reflection": a[:, ::-1].copy()}
+    print("digit invariances (paper §4.4.1, θ=0.1):")
+    vals = {}
+    for name, timg in transforms.items():
+        res = align(img, jnp.asarray(timg), n, theta=0.1)
+        vals[name] = float(res.value)
+        print(f"  {name:12s} FGW value = {vals[name]:.6f}")
+    spread = max(vals.values()) - min(vals.values())
+    print(f"  isometry-invariance spread = {spread:.2e} (should be ~0)\n")
+
+    print("deformed shape alignment (paper §4.4.2, θ=0.8):")
+    m = 24
+    res = align(synthetic_horse(m, 0.0), synthetic_horse(m, 1.0), m,
+                theta=0.8, h=100.0 / m)
+    plan = np.asarray(res.plan)
+    diag_mass = float(np.trace(plan)) / float(plan.sum())
+    print(f"  FGW value = {float(res.value):.4f}; "
+          f"mass on identity map = {diag_mass:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: entropic GW between two 1D distributions with the FGC fast
+gradient (paper §3), FGC-vs-dense parity check, and the 2D variant.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GWConfig, entropic_gw, gw_product, gw_product_dense)
+from repro.core.grids import Grid1D, Grid2D
+
+
+def main():
+    # two random distributions on a uniform 1D grid (paper §4.1)
+    n = 400
+    rng = np.random.default_rng(0)
+    mu = jnp.asarray(rng.random(n)); mu = mu / mu.sum()
+    nu = jnp.asarray(rng.random(n)); nu = nu / nu.sum()
+    grid = Grid1D(n, h=1.0 / (n - 1), k=1)
+
+    cfg = GWConfig(eps=2e-3, outer_iters=10, sinkhorn_iters=200,
+                   backend="scan")          # paper-faithful DP backend
+    res = entropic_gw(grid, grid, mu, nu, cfg)
+    print(f"GW²(μ, ν) = {float(res.value):.6f}")
+    print(f"plan marginal error = {float(res.marginal_err):.2e}")
+
+    # the paper's core claim: FGC == dense to machine precision
+    dense = entropic_gw(grid, grid, mu, nu,
+                        GWConfig(eps=2e-3, outer_iters=10,
+                                 sinkhorn_iters=200, backend="dense"))
+    diff = float(jnp.linalg.norm(res.plan - dense.plan))
+    print(f"‖P_FGC − P_dense‖_F = {diff:.2e}   (paper Table 2 column)")
+
+    # the O(N²) bottleneck product itself
+    gamma = mu[:, None] * nu[None, :]
+    fast = gw_product(grid, grid, gamma, backend="blocked")
+    ref = gw_product_dense(grid, grid, gamma)
+    print(f"D_X Γ D_Y max err = {float(jnp.max(jnp.abs(fast - ref))):.2e}")
+
+    # 2D grids (paper §3.1): Kronecker-binomial expansion
+    g2 = Grid2D(12, h=1.0 / 11, k=1)
+    mu2 = jnp.asarray(rng.random(144)); mu2 = mu2 / mu2.sum()
+    nu2 = jnp.asarray(rng.random(144)); nu2 = nu2 / nu2.sum()
+    res2 = entropic_gw(g2, g2, mu2, nu2,
+                       GWConfig(eps=4e-3, outer_iters=8,
+                                sinkhorn_iters=150, backend="cumsum"))
+    print(f"2D GW²  = {float(res2.value):.6f} "
+          f"(marginal err {float(res2.marginal_err):.1e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serving example: batched generation with prefill + KV-cache decode.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    cfg = dataclasses.replace(configs.get_smoke("smollm-360m"),
+                              dtype="float32")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(params, cfg, ServeConfig(max_len=128, batch_size=4,
+                                             temperature=0.0))
+    prompts = np.array([[1, 2, 3, 4, 5, 6, 7, 8]] * 4, np.int32)
+    out = engine.generate(prompts, max_new_tokens=16)
+    for i, row in enumerate(out):
+        print(f"request {i}: {row.tolist()}")
+    # greedy decode is deterministic: all 4 identical prompts must agree
+    assert (out == out[0]).all()
+    print("deterministic batched decode OK")
+
+
+if __name__ == "__main__":
+    main()

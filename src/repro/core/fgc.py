@@ -1,0 +1,199 @@
+"""Fast Gradient Computation (FGC) primitives — the paper's §3.
+
+Everything reduces to applying, along one tensor axis of length N,
+
+    (L x)_i  = Σ_{j<i} (i-j)^p x_j          L strictly-lower Toeplitz
+    (Lᵀ x)_i = Σ_{j>i} (j-i)^p x_j          = flip(L(flip(x)))
+    (D̃ x)   = L x + Lᵀ x                    D̃[i,j] = |i-j|^p  (0 diag for p≥1)
+
+in O(p²·N) element-wise work instead of the dense O(N²) matvec.
+
+Backends
+--------
+``scan``    paper-faithful DP recursion (eq. 3.9): the (p+1)-vector state
+            a_{i+1} = P a_i + x_i·1 with P the Pascal lower-triangular matrix,
+            run as a single `lax.scan` along the grid axis, vectorized over
+            every other axis (TPU: state rides the VPU lanes).
+``cumsum``  beyond-paper closed form: binomial expansion
+            (i-j)^p = Σ_s C(p,s) i^{p-s} (-j)^s  turns Lx into p+1 exclusive
+            cumulative sums — log-depth parallel prefix, no sequential loop.
+            Indices are centered (i → i−N/2) to halve monomial magnitudes.
+``dense``   explicit Toeplitz matmul (oracle; MXU path for small N).
+``pallas``  Pallas TPU kernel (see repro.kernels.fgc_scan), validated in
+            interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("scan", "cumsum", "blocked", "dense", "pallas")
+
+
+def pascal_matrix(p: int, dtype=jnp.float32):
+    """(p+1)×(p+1) lower-triangular binomial matrix P[r,s] = C(r,s)."""
+    m = [[math.comb(r, s) if s <= r else 0 for s in range(p + 1)]
+         for r in range(p + 1)]
+    return jnp.array(m, dtype=dtype)
+
+
+def lower_toeplitz(n: int, p: int, dtype=jnp.float64):
+    """Dense L with L[i,j] = (i-j)^p for i>j, else 0."""
+    idx = jnp.arange(n, dtype=dtype)
+    diff = idx[:, None] - idx[None, :]
+    return jnp.where(diff > 0, diff ** p, jnp.zeros((), dtype))
+
+
+# ---------------------------------------------------------------------------
+# axis canonicalization: move target axis to the front, flatten the rest.
+# ---------------------------------------------------------------------------
+
+def _to_front(x, axis):
+    axis = axis % x.ndim
+    x2 = jnp.moveaxis(x, axis, 0)
+    lead = x2.shape[0]
+    return x2.reshape(lead, -1), x2.shape, axis
+
+
+def _from_front(y, shape, axis):
+    return jnp.moveaxis(y.reshape(shape), 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# L-apply backends (operate on (N, B) arrays along axis 0)
+# ---------------------------------------------------------------------------
+
+def _apply_L_scan(x2, p: int):
+    """Paper eq. (3.9): a_{i+1} = P a_i + x_i·1,   y_i = a_i[p]."""
+    n, b = x2.shape
+    pasc = pascal_matrix(p, x2.dtype)
+
+    def step(a, x_i):
+        y_i = a[p]
+        a_next = pasc @ a + x_i[None, :]
+        return a_next, y_i
+
+    a0 = jnp.zeros((p + 1, b), x2.dtype)
+    _, ys = jax.lax.scan(step, a0, x2)
+    return ys
+
+
+def _apply_L_cumsum(x2, p: int):
+    """Binomial-expanded closed form via p+1 exclusive cumsums."""
+    n, b = x2.shape
+    # centered indices keep monomials small: (i-j)^p is shift-invariant.
+    t = (jnp.arange(n, dtype=x2.dtype) - jnp.asarray(n // 2, x2.dtype))
+    y = jnp.zeros_like(x2)
+    for s in range(p + 1):
+        c = math.comb(p, s) * ((-1.0) ** s)
+        ms = (t ** s)[:, None] * x2                       # j^s x_j
+        cs = jnp.cumsum(ms, axis=0)
+        excl = jnp.concatenate([jnp.zeros((1, b), x2.dtype), cs[:-1]], axis=0)
+        y = y + c * (t ** (p - s))[:, None] * excl
+    return y
+
+
+def _apply_L_dense(x2, p: int):
+    return lower_toeplitz(x2.shape[0], p, x2.dtype) @ x2
+
+
+def _apply_L_blocked(x2, p: int, block: int = 16):
+    """Blocked DP, GEMM-parallel form (beyond-paper; DESIGN.md §2).
+
+    Split rows into R-blocks. The paper's recursion only needs to cross
+    block boundaries through the (p+1) moment summaries, so the whole apply
+    factors into THREE batched matmuls + one tiny scan:
+
+        intra   = L_R · x_blk                 (batched GEMM, all blocks)
+        moments = T · x_blk                   (batched GEMM)
+        a_blk   = P_R · a_{blk−1} + moments   (scan of N/R steps on (p+1,B))
+        y       = intra + V · a_blk           (batched GEMM)
+
+    Sequential depth is N/R steps of O(p²·B) work; everything heavy is
+    MXU/BLAS-shaped. Arithmetic O(N·R·B) with R ≪ N — the knob trading
+    redundant intra-block work against sequential depth.
+    """
+    n, b = x2.shape
+    r = min(block, n)
+    pad = -n % r
+    xp = jnp.pad(x2, ((0, pad), (0, 0)))
+    nb = xp.shape[0] // r
+    dtype = x2.dtype
+    i = jnp.arange(r, dtype=dtype)
+    diff = i[:, None] - i[None, :]
+    l_r = jnp.where(diff > 0, diff ** p, jnp.zeros((), dtype))
+    v = jnp.stack([math.comb(p, s) * i ** (p - s) for s in range(p + 1)], 1)
+    p_r = jnp.array([[math.comb(rr, s) * float(r) ** (rr - s) if s <= rr
+                      else 0.0 for s in range(p + 1)]
+                     for rr in range(p + 1)], dtype)
+    t = jnp.stack([(r - i) ** rr for rr in range(p + 1)], 0)
+
+    xb = xp.reshape(nb, r, b)
+    intra = jnp.einsum("rs,nsb->nrb", l_r, xb)
+    moments = jnp.einsum("ps,nsb->npb", t, xb)
+
+    def step(a, mom):
+        return p_r @ a + mom, a          # emit the state at block START
+
+    _, a_pref = jax.lax.scan(step, jnp.zeros((p + 1, b), dtype), moments)
+    y = intra + jnp.einsum("rp,npb->nrb", v, a_pref)
+    return y.reshape(nb * r, b)[:n]
+
+
+def _apply_L_pallas(x2, p: int):
+    from repro.kernels import ops as kops
+    return kops.fgc_apply_l(x2, p)
+
+
+_L_BACKENDS = {
+    "scan": _apply_L_scan,
+    "cumsum": _apply_L_cumsum,
+    "blocked": _apply_L_blocked,
+    "dense": _apply_L_dense,
+    "pallas": _apply_L_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def apply_L(x, axis: int = 0, power: int = 1, backend: str = "cumsum"):
+    """y = L x along ``axis`` with L[i,j] = (i-j)^power, i>j."""
+    if power < 0:
+        raise ValueError("power must be >= 0")
+    x2, shape, axis = _to_front(x, axis)
+    y2 = _L_BACKENDS[backend](x2, power)
+    return _from_front(y2, shape, axis)
+
+
+def apply_LT(x, axis: int = 0, power: int = 1, backend: str = "cumsum"):
+    """y = Lᵀ x along ``axis`` — reversal identity (paper §3)."""
+    x2, shape, axis = _to_front(x, axis)
+    y2 = _L_BACKENDS[backend](x2[::-1], power)[::-1]
+    return _from_front(y2, shape, axis)
+
+
+def apply_abs_power(x, axis: int = 0, power: int = 1, backend: str = "cumsum"):
+    """y = D̃ x with D̃[i,j] = |i-j|^power (diagonal: 0^0 := 1 for power=0).
+
+    power=0 is the all-ones matrix J (paper §3.1 Kronecker expansion term).
+    """
+    if power == 0:
+        return jnp.sum(x, axis=axis, keepdims=True) * jnp.ones_like(x)
+    if backend == "dense":
+        x2, shape, axis = _to_front(x, axis)
+        n = x2.shape[0]
+        lo = lower_toeplitz(n, power, x2.dtype)
+        y2 = (lo + lo.T) @ x2
+        return _from_front(y2, shape, axis)
+    return (apply_L(x, axis, power, backend)
+            + apply_LT(x, axis, power, backend))
+
+
+def flops_estimate(n: int, p: int) -> int:
+    """Paper §3 cost: (N-1)·p(p+1)/2 muls + (N-1)(p+2)(p+1)/2 adds per L-apply."""
+    return (n - 1) * (p * (p + 1) // 2 + (p + 2) * (p + 1) // 2)

@@ -1,0 +1,1 @@
+from repro.distributed import sharding, fault_tolerance  # noqa: F401

@@ -1,0 +1,240 @@
+"""Divisibility-aware sharding rules: TP / EP / DP / ZeRO partition specs.
+
+The assigned archs are adversarial to naive TP (smollm has 15 heads,
+starcoder2 has 4 KV heads, mixtral 8 experts — none divide a 16-wide model
+axis).  Rather than pad, the rule engine lists *candidate* dims per param in
+priority order and picks the first one divisible by the mesh axis; anything
+that fails every candidate stays replicated (correct, and GSPMD still
+data-parallelizes its compute).  The same engine shards KV caches and SSM
+states for serving (sequence/head/state dims), and ZeRO-1 adds a `data`-axis
+shard to optimizer moments on the largest still-unsharded divisible dim.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name → candidate (dim, axis) list; dims count from the END of the
+# shape so the rules apply equally to scanned (stacked) and plain params.
+MODEL_AXIS_RULES: dict[str, list[int]] = {
+    # embeddings / head: shard vocab
+    "embed": [-2],
+    "head": [-1],
+    "in_proj": [-1],
+    # attention: shard heads (col-parallel) / first dim of wo (row-parallel)
+    "wq": [-2, -3],
+    "wk": [-2],
+    "wv": [-2],
+    "wo": [-2],
+    # MLA
+    "w_dkv": [-1],
+    "w_uk": [-2],
+    "w_uv": [-2],
+    "w_kr": [],
+    # dense MLP: col-parallel up/gate, row-parallel down
+    "w_gate": [-1],
+    "w_up": [-1],
+    "w_down": [-2],
+    # MoE: expert-parallel first, fall back to ff sharding
+    "router": [],
+    # ssm
+    "w_in": [-1],
+    "w_out": [-2],
+    "conv_w": [-1],
+    "conv_b": [-1],
+    "w_igate": [],
+    "w_fgate": [],
+    "b_fgate": [],
+    "r_gates": [-1],
+    "w_gates": [-1],
+    "b_gates": [-1],
+}
+
+# MoE expert tensors get the expert dim tried first (EP), then ff
+MOE_EXPERT_RULES = {
+    "w_gate": [-3, -1],
+    "w_up": [-3, -1],
+    "w_down": [-3, -2],
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            out.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            out.append(str(pp.idx))
+    return out
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_for(shape, candidates, mesh: Mesh, axis="model"):
+    size = _axis_size(mesh, axis)
+    spec = [None] * len(shape)
+    for dim in candidates:
+        d = dim % len(shape) if dim < 0 else dim
+        if d < len(shape) and shape[d] % size == 0 and shape[d] > 0:
+            spec[d] = axis
+            return P(*spec)
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, strategy: str = "2d"):
+    """PartitionSpec pytree for a model param tree.
+
+    strategy:
+      "2d"    — TP/EP over `model` (default framework baseline).
+      "dp"    — fully replicated params (pure data parallel + ZeRO moments);
+                wins for small models where per-layer TP collectives dwarf
+                per-shard compute (see EXPERIMENTS.md §Perf smollm).
+      "fsdp"  — params sharded over `data` on their largest divisible dim
+                (GSPMD inserts the per-layer all-gathers); no TP.
+      "2d_fsdp" — TP over `model` + largest remaining dim over `data`.
+    """
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if strategy == "dp":
+            # vocab stays model-sharded even under pure DP: otherwise the
+            # (B,S,V) logits materialize unsharded per device and GSPMD
+            # invents pathological embedding-grad reshards (measured —
+            # see EXPERIMENTS.md §Perf P1).
+            if name in ("embed", "head"):
+                return _spec_for(leaf.shape, MODEL_AXIS_RULES[name], mesh)
+            return P(*([None] * leaf.ndim))
+        if name in ("scale", "bias", "a_log", "dt_bias", "d_skip"):
+            return P(*([None] * leaf.ndim))
+        if strategy == "fsdp":
+            spec = P(*([None] * leaf.ndim))
+            return _add_largest_dim(leaf, spec, mesh, "data")
+        if strategy == "fsdp_all":
+            # ZeRO-3 over the WHOLE chip pool: no TP activation traffic;
+            # per-layer param all-gathers ride both mesh axes.
+            spec = P(*([None] * leaf.ndim))
+            return _add_largest_dim(leaf, spec, mesh,
+                                    tuple(a for a in mesh.axis_names))
+        under_moe = "moe" in names
+        if under_moe and name in MOE_EXPERT_RULES:
+            cands = MOE_EXPERT_RULES[name]
+        else:
+            cands = MODEL_AXIS_RULES.get(name, [-1, -2])
+        spec = _spec_for(leaf.shape, cands, mesh)
+        if strategy == "2d_fsdp":
+            spec = _add_largest_dim(leaf, spec, mesh, "data")
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def _add_largest_dim(leaf, spec: P, mesh: Mesh, axis):
+    size = _axis_size(mesh, axis)
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    used = set()
+    for e in entries:
+        if isinstance(e, tuple):
+            used.update(e)
+        elif e is not None:
+            used.add(e)
+    new_axes = set(axis) if isinstance(axis, tuple) else {axis}
+    if used & new_axes:
+        return P(*entries)
+    best, best_dim = 0, None
+    for d in range(leaf.ndim):
+        if entries[d] is None and leaf.shape[d] % size == 0 \
+                and leaf.shape[d] > best:
+            best, best_dim = leaf.shape[d], d
+    if best_dim is not None and best >= size:
+        entries[best_dim] = axis
+    return P(*entries)
+
+
+def zero_specs(params, pspecs, mesh: Mesh, axis="data"):
+    """ZeRO-1: optimizer moments inherit the param spec + shard the largest
+    still-unsharded divisible dim over the data axis."""
+    size = _axis_size(mesh, axis)
+
+    def add_axis(leaf, spec: P):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for e in entries:
+            if isinstance(e, tuple):
+                used.update(e)
+            elif e is not None:
+                used.add(e)
+        if axis in used:
+            return P(*entries)
+        best, best_dim = 0, None
+        for d in range(leaf.ndim):
+            if entries[d] is None and leaf.shape[d] % size == 0 \
+                    and leaf.shape[d] > best:
+                best, best_dim = leaf.shape[d], d
+        if best_dim is not None and best >= size:
+            entries[best_dim] = axis
+        return P(*entries)
+
+    return jax.tree.map(add_axis, params, pspecs)
+
+
+def cache_specs(caches, mesh: Mesh, data_axes=("data",)):
+    """KV caches / SSM states: shard batch over data axes when divisible,
+    else the longest divisible trailing dim over `model` (sequence/state
+    parallelism for batch-1 long-context decode)."""
+    batch_size = _axis_size(mesh, tuple(data_axes))
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "length":
+            return P()
+        spec = [None] * leaf.ndim
+        start = 0
+        # stacked caches have a leading repeats dim — skip it
+        if "body" in names and leaf.ndim >= 2:
+            start = 1
+        if leaf.ndim > start and leaf.shape[start] % batch_size == 0 \
+                and leaf.shape[start] >= batch_size:
+            spec[start] = (data_axes if len(data_axes) > 1
+                           else data_axes[0])
+        # model axis on the best remaining dim
+        msize = _axis_size(mesh, "model")
+        best, best_dim = 0, None
+        for d in range(start + 1, leaf.ndim):
+            if leaf.shape[d] % msize == 0 and leaf.shape[d] > best:
+                best, best_dim = leaf.shape[d], d
+        if best_dim is not None and best >= msize:
+            spec[best_dim] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def batch_specs(batch, mesh: Mesh, data_axes=("data",)):
+    """Input batches: shard the leading (batch) dim over data axes."""
+    size = _axis_size(mesh, tuple(data_axes))
+    axis = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def leaf_spec(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim and leaf.shape[0] % size == 0 and leaf.shape[0] >= size:
+            spec[0] = axis
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, batch)
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

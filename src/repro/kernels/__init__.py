@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  fgc_scan      — blocked-DP FGC L-apply (the paper's §3 recursion on the MXU)
+  sinkhorn_step — fused flash-style log-domain Sinkhorn half-step
+  ops           — jit'd wrappers (interpret mode off-TPU)
+  ref           — pure-jnp oracles
+"""
+from repro.kernels import ops, ref  # noqa: F401

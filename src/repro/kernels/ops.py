@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU the kernels compile natively; everywhere else they run in
+interpret mode (Python execution of the kernel body) for bit-level
+validation, per the repo's CPU-container policy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fgc_scan, sinkhorn_step
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fgc_apply_l(x, p: int = 1, block_rows: int | None = None):
+    """y = L x along axis 0 of an (N, B) array (Pallas backend for core.fgc)."""
+    interpret = not _on_tpu()
+    br = block_rows or fgc_scan.BLOCK_ROWS
+    # Pallas TPU has no f64; interpret mode handles any dtype.
+    if not interpret and x.dtype == jnp.float64:
+        x = x.astype(jnp.float32)
+    return fgc_scan.fgc_apply_l_pallas(x, p=p, block_rows=br,
+                                       interpret=interpret)
+
+
+def sinkhorn_row_update(cost, g, log_mu, eps: float):
+    """Fused log-domain Sinkhorn row half-step (see sinkhorn_step.py)."""
+    return sinkhorn_step.sinkhorn_row_update_pallas(
+        cost, g, log_mu, eps, interpret=not _on_tpu())
+
+
+def sinkhorn_col_update(cost, f, log_nu, eps: float):
+    """Column half-step = row half-step on Cᵀ."""
+    return sinkhorn_step.sinkhorn_row_update_pallas(
+        cost.T, f, log_nu, eps, interpret=not _on_tpu())

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from repro.core import fgc
+
+
+def fgc_apply_l_ref(x, p: int = 1):
+    """Dense-Toeplitz oracle for the blocked FGC kernel: y = L x, (N,B)."""
+    return fgc.lower_toeplitz(x.shape[0], p, x.dtype) @ x
+
+
+def sinkhorn_row_update_ref(cost, g, log_mu, eps: float):
+    """f = ε(log μ − logsumexp((g − C)/ε, axis=1))."""
+    return eps * (log_mu - logsumexp((g[None, :] - cost) / eps, axis=1))

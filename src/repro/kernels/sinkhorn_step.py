@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused log-domain Sinkhorn half-step (flash-style).
+
+One mirror-descent inner iteration needs
+    f_i = ε·(log μ_i − logsumexp_p (g_p − C_ip)/ε)
+which, done naively, materializes (g − C)/ε and two more (M,N) temporaries.
+This kernel streams C through VMEM in (BM×BN) tiles with an online
+(max, sumexp) reduction — one pass over C, no (M,N) temporaries, numerically
+identical to jax.scipy logsumexp (max-shifted).
+
+Grid: (row-blocks × col-blocks), columns innermost/sequential; running
+per-row max m and sum s live in VMEM scratch; f is written on the last
+column step.  The column update is the same kernel applied to Cᵀ.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM = 128
+BN = 128
+
+
+def _sinkhorn_kernel(cost_ref, g_ref, logmu_ref, f_ref, m_ref, s_ref, *,
+                     eps: float, n_col_blocks: int):
+    col = pl.program_id(1)
+
+    @pl.when(col == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    z = (g_ref[...][None, :] - cost_ref[...]) * (1.0 / eps)   # (BM, BN)
+    m_old = m_ref[...][:, 0]                                   # (BM,)
+    m_blk = jnp.max(z, axis=1)
+    m_new = jnp.maximum(m_old, m_blk)
+    # guard exp(-inf - -inf): where m_new is -inf the sum stays 0
+    scale = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
+    s_new = (s_ref[...][:, 0] * scale
+             + jnp.sum(jnp.exp(z - m_new[:, None]), axis=1))
+    m_ref[...] = m_new[:, None]
+    s_ref[...] = s_new[:, None]
+
+    @pl.when(col == n_col_blocks - 1)
+    def _finish():
+        lse = m_ref[...][:, 0] + jnp.log(s_ref[...][:, 0])
+        f_ref[...] = eps * (logmu_ref[...] - lse)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def sinkhorn_row_update_pallas(cost, g, log_mu, eps: float,
+                               interpret: bool = True):
+    """f = ε(log μ − LSE_p((g_p − C_ip)/ε)) for (M,N) cost; fused single pass."""
+    m, n = cost.shape
+    dtype = cost.dtype
+    mp, np_ = -m % BM, -n % BN
+    # pad columns with +inf cost => exp((g - inf)/eps) = 0: no contribution
+    costp = jnp.pad(cost, ((0, mp), (0, np_)), constant_values=jnp.inf)
+    gp = jnp.pad(g, (0, np_))
+    logmup = jnp.pad(log_mu, (0, mp))
+    grid = (costp.shape[0] // BM, costp.shape[1] // BN)
+
+    f = pl.pallas_call(
+        functools.partial(_sinkhorn_kernel, eps=eps, n_col_blocks=grid[1]),
+        out_shape=jax.ShapeDtypeStruct((costp.shape[0],), dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BN), lambda r, c: (r, c)),
+            pl.BlockSpec((BN,), lambda r, c: (c,)),
+            pl.BlockSpec((BM,), lambda r, c: (r,)),
+        ],
+        out_specs=pl.BlockSpec((BM,), lambda r, c: (r,)),
+        scratch_shapes=[pltpu.VMEM((BM, 1), dtype),
+                        pltpu.VMEM((BM, 1), dtype)],
+        interpret=interpret,
+    )(costp, gp, logmup)
+    return f[:m]

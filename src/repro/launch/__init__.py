@@ -1,0 +1,6 @@
+"""Launch layer: mesh factory, input specs, multi-pod dry-run, train driver.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS at import time by design (dry-run entry point only).
+"""
+from repro.launch import mesh, specs  # noqa: F401

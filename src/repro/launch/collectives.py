@@ -1,0 +1,116 @@
+"""Parse collective ops + wire bytes out of compiled (post-SPMD) HLO text.
+
+``cost_analysis`` has no collective entry, so we scan the HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, take their result-shape bytes as payload, and apply ring-transfer wire
+factors.  Ops inside while-loop bodies (the layer-stack scans) are
+multiplied by the loop trip count supplied by the caller (the scan length
+is ours — we know R exactly; XLA's HLO text only shows the body once).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# wire-byte multiplier per payload byte (ring algorithms, (n-1)/n ≈ 1)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*\(?\s*(\w+)\[([\d,]*)\][^)]*\)?\s*("
+    + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+_SECTION_RE = re.compile(r"^(%[\w\.\-]+|ENTRY\s+%?[\w\.\-]+)\s*\(.*\{\s*$")
+_BODY_REF_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse(hlo_text: str, while_body_mult: int = 1,
+          loop_mults: tuple = ()):
+    """Returns dict with per-collective payload bytes, wire bytes, counts.
+
+    Loop attribution: while-body computations are assigned a NESTING DEPTH
+    by walking ``body=%name`` references from ENTRY; the multiplier for a
+    collective at depth d is prod(loop_mults[:d]).  ``loop_mults`` is the
+    caller's trip-count list outermost-first — e.g. (microbatches, repeats)
+    for a grad-accumulation loop wrapping the layer-stack scan, or
+    (repeats,) when microbatches == 1.  ``while_body_mult`` is the legacy
+    single-level fallback used when loop_mults is empty.
+    """
+    if not loop_mults:
+        loop_mults = (while_body_mult,)
+    # map section name -> (ops, child body names)
+    sections = defaultdict(lambda: {"ops": [], "children": set()})
+    current = "ENTRY"
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        msec = _SECTION_RE.match(stripped) if stripped.endswith("{") else None
+        if msec:
+            raw = msec.group(1)
+            if raw.startswith("ENTRY"):
+                current = "ENTRY"       # canonical key, whatever its name
+            else:
+                current = raw.lstrip("%").strip()
+        for m in _BODY_REF_RE.finditer(line):
+            sections[current]["children"].add(m.group(1))
+        mop = _OP_RE.search(line)
+        if mop and mop.group(4) != "-done":   # count -start once, skip -done
+            dtype, dims, kind = mop.group(1), mop.group(2), mop.group(3)
+            sections[current]["ops"].append((kind,
+                                             _shape_bytes(dtype, dims)))
+
+    # BFS depth assignment from ENTRY through body references
+    depth = {"ENTRY": 0}
+    frontier = ["ENTRY"]
+    while frontier:
+        nxt = []
+        for sec in frontier:
+            for child in sections[sec]["children"]:
+                # match by prefix: HLO may suffix-rename (body.7.clone)
+                for name in sections:
+                    if name == child or name.startswith(child):
+                        if name not in depth:
+                            depth[name] = depth[sec] + 1
+                            nxt.append(name)
+        frontier = nxt
+
+    def mult_for(d):
+        m = 1
+        for t in loop_mults[:d]:
+            m *= t
+        return m
+
+    out = {"counts": defaultdict(int), "payload_bytes": 0.0,
+           "wire_bytes": 0.0, "in_loop_payload_bytes": 0.0}
+    for sec, info in sections.items():
+        mult = mult_for(depth.get(sec, 1))
+        # XLA loop pipelining sinks one-shot collectives into "wide"/".sunk"
+        # loop bodies, distributing a fixed volume across iterations —
+        # amplifying those by trip count would overcount a volume-preserving
+        # transform. Count them once.
+        if ".sunk" in sec:
+            mult = 1
+        for kind, nbytes in info["ops"]:
+            out["counts"][kind] += mult
+            out["payload_bytes"] += mult * nbytes
+            out["wire_bytes"] += mult * nbytes * _WIRE_FACTOR[kind]
+            if mult > 1:
+                out["in_loop_payload_bytes"] += mult * nbytes
+    out["counts"] = dict(out["counts"])
+    return out

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the multi-pod dry-run needs 512 host devices.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.distributed import sharding
+from repro.launch import collectives as coll
+from repro.launch import flops as flopcount
+from repro.launch import specs as spec_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train import loop as train_loop
+
+# v5e-like roofline constants (see DESIGN.md §6)
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, strategy: str = "2d",
+               microbatches: int = 1, compress: bool = False,
+               remat: bool = True, gather_params: bool = False):
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings, cfg)."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    data_axes = sharding.data_axes_of(mesh)
+    specs = spec_mod.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.train import optimizer as _optim
+        tcfg = train_loop.TrainConfig(
+            microbatches=microbatches, remat=remat,
+            gather_params=gather_params,
+            optimizer=_optim.OptimizerConfig(compress_grads=compress))
+        state = jax.eval_shape(
+            lambda: train_loop.init_state(jax.random.PRNGKey(0), cfg, tcfg))
+        batch = specs["batch"]
+        pspec = sharding.param_specs(state["params"], mesh, strategy)
+        mspec = sharding.zero_specs(state["opt"]["m"], pspec, mesh)
+        opt_spec = {"m": mspec, "v": mspec, "step": P()}
+        if compress:
+            opt_spec["ef"] = mspec
+        state_spec = {"params": pspec, "opt": opt_spec, "step": P()}
+        bspec = sharding.batch_specs(batch, mesh, data_axes)
+        metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P(),
+                        "ce": P(), "aux": P()}
+
+        def step_fn(state, batch):
+            return train_loop.train_step(state, batch, cfg, tcfg)
+
+        return (step_fn, (state, batch),
+                (_named(mesh, state_spec), _named(mesh, bspec)),
+                (_named(mesh, state_spec), _named(mesh, metrics_spec)),
+                cfg, shape)
+
+    params, batch, caches = specs["params"], specs["batch"], specs["caches"]
+    pspec = sharding.param_specs(params, mesh, strategy)
+    bspec = sharding.batch_specs(batch, mesh, data_axes)
+    cspec = sharding.cache_specs(caches, mesh, data_axes)
+    logits_spec = sharding.batch_specs(
+        jax.ShapeDtypeStruct((shape.global_batch, cfg.vocab_size),
+                             jnp.float32), mesh, data_axes)
+
+    if shape.kind == "prefill":
+        def step_fn(params, batch, caches):
+            return lm.prefill(params, batch, cfg, caches)
+    else:
+        def step_fn(params, batch, caches):
+            return lm.decode_step(params, batch, caches, cfg)
+
+    return (step_fn, (params, batch, caches),
+            (_named(mesh, pspec), _named(mesh, bspec), _named(mesh, cspec)),
+            (_named(mesh, logits_spec), _named(mesh, cspec)),
+            cfg, shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             count_flops: bool = True, verbose: bool = True,
+             strategy: str = "2d", microbatches: int = 1,
+             compress: bool = False, remat: bool = True,
+             gather_params: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = configs.applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+           "strategy": strategy, "microbatches": microbatches,
+           "compress": compress}
+    if not ok:
+        rec["skipped"] = why
+        return rec
+
+    t0 = time.time()
+    step_fn, args, in_sh, out_sh, cfg, shape = build_cell(
+        arch, shape_name, mesh, strategy, microbatches, compress, remat,
+        gather_params)
+
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["memory_per_device"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "total_bytes": (mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        + mem.output_size_in_bytes),
+    }
+    rec["fits_hbm_16g"] = rec["memory_per_device"]["total_bytes"] < 16e9
+    rec["hlo_cost"] = {"flops_per_device": cost.get("flops", 0.0),
+                       "bytes_per_device": cost.get("bytes accessed", 0.0),
+                       "transcendentals": cost.get("transcendentals", 0.0)}
+
+    # loop-corrected analytic accounting (global)
+    if count_flops:
+        with mesh:
+            counted = flopcount.count_fn(step_fn, *args)
+        rec["analytic"] = {"flops_global": counted["flops"],
+                           "bytes_global": counted["bytes"]}
+    else:
+        rec["analytic"] = {"flops_global": 0, "bytes_global": 0}
+
+    params_tree = (args[0]["params"] if shape.kind == "train" else args[0])
+    total_p, active_p = flopcount.param_counts(params_tree, cfg)
+    n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    mf = flopcount.model_flops(cfg, n_tokens, shape.kind == "train",
+                               total_p, active_p)
+    rec["params_total"] = total_p
+    rec["params_active"] = active_p
+    rec["model_flops"] = mf
+
+    # collectives: loop trip counts outermost-first (grad-accumulation
+    # loop wraps the layer-stack scan; for inference only the layer scan)
+    if shape.kind == "train" and microbatches > 1:
+        mults = (microbatches, cfg.repeats)
+    else:
+        mults = (cfg.repeats,)
+    cparsed = coll.parse(hlo, loop_mults=mults)
+    rec["collectives"] = {"counts": cparsed["counts"],
+                          "payload_bytes_per_device":
+                              cparsed["payload_bytes"],
+                          "wire_bytes_per_device": cparsed["wire_bytes"]}
+
+    # roofline terms (seconds)
+    fl = rec["analytic"]["flops_global"] or (
+        rec["hlo_cost"]["flops_per_device"] * chips)
+    by = rec["analytic"]["bytes_global"]
+    t_comp = fl / (chips * PEAK_FLOPS)
+    t_mem_hlo = rec["hlo_cost"]["bytes_per_device"] / HBM_BW
+    t_mem_analytic = by / (chips * HBM_BW)
+    t_coll = cparsed["wire_bytes"] / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s_analytic": t_mem_analytic,
+             "memory_s_hlo": t_mem_hlo, "collective_s": t_coll}
+    t_mem = t_mem_analytic
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    rec["roofline"] = terms
+    rec["dominant"] = dominant
+    rec["mfu_bound"] = (t_comp / max(t_comp, t_mem, t_coll)
+                        if max(t_comp, t_mem, t_coll) > 0 else 0.0)
+    rec["model_vs_counted"] = mf / fl if fl else 0.0
+
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} × {shape_name}: "
+              f"compile={t_compile:.1f}s mem/dev="
+              f"{rec['memory_per_device']['total_bytes']/2**30:.2f}GiB "
+              f"dom={dominant} "
+              f"terms(ms)=({t_comp*1e3:.2f},{t_mem*1e3:.2f},"
+              f"{t_coll*1e3:.2f}) mfu_bound={rec['mfu_bound']:.2f}",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-flops", action="store_true")
+    ap.add_argument("--strategy", default="2d",
+                    choices=["2d", "dp", "fsdp", "2d_fsdp", "fsdp_all"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--gather-params", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = []
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape, mesh_name) in done:
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi,
+                                   count_flops=not args.no_flops,
+                                   strategy=args.strategy,
+                                   microbatches=args.microbatches,
+                                   compress=args.compress,
+                                   remat=not args.no_remat,
+                                   gather_params=args.gather_params)
+                except Exception as e:  # a failing cell is a bug — record it
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[{mesh_name}] {arch} × {shape}: FAILED {e}",
+                          flush=True)
+                records.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_err = sum(1 for r in records if "error" in r)
+    n_skip = sum(1 for r in records if "skipped" in r)
+    print(f"\ndry-run complete: {len(records)} cells, {n_skip} skipped, "
+          f"{n_err} errors → {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract input batch for a (cfg, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            batch = {"tokens": _sds((b, 1), jnp.int32)}
+        else:
+            batch = {"embeddings": _sds((b, 1, cfg.d_model), jnp.bfloat16)}
+        return batch
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    else:
+        batch = {"embeddings": _sds((b, s, cfg.d_model), jnp.bfloat16)}
+        if cfg.m_rope:
+            batch["positions"] = _sds((b, s, 3), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: lm.cache_init(cfg, batch, max_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Everything the step function for this cell takes, as abstract values.
+
+    train  → (state, batch)        state = params + AdamW moments
+    prefill→ (params, batch, caches)
+    decode → (params, batch, caches)   batch is the 1-token feed
+    """
+    from repro.train import loop as train_loop
+
+    if shape.kind == "train":
+        tcfg = train_loop.TrainConfig()
+        state = jax.eval_shape(
+            lambda: train_loop.init_state(jax.random.PRNGKey(0), cfg, tcfg))
+        return {"state": state, "batch": batch_specs_for(cfg, shape)}
+    params = abstract_params(cfg)
+    caches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+    return {"params": params, "batch": batch_specs_for(cfg, shape),
+            "caches": caches}

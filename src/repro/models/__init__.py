@@ -1,0 +1,6 @@
+"""Model zoo: dense GQA / MoE / MLA / xLSTM / Mamba2 / hybrid LM backbones."""
+from repro.models.common import ModelConfig
+from repro.models import lm, blocks, attention, mlp, ssm, common  # noqa: F401
+
+__all__ = ["ModelConfig", "lm", "blocks", "attention", "mlp", "ssm",
+           "common"]

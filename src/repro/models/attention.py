@@ -1,0 +1,323 @@
+"""Attention layers: GQA with chunked (flash-style) softmax, sliding-window
+masking, M-RoPE, and DeepSeek-style MLA with a compressed-latent KV cache.
+
+Memory discipline: the (S,S) score matrix is never materialized for long
+sequences — `chunked_attention` streams KV blocks with an online softmax
+(running max / denominator), exactly the flash recurrence, expressed in pure
+JAX so XLA:TPU schedules it; the Pallas flash kernel is an optional follow-up
+(the paper's kernel budget went to FGC, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, apply_m_rope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (flash recurrence in JAX)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_offset: int = 0,
+                      q_chunk: int = 1024, k_chunk: int = 1024):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,KV,hd) — returns (B,Sq,H,hd).
+
+    GQA: H % KV == 0; K/V heads are repeated group-wise.
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    Static python loop over q chunks; inner `lax.scan` over only the KV
+    chunks a q chunk can see (causal/window pruning is *structural*, so the
+    HLO contains no wasted matmuls — see EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    hdv = v.shape[-1]          # may differ from hd (MLA: qk≠v head dims)
+    rep = h // kv
+    scale = hd ** -0.5
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    n_q = math.ceil(sq / qc)
+    n_k = math.ceil(sk / kc)
+    # pad to chunk multiples; GQA stays GROUPED (no jnp.repeat of K/V —
+    # repeating would materialize rep× the KV bytes; the grouped einsum
+    # broadcasts instead).
+    q = jnp.pad(q, ((0, 0), (0, n_q * qc - sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, n_k * kc - sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, n_k * kc - sk), (0, 0), (0, 0)))
+    qg = q.reshape(b, n_q * qc, kv, rep, hd)
+    kg = k.reshape(b, n_k, kc, kv, hd)
+    vg = v.reshape(b, n_k, kc, kv, hdv)
+
+    outs = []
+    for qi in range(n_q):
+        qblk = qg[:, qi * qc:(qi + 1) * qc]             # (B,qc,KV,rep,hd)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+        # visible kv-chunk range for this q chunk (structural pruning)
+        hi = n_k if not causal else min(
+            n_k, math.ceil((q_offset + (qi + 1) * qc) / kc))
+        lo = 0 if window is None else max(
+            0, (q_offset + qi * qc - window) // kc)
+        hi = max(hi, lo + 1)
+        k_vis = kg[:, lo:hi]
+        v_vis = vg[:, lo:hi]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kci = inp                       # (B,kc,KV,hd)
+            k_pos = kci * kc + jnp.arange(kc)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] <= window
+            mask &= (k_pos < sk)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((b, kv, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, rep, qc, hdv), jnp.float32)
+        kci = jnp.arange(lo, hi)
+        # checkpoint the flash step: without it, autodiff saves the (qc,kc)
+        # probability tile per kv chunk — O(S²) residuals, exactly what the
+        # online-softmax formulation exists to avoid. With it, backward
+        # recomputes the tile from q/k (the flash backward).
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (k_vis.swapaxes(0, 1), v_vis.swapaxes(0, 1), kci))
+        out = acc / jnp.maximum(l[..., None], 1e-30)    # (B,KV,rep,qc,hdv)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, hdv)
+        outs.append(out.astype(q.dtype))
+    out = jnp.concatenate(outs, axis=1)[:, :sq]
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, n_valid):
+    """Single-token decode: q (B,1,H,hd), caches (B,Smax,KV,hd).
+
+    ``n_valid``: number of valid cache slots (ring-buffer semantics for
+    sliding-window caches: slot order ≠ position order is fine — softmax is
+    permutation-invariant and only past tokens ever live in the cache).
+    GQA grouped einsum: no rep-fold materialization of the cache.
+    """
+    b, _, h, hd = q.shape
+    _, smax, kv, _ = k_cache.shape
+    rep = h // kv
+    qg = q.reshape(b, 1, kv, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(smax)[None, :] < n_valid
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bgrqd", p, v_cache.astype(p.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": common.dense_init(ks[0], (d, h, hd), pd),
+        "wk": common.dense_init(ks[1], (d, kv, hd), pd),
+        "wv": common.dense_init(ks[2], (d, kv, hd), pd),
+        "wo": common.dense_init(ks[3], (h * hd, d), pd),
+    }
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    if cfg.m_rope:
+        hd = q.shape[-1]
+        pairs = hd // 2
+        t = pairs - 2 * (pairs // 3)
+        sections = (t, pairs // 3, pairs // 3)
+        q = apply_m_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_m_rope(k, positions, cfg.rope_theta, sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def gqa_apply(params, x, positions, cfg: ModelConfig, *, cache=None,
+              q_offset: int = 0):
+    """x: (B,S,d). cache: None (train/prefill w/o cache) or dict for decode.
+
+    Returns (out, new_cache): new_cache is populated KV when cache given or
+    when prefill requested via cache={"k":...} pre-allocated buffers.
+    """
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q, k = _rope_qk(q, k, positions, cfg)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=True,
+                                window=cfg.sliding_window,
+                                q_offset=q_offset)
+        new_cache = None
+    elif s == 1:  # decode — ring buffer when the cache is window-clamped
+        length = cache["length"]
+        cache_len = cache["k"].shape[1]
+        slot = length % cache_len
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        n_valid = jnp.minimum(length + 1, cache_len)
+        out = decode_attention(q, k_cache.astype(dt), v_cache.astype(dt),
+                               n_valid)
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+    else:  # prefill into cache (keep only the last cache_len positions,
+           # placed at their ring slots so later decode writes line up)
+        out = chunked_attention(q, k, v, causal=True,
+                                window=cfg.sliding_window)
+        cache_len = cache["k"].shape[1]
+        if s >= cache_len:
+            keep_k = k[:, -cache_len:]
+            keep_v = v[:, -cache_len:]
+            shift = s % cache_len  # position p lands at slot p % cache_len
+            k_cache = jnp.roll(keep_k, shift, axis=1).astype(
+                cache["k"].dtype)
+            v_cache = jnp.roll(keep_v, shift, axis=1).astype(
+                cache["v"].dtype)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "length": jnp.asarray(s, jnp.int32)}
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window + 1)
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.hd), dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV latent + decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, \
+        cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": common.dense_init(ks[0], (d, h, dn + dr), pd),
+        "w_dkv": common.dense_init(ks[1], (d, r), pd),
+        "kv_norm": {"scale": jnp.ones((r,), pd)},
+        "w_uk": common.dense_init(ks[2], (r, h, dn), pd),
+        "w_uv": common.dense_init(ks[3], (r, h, dv), pd),
+        "w_kr": common.dense_init(ks[4], (d, dr), pd),
+        "wo": common.dense_init(ks[5], (h * dv, d), pd),
+    }
+
+
+def mla_apply(params, x, positions, cfg: ModelConfig, *, cache=None,
+              q_offset: int = 0):
+    """MLA attention. Cache stores the r-dim latent + rope key only —
+    the arch's memory win (r=512 ≪ 2·H·hd) is preserved end-to-end."""
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    c_kv = _rms(params["kv_norm"]["scale"], c_kv)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_kr"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+
+    if cache is None or s > 1:
+        # train/prefill: expand latent to per-head K/V, run chunked attention
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(dt))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, dr))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(q_full, k_full, v, causal=True,
+                                q_offset=q_offset)
+        new_cache = None
+        if cache is not None:  # prefill
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+            kr_ = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0,
+                axis=1)
+            new_cache = {"c_kv": ck, "k_rope": kr_,
+                         "length": jnp.asarray(s, jnp.int32)}
+    else:
+        # decode with weight absorption: score = q_nopeᵀW_uk c + q_rope·k_rope
+        length = cache["length"]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), length, axis=1)
+        kr_ = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), length,
+            axis=1)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope,
+                           params["w_uk"].astype(dt))      # absorb W_uk
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ck.astype(dt))
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_.astype(dt))
+        scores = (s_lat + s_rope) * (dn + dr) ** -0.5
+        pos = jnp.arange(ck.shape[1])
+        mask = pos[None, :] <= length
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        acc_t = jnp.promote_types(dt, jnp.float32)
+        p = jax.nn.softmax(scores.astype(acc_t), -1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, ck.astype(dt))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat,
+                         params["w_uv"].astype(dt))        # absorb W_uv
+        new_cache = {"c_kv": ck, "k_rope": kr_, "length": length + 1}
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def _rms(scale, x, eps: float = 1e-5):
+    """MLA's latent norm is always RMS regardless of the model's main norm."""
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "length": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,194 @@
+"""Layer-stack machinery: block templates, param stacking, scan-over-blocks.
+
+A model is ``prologue + template × repeats`` of *layer kinds*.  Template
+params are stacked over repeats and the stack runs as one `lax.scan`
+(HLO size independent of depth — essential for 512-device compile times),
+with `lax.switch`-free bodies: the template is unrolled *inside* the scan
+body (≤ 8 slots), so heterogeneous stacks (xLSTM 7:1, Zamba2 mamba+shared-
+attn) still scan.  Slots listed in ``cfg.shared_slots`` share one param copy
+across repeats (Zamba2's shared attention) — passed by closure, not scanned.
+Caches are always per-occurrence (stacked over repeats) even for shared
+slots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, ssm
+from repro.models.common import ModelConfig, apply_norm, norm_params
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply / cache per kind
+# ---------------------------------------------------------------------------
+
+def layer_init(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn_mlp", "shared_attn"):
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attention.gqa_init(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "mlp": mlp.mlp_init(ks[1], cfg)}
+    if kind == "attn_moe":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attention.gqa_init(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "moe": mlp.moe_init(ks[1], cfg)}
+    if kind == "mla_mlp":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attention.mla_init(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "mlp": mlp.mlp_init(ks[1], cfg)}
+    if kind == "mla_moe":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attention.mla_init(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "moe": mlp.moe_init(ks[1], cfg)}
+    if kind == "mlstm":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "mix": ssm.mlstm_init(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "mix": ssm.slstm_init(ks[0], cfg)}
+    if kind == "mamba":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "mix": ssm.mamba2_init(ks[0], cfg)}
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def layer_apply(kind: str, params, x, positions, cfg: ModelConfig,
+                cache=None, q_offset=0):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe", "shared_attn"):
+        attn_fn = (attention.mla_apply if kind.startswith("mla")
+                   else attention.gqa_apply)
+        h = apply_norm(params["ln1"], x, cfg)
+        a, new_cache = attn_fn(params["attn"], h, positions, cfg,
+                               cache=cache, q_offset=q_offset)
+        x = x + a
+        h = apply_norm(params["ln2"], x, cfg)
+        if "moe" in params:
+            m, aux = mlp.moe_apply(params["moe"], h, cfg)
+        else:
+            m = mlp.mlp_apply(params["mlp"], h, cfg)
+        return x + m, new_cache, aux
+    mix_fn = {"mlstm": ssm.mlstm_apply, "slstm": ssm.slstm_apply,
+              "mamba": ssm.mamba2_apply}[kind]
+    h = apply_norm(params["ln1"], x, cfg)
+    m, new_cache = mix_fn(params["mix"], h, cfg, cache=cache)
+    return x + m, new_cache, aux
+
+
+def layer_cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+        return attention.gqa_cache_init(cfg, batch, max_len, dtype)
+    if kind in ("mla_mlp", "mla_moe"):
+        return attention.mla_cache_init(cfg, batch, max_len, dtype)
+    if kind == "mlstm":
+        return ssm.mlstm_cache_init(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm.slstm_cache_init(cfg, batch, dtype)
+    if kind == "mamba":
+        return ssm.mamba2_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig):
+    tpl = cfg.block_template
+    reps = cfg.repeats
+    keys = jax.random.split(key, len(cfg.prologue) + len(tpl) * reps + 1)
+    ki = iter(range(len(keys)))
+    prologue = [layer_init(keys[next(ki)], kind, cfg)
+                for kind in cfg.prologue]
+    scanned, shared = {}, {}
+    for si, kind in enumerate(tpl):
+        if si in cfg.shared_slots:
+            shared[f"slot{si}"] = layer_init(keys[next(ki)], kind, cfg)
+            # consume remaining keys for determinism parity
+            for _ in range(reps - 1):
+                next(ki)
+        else:
+            per_rep = [layer_init(keys[next(ki)], kind, cfg)
+                       for _ in range(reps)]
+            scanned[f"slot{si}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_rep)
+    return {"prologue": prologue, "scanned": scanned, "shared": shared}
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    pro = [layer_cache_init(kind, cfg, batch, max_len, dtype)
+           for kind in cfg.prologue]
+    reps = cfg.repeats
+    body = {}
+    for si, kind in enumerate(cfg.block_template):
+        per_rep = [layer_cache_init(kind, cfg, batch, max_len, dtype)
+                   for _ in range(reps)]
+        body[f"slot{si}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+    return {"prologue": pro, "body": body}
+
+
+def stack_apply(params, x, positions, cfg: ModelConfig, caches=None,
+                q_offset=0, remat: bool = False,
+                gather_params: bool = False, gather_dtype=jnp.bfloat16):
+    """Returns (x, new_caches, aux_sum).
+
+    ``gather_params``: ZeRO-3 semantics — slot params are resharded to
+    replicated (bf16 wire) INSIDE the scan body, so the all-gather happens
+    per layer step instead of being hoisted as one giant gather of the
+    stacked tree (which GSPMD otherwise does; see EXPERIMENTS.md §Perf).
+    """
+    tpl = cfg.block_template
+    aux_total = jnp.zeros((), jnp.float32)
+    new_pro_caches = []
+    for li, kind in enumerate(cfg.prologue):
+        c = caches["prologue"][li] if caches else None
+        x, nc, aux = layer_apply(kind, params["prologue"][li], x, positions,
+                                 cfg, cache=c, q_offset=q_offset)
+        new_pro_caches.append(nc)
+        aux_total = aux_total + aux
+
+    shared = params["shared"]
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        slot_params, slot_caches = xs
+        new_caches = {}
+        for si, kind in enumerate(tpl):
+            p = (shared[f"slot{si}"] if si in cfg.shared_slots
+                 else slot_params[f"slot{si}"])
+            if gather_params and si not in cfg.shared_slots:
+                def _gather(a):
+                    a = a.astype(gather_dtype) if gather_dtype else a
+                    try:
+                        return jax.lax.with_sharding_constraint(
+                            a, jax.sharding.PartitionSpec())
+                    except (RuntimeError, ValueError):
+                        return a          # no mesh context: no-op
+                p = jax.tree.map(_gather, p)
+            c = slot_caches[f"slot{si}"] if slot_caches is not None else None
+            h, nc, aux = layer_apply(kind, p, h, positions, cfg, cache=c,
+                                     q_offset=q_offset)
+            new_caches[f"slot{si}"] = nc
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), new_caches
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    body_caches = caches["body"] if caches else None
+    (x, aux_total), new_body_caches = jax.lax.scan(
+        body, (x, aux_total), (params["scanned"], body_caches))
+    new_caches = ({"prologue": new_pro_caches, "body": new_body_caches}
+                  if caches else None)
+    return x, new_caches, aux_total

@@ -1,0 +1,154 @@
+"""Shared model machinery: config, norms, embeddings, RoPE variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 => d_model // num_heads
+    # layer-stack structure: prologue + template × repeats (+ remainder check)
+    block_template: tuple = ("attn_mlp",)
+    prologue: tuple = ()
+    shared_slots: tuple = ()       # template slots whose params are shared
+    # attention
+    rope_theta: float = 1e4
+    m_rope: bool = False           # qwen2-vl 3-section multimodal RoPE
+    sliding_window: Optional[int] = None
+    norm: str = "rmsnorm"          # rmsnorm | layernorm | layernorm_nonparam
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 1024
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # i/o
+    input_mode: str = "tokens"     # tokens | embeddings (vlm/audio stubs)
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def repeats(self) -> int:
+        body = self.num_layers - len(self.prologue)
+        assert body % len(self.block_template) == 0, (
+            f"{self.name}: {body} layers not divisible by template "
+            f"{self.block_template}")
+        return body // len(self.block_template)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if every layer kind avoids O(S²) state at decode (long_500k)."""
+        kinds = set(self.prologue) | set(self.block_template)
+        quad = {"attn_mlp", "attn_moe", "mla_mlp", "mla_moe"}
+        return not (kinds & quad) or self.sliding_window is not None
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg: ModelConfig, dim: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        pd = jnp.dtype(cfg.param_dtype)
+        return {"scale": jnp.ones((dim,), pd), "bias": jnp.zeros((dim,), pd)}
+    return {}  # layernorm_nonparam (olmo)
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        xf = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32)
+    return xf.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=dtype) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, positions_thw, theta: float,
+                 sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions (..., S, 3) = (t, h, w) ids;
+    frequency pairs are split into 3 sections, each rotated by its own id.
+
+    ``sections`` are pair-counts per section and must sum to hd//2.
+    """
+    hd = x.shape[-1]
+    n_pairs = hd // 2
+    assert sum(sections) == n_pairs, (sections, n_pairs)
+    freqs = rope_freqs(hd, theta)                            # (n_pairs,)
+    # section id per frequency pair: 0,1,2
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    pos = positions_thw.astype(jnp.float32)[..., sec]        # (...,S,n_pairs)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)

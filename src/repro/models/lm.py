@@ -1,0 +1,159 @@
+"""The language model: embeddings → block stack → head, plus train/serve
+entry points (forward / loss / prefill / decode_step).
+
+Input modes:
+  * ``tokens``      — (B,S) int32 token ids (LM archs).
+  * ``embeddings``  — (B,S,d_model) precomputed frontend embeddings:
+    the assignment's [vlm]/[audio] stub frontends (``input_specs()`` hands
+    the backbone patch/frame embeddings directly).
+
+M-RoPE archs additionally take ``positions`` of shape (B,S,3) = (t,h,w).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import ModelConfig, apply_norm, dense_init, \
+    norm_params
+
+
+def init_params(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                     pd, scale=0.02)
+    else:
+        params["in_proj"] = dense_init(ks[0], (cfg.d_model, cfg.d_model), pd)
+    params["stack"] = blocks.stack_init(ks[1], cfg)
+    params["ln_f"] = norm_params(cfg, cfg.d_model)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        params["head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                    pd, scale=0.02)
+    return params
+
+
+def _embed(params, batch, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.input_mode == "tokens":
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    else:
+        x = jnp.einsum("bsd,de->bse", batch["embeddings"].astype(dt),
+                       params["in_proj"].astype(dt))
+    return x
+
+
+def _head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        w = params["embed"].astype(cfg.compute_dtype).T
+    else:
+        w = params["head"].astype(cfg.compute_dtype)
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def _default_positions(batch, cfg: ModelConfig, seq_len: int, batch_size: int):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(seq_len)[None, :]
+    pos = jnp.broadcast_to(pos, (batch_size, seq_len))
+    if cfg.m_rope:  # text-like default: t=h=w=linear position
+        pos = jnp.broadcast_to(pos[..., None], (batch_size, seq_len, 3))
+    return pos
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = False,
+            return_hidden: bool = False, gather_params: bool = False):
+    """→ (logits (B,S,V) f32, aux_loss[, hidden (B,S,d)])."""
+    x = _embed(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = _default_positions(batch, cfg, s, b)
+    x, _, aux = blocks.stack_apply(params["stack"], x, positions, cfg,
+                                   remat=remat,
+                                   gather_params=gather_params)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = _head(params, x, cfg).astype(jnp.float32)
+    if return_hidden:
+        return logits, aux, x
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: bool = False,
+            aux_weight: float = 0.01, z_weight: float = 1e-4,
+            gather_params: bool = False):
+    """Next-token cross-entropy (+ MoE aux + z-loss). labels = tokens shifted
+    by the data pipeline; positions with label < 0 are masked.
+
+    Sharding discipline: the gold logit is extracted by a one-hot
+    CONTRACTION, not a gather — a gather along the vocab axis would force
+    GSPMD to all-gather the (B,S,V) logits (tens of GiB at 150k vocab);
+    the contraction keeps the vocab dim sharded end-to-end."""
+    logits, aux = forward(params, batch, cfg, remat=remat,
+                          gather_params=gather_params)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    z = ((lse * mask) ** 2).sum() / denom
+    return ce + aux_weight * aux + z_weight * z, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return blocks.stack_cache_init(cfg, batch, max_len, dtype)
+
+
+def prefill(params, batch, cfg: ModelConfig, caches):
+    """Full-sequence forward that populates caches; returns
+    (last_token_logits (B,V), caches)."""
+    x = _embed(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = _default_positions(batch, cfg, s, b)
+    x, caches, _ = blocks.stack_apply(params["stack"], x, positions, cfg,
+                                      caches=caches)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = _head(params, x[:, -1:], cfg)
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def decode_step(params, token_batch, caches, cfg: ModelConfig,
+                position: Optional[jax.Array] = None):
+    """One decode step. token_batch: {"tokens": (B,1)} or
+    {"embeddings": (B,1,d)}; position: (B,1) or (B,1,3); defaults to the
+    first cache's length counter."""
+    x = _embed(params, token_batch, cfg)
+    b = x.shape[0]
+    if position is None:
+        length = _first_length(caches, cfg)
+        position = jnp.broadcast_to(length[None, None], (b, 1))
+        if cfg.m_rope:
+            position = jnp.broadcast_to(position[..., None], (b, 1, 3))
+    x, caches, _ = blocks.stack_apply(params["stack"], x, position, cfg,
+                                      caches=caches)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def _first_length(caches, cfg: ModelConfig):
+    for c in caches["prologue"]:
+        if "length" in c:
+            return c["length"]
+    for si in range(len(cfg.block_template)):
+        c = caches["body"].get(f"slot{si}")
+        if c is not None and "length" in c:
+            return c["length"][0]
+    return jnp.zeros((), jnp.int32)

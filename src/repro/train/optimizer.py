@@ -1,0 +1,123 @@
+"""AdamW (from scratch, pytree-native) + LR schedules + global-norm clipping
++ optional int8 error-feedback gradient compression.
+
+Moments are kept in f32 regardless of param dtype; their sharding is the
+ZeRO-1 spec from repro.distributed.sharding (param spec + data-axis shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    compress_grads: bool = False   # int8 error-feedback (inter-pod wire cut)
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def init(params, cfg: OptimizerConfig):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": zeros,
+             "v": jax.tree.map(jnp.zeros_like, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(jnp.zeros_like, zeros)  # error feedback
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def quantize_int8(x, axis=None):
+    """Symmetric per-tensor int8 quantization: (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, ef):
+    """int8 error-feedback round trip: what survives the quantized wire.
+
+    On a real multi-pod deployment the int8 payload rides the inter-pod
+    all-reduce (4× wire-byte cut on the slow ICI hops); under jit we model
+    the end-to-end numerics: g' = deq(quant(g + ef)), ef' = g + ef − g'.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+
+    flat = jax.tree.map(one, grads, ef)
+    g_new = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    ef_new = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return g_new, ef_new
+
+
+def apply_updates(params, grads, state, cfg: OptimizerConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.compress_grads:
+        grads, ef = compress_decompress(grads, state["ef"])
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.compress_grads:
+        new_state["ef"] = ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

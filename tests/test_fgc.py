@@ -1,0 +1,88 @@
+"""Unit + property tests for the paper's core: FGC operators (§3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fgc
+
+RNG = np.random.default_rng(0)
+BACKENDS = ("scan", "cumsum", "pallas")
+
+
+@pytest.mark.parametrize("n", [2, 5, 17, 64, 257])
+@pytest.mark.parametrize("p", [0, 1, 2, 3])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_apply_abs_power_matches_dense(n, p, backend):
+    x = jnp.asarray(RNG.normal(size=(n, 3)))
+    want = fgc.apply_abs_power(x, 0, p, "dense")
+    got = fgc.apply_abs_power(x, 0, p, backend)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9 * n ** p)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_apply_L_strictly_lower(backend):
+    """(Lx)_0 must be 0 and (Lx)_i independent of x_j for j >= i."""
+    n = 32
+    x = jnp.asarray(RNG.normal(size=(n, 1)))
+    y = fgc.apply_L(x, 0, 2, backend)
+    assert float(jnp.abs(y[0]).max()) < 1e-12
+    x2 = x.at[20:].set(123.0)
+    y2 = fgc.apply_L(x2, 0, 2, backend)
+    np.testing.assert_allclose(y[:21], y2[:21], rtol=1e-12)
+
+
+@pytest.mark.parametrize("axis", [0, 1, 2])
+def test_axis_handling(axis):
+    x = jnp.asarray(RNG.normal(size=(6, 7, 8)))
+    a = fgc.apply_abs_power(x, axis, 2, "cumsum")
+    b = fgc.apply_abs_power(x, axis, 2, "dense")
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9)
+
+
+def test_LT_is_transpose_of_L():
+    n = 40
+    lo = np.asarray(fgc.lower_toeplitz(n, 2))
+    x = jnp.asarray(RNG.normal(size=(n, 2)))
+    got = fgc.apply_LT(x, 0, 2, "scan")
+    np.testing.assert_allclose(got, lo.T @ np.asarray(x), rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_pascal_matrix():
+    p = np.asarray(fgc.pascal_matrix(3))
+    want = np.array([[1, 0, 0, 0], [1, 1, 0, 0], [1, 2, 1, 0], [1, 3, 3, 1]])
+    np.testing.assert_array_equal(p, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 40), p=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_property_backends_agree(n, p, seed):
+    """The paper's DP recursion and the binomial-cumsum closed form are the
+    same linear operator (hypothesis sweep)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, 2)))
+    a = fgc.apply_abs_power(x, 0, p, "scan")
+    b = fgc.apply_abs_power(x, 0, p, "cumsum")
+    np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-8 * n ** p)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_linearity(seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(20, 1)))
+    y = jnp.asarray(r.normal(size=(20, 1)))
+    a, b = 2.5, -1.25
+    lhs = fgc.apply_abs_power(a * x + b * y, 0, 2, "scan")
+    rhs = (a * fgc.apply_abs_power(x, 0, 2, "scan")
+           + b * fgc.apply_abs_power(y, 0, 2, "scan"))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+def test_flops_estimate_matches_paper():
+    # paper §3: (N−1)·k(k+1)/2 muls + (N−1)(k+2)(k+1)/2 adds
+    assert fgc.flops_estimate(100, 1) == 99 * (1 + 3)
+    assert fgc.flops_estimate(100, 2) == 99 * (3 + 6)

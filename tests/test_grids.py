@@ -1,0 +1,50 @@
+"""Grid geometries + the paper's bottleneck product D_X Γ D_Y."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grids
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("backend", ["scan", "cumsum", "pallas"])
+def test_gw_product_1d(k, backend):
+    gx = grids.Grid1D(23, 0.17, k)
+    gy = grids.Grid1D(31, 0.05, k)
+    g = jnp.asarray(RNG.random((23, 31)))
+    want = grids.gw_product_dense(gx, gy, g)
+    got = grids.gw_product(gx, gy, g, backend=backend)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_gw_product_2d(k):
+    gx = grids.Grid2D(5, 0.3, k)
+    gy = grids.Grid2D(4, 0.7, k)
+    g = jnp.asarray(RNG.random((25, 16)))
+    want = grids.gw_product_dense(gx, gy, g)
+    got = grids.gw_product(gx, gy, g, backend="cumsum")
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@pytest.mark.parametrize("grid", [grids.Grid1D(30, 0.1, 1),
+                                  grids.Grid1D(30, 0.1, 2),
+                                  grids.Grid2D(6, 0.2, 1),
+                                  grids.Grid2D(6, 0.2, 2)])
+def test_squared_distance_power_mult(grid):
+    """(D∘D) — the C1 term — is the same structure with power 2k."""
+    u = jnp.asarray(RNG.random((grid.size,)))
+    want = grid.dist_matrix(power_mult=2) @ u
+    got = grid.apply_dist(u, 0, power_mult=2, backend="cumsum")
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_2d_matrix_matches_manhattan():
+    g = grids.Grid2D(3, 2.0, 1)
+    d = np.asarray(g.dist_matrix())
+    # distance between (0,0) and (2,1): h*(2+1) = 6
+    assert d[0, 2 * 3 + 1] == pytest.approx(6.0)
+    assert np.allclose(d, d.T)
+    assert np.all(np.diag(d) == 0)

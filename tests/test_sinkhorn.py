@@ -1,0 +1,72 @@
+"""Sinkhorn solvers: marginal properties (hypothesis), mode parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sinkhorn as sk
+
+RNG = np.random.default_rng(3)
+
+
+def _rand_measures(m, n, seed=0):
+    r = np.random.default_rng(seed)
+    mu = r.random(m) + 0.1
+    nu = r.random(n) + 0.1
+    return jnp.asarray(mu / mu.sum()), jnp.asarray(nu / nu.sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(3, 30), n=st.integers(3, 30), seed=st.integers(0, 99))
+def test_property_marginals(m, n, seed):
+    """Sinkhorn plans must satisfy both marginals (the defining property)."""
+    r = np.random.default_rng(seed)
+    cost = jnp.asarray(r.random((m, n)))
+    mu, nu = _rand_measures(m, n, seed)
+    plan, f, g, err = sk.sinkhorn_log(cost, mu, nu, eps=0.05, iters=500)
+    np.testing.assert_allclose(np.asarray(plan.sum(1)), np.asarray(mu),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(plan.sum(0)), np.asarray(nu),
+                               atol=1e-6)
+    assert np.all(np.asarray(plan) >= 0)
+
+
+def test_log_vs_kernel_mode_parity():
+    cost = jnp.asarray(RNG.random((20, 25)))
+    mu, nu = _rand_measures(20, 25, 1)
+    p_log, *_ = sk.sinkhorn_log(cost, mu, nu, eps=0.1, iters=400)
+    p_ker, *_ = sk.sinkhorn_kernel(cost, mu, nu, eps=0.1, iters=400)
+    np.testing.assert_allclose(np.asarray(p_log), np.asarray(p_ker),
+                               atol=1e-10)
+
+
+def test_log_domain_survives_tiny_eps():
+    """The paper's ε=0.002 regime: kernel domain underflows, log domain
+    must stay finite and feasible."""
+    cost = jnp.asarray(RNG.random((30, 30)))
+    mu, nu = _rand_measures(30, 30, 2)
+    plan, f, g, err = sk.sinkhorn_log(cost, mu, nu, eps=0.002, iters=2000)
+    assert np.isfinite(np.asarray(plan)).all()
+    np.testing.assert_allclose(np.asarray(plan.sum(1)), np.asarray(mu),
+                               atol=1e-5)
+
+
+def test_unbalanced_relaxes_marginals():
+    cost = jnp.asarray(RNG.random((15, 15)))
+    mu, nu = _rand_measures(15, 15, 3)
+    # large rho ≈ balanced
+    p_big, *_ = sk.sinkhorn_unbalanced_log(cost, mu, nu, 0.05, 1e5, 1e5, 800)
+    np.testing.assert_allclose(np.asarray(p_big.sum(1)), np.asarray(mu),
+                               atol=1e-3)
+    # small rho: marginals may deviate, mass can shrink
+    p_small, *_ = sk.sinkhorn_unbalanced_log(cost, mu, nu, 0.05, 0.05, 0.05,
+                                             800)
+    assert float(p_small.sum()) < 1.0 + 1e-6
+
+
+def test_warm_start_helps():
+    cost = jnp.asarray(RNG.random((20, 20)))
+    mu, nu = _rand_measures(20, 20, 4)
+    _, f, g, err_cold = sk.sinkhorn_log(cost, mu, nu, 0.01, 50)
+    _, _, _, err_warm = sk.sinkhorn_log(cost, mu, nu, 0.01, 50, f, g)
+    assert float(err_warm) <= float(err_cold) + 1e-12
