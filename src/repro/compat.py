@@ -1,0 +1,23 @@
+"""Version-compat shims for the installed JAX.
+
+`jax.sharding.AxisType` (explicit/auto mesh axis types) only exists from
+jax>=0.5; the container pins an older release.  Mesh construction goes
+through :func:`axis_types_kwargs` so call sites read identically on both:
+
+    jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+
+On new JAX this requests ``AxisType.Auto`` for every axis (the behavior the
+launch stack was written against); on old JAX it degrades to no kwarg, which
+is the same semantics (auto sharding propagation was the only mode).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh`` selecting Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}

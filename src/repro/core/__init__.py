@@ -1,25 +1,32 @@
 """FGC-GW core: the paper's contribution (fast GW gradients) + solvers.
 
 Public API:
-  fgc            — L/Lᵀ/|i−j|^p applies (scan|cumsum|dense|pallas backends)
+  fgc            — L/Lᵀ/|i−j|^p applies (scan|cumsum|dense|pallas backends,
+                   fused single-sweep D̃)
   grids          — Grid1D / Grid2D geometries + gw_product (D_X Γ D_Y)
+  gradient       — GradientOperator: the gradient pieces shared by all solvers
   sinkhorn       — log/kernel/unbalanced Sinkhorn
-  gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers, FGC-accelerated
+  gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers, FGC-accelerated;
+                   entropic_gw_batch solves many problems in one vmapped call
   barycenter     — fixed-support GW barycenter
   losses         — FGW sequence/patch alignment losses for LM training
 """
-from repro.core import fgc, grids, sinkhorn, gw, fgw, ugw, barycenter, losses, coot
+from repro.core import (fgc, gradient, grids, sinkhorn, gw, fgw, ugw,
+                        barycenter, losses, coot)
+from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
-from repro.core.gw import GWConfig, entropic_gw, gw_energy
+from repro.core.gw import (GWConfig, GWResult, entropic_gw,
+                           entropic_gw_batch, gw_energy)
 from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
 from repro.core.ugw import UGWConfig, entropic_ugw
 from repro.core.barycenter import BarycenterConfig, gw_barycenter
 from repro.core.losses import AlignConfig, fgw_alignment_loss
 
 __all__ = [
-    "fgc", "grids", "sinkhorn", "gw", "fgw", "ugw", "barycenter", "losses",
+    "fgc", "gradient", "grids", "sinkhorn", "gw", "fgw", "ugw",
+    "barycenter", "losses", "GradientOperator",
     "Grid1D", "Grid2D", "gw_product", "gw_product_dense",
-    "GWConfig", "entropic_gw", "gw_energy",
+    "GWConfig", "GWResult", "entropic_gw", "entropic_gw_batch", "gw_energy",
     "FGWConfig", "entropic_fgw", "fgw_energy",
     "UGWConfig", "entropic_ugw",
     "BarycenterConfig", "gw_barycenter",

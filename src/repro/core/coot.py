@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
+from repro.core.gradient import bilinear_product
 from repro.core.grids import Grid
 
 
@@ -37,18 +38,6 @@ class COOTConfig:
     outer_iters: int = 10
     sinkhorn_iters: int = 100
     backend: str = "cumsum"       # used only on grid-structured sides
-
-
-def _bilinear(x, pi_v, y, grid_x: Optional[Grid], grid_y: Optional[Grid],
-              backend: str):
-    """X π_v Yᵀ with FGC on grid-structured sides."""
-    if grid_x is not None:
-        left = grid_x.apply_dist(pi_v, axis=0, backend=backend)   # X π_v
-    else:
-        left = x @ pi_v
-    if grid_y is not None:
-        return grid_y.apply_dist(left, axis=1, backend=backend)   # (·) Yᵀ
-    return left @ y.T
 
 
 def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
@@ -76,7 +65,8 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
         a = x2 @ pi_v.sum(axis=1)              # (n,) weights of π_v rows
         b = y2 @ pi_v.sum(axis=0)
         m_s = (a[:, None] + b[None, :]
-               - 2.0 * _bilinear(x, pi_v, y, grid_x, grid_y, cfg.backend))
+               - 2.0 * bilinear_product(x, pi_v, y, grid_x, grid_y,
+                                        cfg.backend))
         pi_s, f_s, g_s, _ = sk.sinkhorn_log(m_s, mu_s, nu_s,
                                             cfg.eps_samples,
                                             cfg.sinkhorn_iters, f_s, g_s)
@@ -96,7 +86,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
     # final objective
     a = x2 @ pi_v.sum(axis=1)
     b = y2 @ pi_v.sum(axis=0)
-    cross = jnp.sum(pi_s * _bilinear(x, pi_v, y, grid_x, grid_y,
-                                     cfg.backend))
+    cross = jnp.sum(pi_s * bilinear_product(x, pi_v, y, grid_x, grid_y,
+                                            cfg.backend))
     value = pi_s.sum(1) @ a + pi_s.sum(0) @ b - 2.0 * cross
     return pi_s, pi_v, value

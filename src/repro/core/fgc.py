@@ -21,6 +21,29 @@ Backends
 ``dense``   explicit Toeplitz matmul (oracle; MXU path for small N).
 ``pallas``  Pallas TPU kernel (see repro.kernels.fgc_scan), validated in
             interpret mode on CPU.
+
+Fused D̃-apply
+-------------
+``apply_abs_power`` (the solvers' hot path — every gradient is built from
+D̃-applies) no longer runs the historical two-pass form
+``apply_L(x) + flip(apply_L(flip(x)))``.  Each backend has a fused
+single-sweep implementation:
+
+* ``scan``    ONE bidirectional `lax.scan` carrying both the L state and the
+              Lᵀ state (two (p+1)-vectors); step i consumes x_i and x_{N−1−i}
+              and emits both triangle contributions — N steps total instead
+              of 2N across two scans.
+* ``cumsum``  the p+1 moment cumsums Σ_j t_j^s x_j are computed ONCE and
+              reused for both triangles (prefix reads for L, suffix =
+              total − prefix for Lᵀ) — half the cumsum traffic of the
+              two-pass form.
+* ``pallas``  fused TPU kernel (`fgc_scan.fgc_apply_dtilde_pallas`): one
+              sequential row-block sweep computes block r of Lx and block
+              nrb−1−r of Lᵀx per step, sharing the x block loads' DMA slots.
+* ``blocked``/``dense`` keep their structure (dense is the oracle).
+
+Batched solving over many (μ, ν) problems at once lives in
+`repro.core.gw.entropic_gw_batch` / `repro.serve.engine.GWEngine`.
 """
 from __future__ import annotations
 
@@ -158,6 +181,81 @@ _L_BACKENDS = {
 
 
 # ---------------------------------------------------------------------------
+# fused D̃-apply backends: y = (L + Lᵀ) x in ONE sweep (no flip/L/flip pass)
+# ---------------------------------------------------------------------------
+
+def _apply_D_scan(x2, p: int):
+    """Bidirectional DP: one `lax.scan` carries BOTH (p+1)-vector states.
+
+    The forward stream (L recursion on x) and the reversed stream (L on
+    flip(x), whose flipped output is Lᵀx) are concatenated along the batch
+    axis, so step i is a single P @ a + x update on a (p+1, 2B) state — the
+    two triangles ride the same vector lanes and D̃x is ONE n-step sweep
+    instead of two.
+    """
+    n, b = x2.shape
+    pasc = pascal_matrix(p, x2.dtype)
+    xs = jnp.concatenate([x2, jnp.flip(x2, axis=0)], axis=1)
+
+    def step(a, x_i):
+        return pasc @ a + x_i[None, :], a[p]
+
+    a0 = jnp.zeros((p + 1, 2 * b), x2.dtype)
+    _, ys = jax.lax.scan(step, a0, xs)
+    return ys[:, :b] + jnp.flip(ys[:, b:], axis=0)
+
+
+def _apply_D_cumsum(x2, p: int):
+    """Shared-moment closed form: each cumsum Σ_j t_j^s x_j serves BOTH
+    triangles — prefix (exclusive) for L, suffix = total − inclusive for Lᵀ —
+    so D̃x costs p+1 cumsums instead of 2(p+1).
+
+    L term s:  C(p,s)·(−1)^s     · t^{p−s} · Σ_{j<i} t_j^s x_j
+    Lᵀ term s: C(p,s)·(−1)^{p−s} · t^{p−s} · Σ_{j>i} t_j^s x_j
+    (the Lᵀ coefficient is the s′ = p−s term of (t_j − t_i)^p re-indexed so
+    the j-exponent matches the shared moment).
+    """
+    n, b = x2.shape
+    t = (jnp.arange(n, dtype=x2.dtype) - jnp.asarray(n // 2, x2.dtype))
+    y = jnp.zeros_like(x2)
+    for s in range(p + 1):
+        ms = (t ** s)[:, None] * x2                      # t_j^s x_j
+        cs = jnp.cumsum(ms, axis=0)
+        excl_lo = jnp.concatenate([jnp.zeros((1, b), x2.dtype), cs[:-1]],
+                                  axis=0)
+        excl_hi = cs[-1][None, :] - cs
+        w = math.comb(p, s) * (t ** (p - s))[:, None]
+        y = y + w * (((-1.0) ** s) * excl_lo
+                     + ((-1.0) ** (p - s)) * excl_hi)
+    return y
+
+
+def _apply_D_dense(x2, p: int):
+    lo = lower_toeplitz(x2.shape[0], p, x2.dtype)
+    return (lo + lo.T) @ x2
+
+
+def _apply_D_pallas(x2, p: int):
+    from repro.kernels import ops as kops
+    return kops.fgc_apply_dtilde(x2, p)
+
+
+def _apply_D_two_pass(x2, p: int, backend: str):
+    """Fallback for backends without a fused form (blocked)."""
+    fn = _L_BACKENDS[backend]
+    return fn(x2, p) + jnp.flip(fn(jnp.flip(x2, axis=0), p), axis=0)
+
+
+_D_BACKENDS = {
+    "scan": _apply_D_scan,
+    "cumsum": _apply_D_cumsum,
+    "blocked": partial(_apply_D_two_pass, backend="blocked"),
+    "dense": _apply_D_dense,
+    "pallas": _apply_D_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -181,17 +279,16 @@ def apply_abs_power(x, axis: int = 0, power: int = 1, backend: str = "cumsum"):
     """y = D̃ x with D̃[i,j] = |i-j|^power (diagonal: 0^0 := 1 for power=0).
 
     power=0 is the all-ones matrix J (paper §3.1 Kronecker expansion term).
+    Dispatches to the fused single-sweep backends (module docstring): D̃x is
+    ONE pass over x, not an L-apply plus a flip/L/flip Lᵀ-apply.
     """
+    if power < 0:
+        raise ValueError("power must be >= 0")
     if power == 0:
         return jnp.sum(x, axis=axis, keepdims=True) * jnp.ones_like(x)
-    if backend == "dense":
-        x2, shape, axis = _to_front(x, axis)
-        n = x2.shape[0]
-        lo = lower_toeplitz(n, power, x2.dtype)
-        y2 = (lo + lo.T) @ x2
-        return _from_front(y2, shape, axis)
-    return (apply_L(x, axis, power, backend)
-            + apply_LT(x, axis, power, backend))
+    x2, shape, axis = _to_front(x, axis)
+    y2 = _D_BACKENDS[backend](x2, power)
+    return _from_front(y2, shape, axis)
 
 
 def flops_estimate(n: int, p: int) -> int:

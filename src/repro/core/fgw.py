@@ -2,6 +2,9 @@
 
 Objective: (1−θ)·Σ c²_ip γ_ip + θ·E(Γ); gradient C2 − 4θ·D_X Γ D_Y with
 C2 = (1−θ)·C⊙C + 2θ·((D_X∘D_X)μ 1ᵀ + 1((D_Y∘D_Y)ν)ᵀ).
+
+Gradient pieces come from `repro.core.gradient.GradientOperator` (shared
+with gw/ugw/coot).
 """
 from __future__ import annotations
 
@@ -11,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
+from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid
-from repro.core.gw import GWConfig, GWResult, _product, constant_term, gw_energy
+from repro.core.gw import GWConfig, GWResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,16 +27,16 @@ class FGWConfig(GWConfig):
 def fgw_energy(grid_x: Grid, grid_y: Grid, feature_cost, gamma, theta,
                backend: str = "cumsum"):
     lin = jnp.sum((feature_cost ** 2) * gamma)
-    quad = gw_energy(grid_x, grid_y, gamma, backend)
+    quad = GradientOperator(grid_x, grid_y, backend).energy(gamma)
     return (1.0 - theta) * lin + theta * quad
 
 
 def entropic_fgw(grid_x: Grid, grid_y: Grid, feature_cost, mu, nu,
                  cfg: FGWConfig = FGWConfig(), gamma0=None) -> GWResult:
     """``feature_cost``: (M,N) linear-term cost matrix C (paper's c_ip)."""
-    backend = cfg.backend
+    op = GradientOperator(grid_x, grid_y, cfg.backend)
     theta = cfg.theta
-    c1, dx2_mu, dy2_nu = constant_term(grid_x, grid_y, mu, nu, backend)
+    c1, _, _ = op.constant_term(mu, nu)
     c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
     f = jnp.zeros_like(mu)
     g = jnp.zeros_like(nu)
@@ -42,11 +46,12 @@ def entropic_fgw(grid_x: Grid, grid_y: Grid, feature_cost, mu, nu,
 
     def outer(carry, _):
         gamma, f, g = carry
-        grad = c2 - 4.0 * theta * _product(grid_x, grid_y, gamma, backend)
+        grad = c2 - 4.0 * theta * op.product(gamma)
         gamma, f, g, err = sk.solve(grad, mu, nu, skcfg, f, g)
         return (gamma, f, g), err
 
     (gamma, f, g), errs = jax.lax.scan(outer, (gamma, f, g), None,
                                        length=cfg.outer_iters)
-    value = fgw_energy(grid_x, grid_y, feature_cost, gamma, theta, backend)
+    value = fgw_energy(grid_x, grid_y, feature_cost, gamma, theta,
+                       cfg.backend)
     return GWResult(plan=gamma, value=value, marginal_err=errs[-1], f=f, g=g)

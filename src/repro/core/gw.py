@@ -5,17 +5,25 @@ Each outer iteration:
     Π   = ∇E(Γ) = C1 − 4·D_X Γ D_Y          (FGC: O(k²MN); dense: O(M²N+MN²))
     Γ   ← Sinkhorn(Π, μ, ν, ε)               (τ = ε, Remark 2.1)
 with warm-started log-domain potentials carried across iterations.
+
+All gradient pieces come from `repro.core.gradient.GradientOperator` (shared
+with fgw/ugw/coot).  `entropic_gw_batch` solves MANY problems in one vmapped
+program: ragged 1D sizes are zero-mass padded to a common shape, which is
+exact under log-domain Sinkhorn (padded potentials pin to −inf, the plan is
+identically 0 there), so one compilation serves a whole batch of requests.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.grids import Grid, gw_product, gw_product_dense
+from repro.core.gradient import GradientOperator
+from repro.core.grids import Grid, Grid1D, Grid2D
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,44 +52,18 @@ class GWResult:
         return cls(*children)
 
 
-def _product(grid_x: Grid, grid_y: Grid, gamma, backend: str):
-    if backend == "dense":
-        return gw_product_dense(grid_x, grid_y, gamma)
-    return gw_product(grid_x, grid_y, gamma, backend=backend)
-
-
-def constant_term(grid_x: Grid, grid_y: Grid, mu, nu, backend: str):
-    """C1 = 2((D_X∘D_X)μ 1ᵀ + 1((D_Y∘D_Y)ν)ᵀ)  — O(k²(M+N)) via FGC
-    (the squared-distance matrix is the same structure with power 2k)."""
-    if backend == "dense":
-        dx2 = grid_x.dist_matrix(2, dtype=mu.dtype) @ mu
-        dy2 = grid_y.dist_matrix(2, dtype=nu.dtype) @ nu
-    else:
-        dx2 = grid_x.apply_dist(mu, axis=0, power_mult=2, backend=backend)
-        dy2 = grid_y.apply_dist(nu, axis=0, power_mult=2, backend=backend)
-    return 2.0 * (dx2[:, None] + dy2[None, :]), dx2, dy2
-
-
 def gw_energy(grid_x: Grid, grid_y: Grid, gamma, backend: str = "cumsum",
               dx2_mu=None, dy2_nu=None):
     """E(Γ) = Σ (d^X_ij − d^Y_pq)² γ_ip γ_jq, via the three-term expansion."""
-    mu_g = gamma.sum(axis=1)
-    nu_g = gamma.sum(axis=0)
-    if dx2_mu is None:
-        dx2_mu = (grid_x.dist_matrix(2, mu_g.dtype) @ mu_g if backend == "dense"
-                  else grid_x.apply_dist(mu_g, 0, 2, backend))
-    if dy2_nu is None:
-        dy2_nu = (grid_y.dist_matrix(2, nu_g.dtype) @ nu_g if backend == "dense"
-                  else grid_y.apply_dist(nu_g, 0, 2, backend))
-    cross = jnp.sum(gamma * _product(grid_x, grid_y, gamma, backend))
-    return mu_g @ dx2_mu + nu_g @ dy2_nu - 2.0 * cross
+    return GradientOperator(grid_x, grid_y, backend).energy(
+        gamma, dx2_mu, dy2_nu)
 
 
 def entropic_gw(grid_x: Grid, grid_y: Grid, mu, nu,
                 cfg: GWConfig = GWConfig(), gamma0=None) -> GWResult:
     """Entropic GW distance + plan. jit-compatible; differentiable by unroll."""
-    backend = cfg.backend
-    c1, dx2_mu, dy2_nu = constant_term(grid_x, grid_y, mu, nu, backend)
+    op = GradientOperator(grid_x, grid_y, cfg.backend)
+    c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
     f = jnp.zeros_like(mu)
     g = jnp.zeros_like(nu)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
@@ -90,11 +72,85 @@ def entropic_gw(grid_x: Grid, grid_y: Grid, mu, nu,
 
     def outer(carry, _):
         gamma, f, g = carry
-        grad = c1 - 4.0 * _product(grid_x, grid_y, gamma, backend)
-        gamma, f, g, err = sk.solve(grad, mu, nu, skcfg, f, g)
+        gamma, f, g, err = sk.solve(op.grad(gamma, c1), mu, nu, skcfg, f, g)
         return (gamma, f, g), err
 
     (gamma, f, g), errs = jax.lax.scan(outer, (gamma, f, g), None,
                                        length=cfg.outer_iters)
-    value = gw_energy(grid_x, grid_y, gamma, backend, dx2_mu, dy2_nu)
+    value = op.energy(gamma, dx2_mu, dy2_nu)
     return GWResult(plan=gamma, value=value, marginal_err=errs[-1], f=f, g=g)
+
+
+# ---------------------------------------------------------------------------
+# batched solving: many problems, one compiled program
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("spec_x", "spec_y", "cfg"))
+def _solve_stacked(h_x, h_y, mus, nus, spec_x, spec_y, cfg: GWConfig):
+    """vmap core: specs are (grid_class, n, k) — static so the executable is
+    cached per padded shape bucket; h varies per problem (traced)."""
+    cls_x, n_x, k_x = spec_x
+    cls_y, n_y, k_y = spec_y
+
+    def one(hx, hy, mu, nu):
+        return entropic_gw(cls_x(n_x, hx, k_x), cls_y(n_y, hy, k_y),
+                           mu, nu, cfg)
+
+    return jax.vmap(one)(h_x, h_y, mus, nus)
+
+
+def _pad_to(vec, size: int):
+    return jnp.pad(vec, (0, size - vec.shape[0]))
+
+
+def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
+                      pad_to: tuple[int, int] | None = None
+                      ) -> list[GWResult]:
+    """Solve a batch of GW problems ``[(grid_x, grid_y, mu, nu), ...]`` with
+    ONE vmapped solver call.
+
+    Ragged sizes (Grid1D) are padded to the max (or to ``pad_to=(M, N)`` —
+    the serving path passes bucketed sizes so repeated batches reuse the same
+    compiled executable).  Padded entries carry zero mass, which the
+    log-domain Sinkhorn treats exactly (their potentials are −inf, the plan
+    is 0 there), so each result matches the unbatched solve on the unpadded
+    problem.  Grids may differ in spacing ``h`` per problem but must share
+    class and exponent ``k`` per side; Grid2D problems must be equal-sized
+    (the Kronecker unfolding owns the grid axis, so zero-padding the flat
+    axis is not available there).
+
+    Returns per-problem GWResults sliced back to their true sizes.
+    """
+    if not problems:
+        return []
+    gxs, gys, mus, nus = zip(*problems)
+
+    def _side_spec(grids, measures, pad):
+        cls = type(grids[0])
+        ks = {g.k for g in grids}
+        if not all(type(g) is cls for g in grids) or len(ks) != 1:
+            raise ValueError("batch requires one grid class and one k per side")
+        sizes = [g.size for g in grids]
+        if cls is Grid2D:
+            if len(set(g.n for g in grids)) != 1 or (
+                    pad is not None and pad != sizes[0]):
+                raise ValueError("Grid2D batches must be equal-sized")
+            n = grids[0].n
+        else:
+            n = max(sizes) if pad is None else pad
+            if n < max(sizes):
+                raise ValueError(f"pad_to={pad} < largest problem {max(sizes)}")
+        h = jnp.asarray([g.h for g in grids], dtype=measures[0].dtype)
+        padded = jnp.stack([_pad_to(m, n if cls is Grid1D else g.size)
+                            for g, m in zip(grids, measures)])
+        return (cls, n, ks.pop()), h, padded
+
+    spec_x, h_x, mus_p = _side_spec(gxs, mus, pad_to and pad_to[0])
+    spec_y, h_y, nus_p = _side_spec(gys, nus, pad_to and pad_to[1])
+    stacked = _solve_stacked(h_x, h_y, mus_p, nus_p, spec_x, spec_y, cfg)
+    return [
+        GWResult(plan=stacked.plan[i, :gx.size, :gy.size],
+                 value=stacked.value[i], marginal_err=stacked.marginal_err[i],
+                 f=stacked.f[i, :gx.size], g=stacked.g[i, :gy.size])
+        for i, (gx, gy) in enumerate(zip(gxs, gys))
+    ]

@@ -10,6 +10,7 @@ quadratic-mass optimality condition  Γ ← Γ·√(m(Γ̂)/m(Γ)).
 
 The paper's point (Remark 2.3): the O(M²N+MN²) bottleneck is the same
 D_X Γ D_Y term, so FGC applies verbatim — everything else is O(MN).
+Gradient pieces come from `repro.core.gradient.GradientOperator`.
 """
 from __future__ import annotations
 
@@ -19,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
+from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid
-from repro.core.gw import GWResult, _product
+from repro.core.gw import GWResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,20 +38,14 @@ def _kl(a, b):
     return jnp.sum(jax.scipy.special.rel_entr(a, b)) - a.sum() + b.sum()
 
 
-def _apply_sq(grid: Grid, vec, backend: str):
-    if backend == "dense":
-        return grid.dist_matrix(2, vec.dtype) @ vec
-    return grid.apply_dist(vec, axis=0, power_mult=2, backend=backend)
-
-
 def local_cost(grid_x: Grid, grid_y: Grid, gamma, mu, nu, eps, rho,
                backend: str):
+    op = GradientOperator(grid_x, grid_y, backend)
     mu_g = gamma.sum(axis=1)
     nu_g = gamma.sum(axis=0)
-    a = _apply_sq(grid_x, mu_g, backend)
-    b = _apply_sq(grid_y, nu_g, backend)
-    cost = a[:, None] + b[None, :] - 2.0 * _product(grid_x, grid_y, gamma,
-                                                    backend)
+    a = op.apply_sq_x(mu_g)
+    b = op.apply_sq_y(nu_g)
+    cost = a[:, None] + b[None, :] - 2.0 * op.product(gamma)
     cost = cost + rho * _kl(mu_g, mu) + rho * _kl(nu_g, nu)
     cost = cost + eps * _kl(gamma, mu[:, None] * nu[None, :])
     return cost
@@ -57,7 +53,7 @@ def local_cost(grid_x: Grid, grid_y: Grid, gamma, mu, nu, eps, rho,
 
 def entropic_ugw(grid_x: Grid, grid_y: Grid, mu, nu,
                  cfg: UGWConfig = UGWConfig(), gamma0=None) -> GWResult:
-    backend = cfg.backend
+    op = GradientOperator(grid_x, grid_y, cfg.backend)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
     f = jnp.zeros_like(mu)
     g = jnp.zeros_like(nu)
@@ -66,7 +62,7 @@ def entropic_ugw(grid_x: Grid, grid_y: Grid, mu, nu,
         gamma, f, g = carry
         mass = gamma.sum()
         cost = local_cost(grid_x, grid_y, gamma, mu, nu, cfg.eps, cfg.rho,
-                          backend)
+                          cfg.backend)
         eps_t = cfg.eps * mass
         rho_t = cfg.rho * mass
         new, f, g = sk.sinkhorn_unbalanced_log(
@@ -76,12 +72,10 @@ def entropic_ugw(grid_x: Grid, grid_y: Grid, mu, nu,
 
     (gamma, f, g), masses = jax.lax.scan(outer, (gamma, f, g), None,
                                          length=cfg.outer_iters)
-    # UGW divergence value at the returned plan
+    # UGW divergence value at the returned plan: the shared energy() plus
+    # marginal/mass penalties.
     mu_g, nu_g = gamma.sum(1), gamma.sum(0)
-    a = _apply_sq(grid_x, mu_g, backend)
-    b = _apply_sq(grid_y, nu_g, backend)
-    cross = jnp.sum(gamma * _product(grid_x, grid_y, gamma, backend))
-    energy = mu_g @ a + nu_g @ b - 2.0 * cross
+    energy = op.energy(gamma)
     m = gamma.sum()
     # Quadratic-KL identity: KL⊗(α⊗α|β⊗β) = 2 m(α)·KL(α|β) + (m(α)−m(β))².
     val = (energy

@@ -65,6 +65,85 @@ def _fgc_kernel(x_ref, l_ref, v_ref, pr_ref, t_ref, y_ref, acc_ref, *,
     y_ref[...] = y
 
 
+def _dtilde_kernel(x_ref, xm_ref, l_ref, v_ref, pr_ref, t_ref,
+                   ylo_ref, yhi_ref, a_ref, b_ref, *, p: int,
+                   block_rows: int):
+    """Fused D̃ = L + Lᵀ step: ONE sequential row-block sweep.
+
+    At row step r the kernel sees block r of x (forward stream) and block
+    nrb−1−r (mirror stream).  The forward stream runs the L recursion into
+    output block r; the mirror stream, row-reversed, is block r of the
+    reversed sequence x̃ — running the SAME L recursion on it and
+    row-reversing the result yields output block nrb−1−r of Lᵀx
+    (Lᵀx = flip(L x̃)).  Two (p+1)-moment states live in VMEM scratch; the
+    final D̃x is the sum of the two outputs (done outside the kernel).
+    """
+    dtype = x_ref.dtype
+    row_idx = pl.program_id(1)
+
+    @pl.when(row_idx == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    x = x_ref[...]
+    xr = xm_ref[...][::-1]
+    a = a_ref[...]
+    b = b_ref[...]
+    l_r = l_ref[...]
+    v = v_ref[...]
+    ylo_ref[...] = (jnp.dot(l_r, x, preferred_element_type=dtype)
+                    + jnp.dot(v, a, preferred_element_type=dtype))
+    z = (jnp.dot(l_r, xr, preferred_element_type=dtype)
+         + jnp.dot(v, b, preferred_element_type=dtype))
+    yhi_ref[...] = z[::-1]
+    a_ref[...] = (jnp.dot(pr_ref[...], a, preferred_element_type=dtype)
+                  + jnp.dot(t_ref[...], x, preferred_element_type=dtype))
+    b_ref[...] = (jnp.dot(pr_ref[...], b, preferred_element_type=dtype)
+                  + jnp.dot(t_ref[...], xr, preferred_element_type=dtype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "block_rows", "interpret"))
+def fgc_apply_dtilde_pallas(x, p: int = 1, block_rows: int = BLOCK_ROWS,
+                            interpret: bool = True):
+    """y = D̃ x = (L + Lᵀ) x along axis 0 of (N, B) x, fused single sweep.
+
+    Same padding rules as the L-apply: trailing zero rows are inert for both
+    triangles (strictly-lower L never reads forward; for Lᵀ the padded rows
+    carry zero mass), so the [:n] slice is exact.
+    """
+    n, b = x.shape
+    dtype = x.dtype
+    xp = jnp.pad(x, ((0, -n % block_rows), (0, -b % LANES)))
+    np_, bp_ = xp.shape
+    nrb = np_ // block_rows
+    grid = (bp_ // LANES, nrb)  # rows innermost => sequential
+    l_r, v, p_r, t = _block_constants(p, block_rows, dtype)
+
+    def _const_spec(arr):
+        return pl.BlockSpec(arr.shape, lambda c, r: (0,) * arr.ndim)
+
+    y_lo, y_hi = pl.pallas_call(
+        functools.partial(_dtilde_kernel, p=p, block_rows=block_rows),
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, dtype),
+                   jax.ShapeDtypeStruct(xp.shape, dtype)],
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda c, r: (r, c)),
+                  pl.BlockSpec((block_rows, LANES),
+                               lambda c, r: (nrb - 1 - r, c)),
+                  _const_spec(l_r), _const_spec(v), _const_spec(p_r),
+                  _const_spec(t)],
+        out_specs=[pl.BlockSpec((block_rows, LANES), lambda c, r: (r, c)),
+                   pl.BlockSpec((block_rows, LANES),
+                                lambda c, r: (nrb - 1 - r, c))],
+        scratch_shapes=[pltpu.VMEM((p + 1, LANES), dtype),
+                        pltpu.VMEM((p + 1, LANES), dtype)],
+        interpret=interpret,
+    )(xp, xp, l_r, v, p_r, t)
+    return (y_lo + y_hi)[:n, :b]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("p", "block_rows", "interpret"))
 def fgc_apply_l_pallas(x, p: int = 1, block_rows: int = BLOCK_ROWS,

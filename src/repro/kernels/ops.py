@@ -7,6 +7,7 @@ validation, per the repo's CPU-container policy.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -18,15 +19,42 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _tpu_f32_inputs(x):
+    """Pallas TPU has no f64 (interpret mode handles any dtype).
+
+    Returns (x_for_kernel, original_dtype); callers must cast the kernel
+    output back so the Pallas backend never changes dtype under the caller.
+    """
+    orig = x.dtype
+    if _on_tpu() and orig == jnp.float64:
+        warnings.warn(
+            "Pallas TPU kernels have no float64: computing the FGC apply in "
+            "float32 and casting the result back to float64 (precision is "
+            "f32-limited). Pass float32 inputs to silence this.",
+            stacklevel=3)
+        x = x.astype(jnp.float32)
+    return x, orig
+
+
 def fgc_apply_l(x, p: int = 1, block_rows: int | None = None):
     """y = L x along axis 0 of an (N, B) array (Pallas backend for core.fgc)."""
     interpret = not _on_tpu()
     br = block_rows or fgc_scan.BLOCK_ROWS
-    # Pallas TPU has no f64; interpret mode handles any dtype.
-    if not interpret and x.dtype == jnp.float64:
-        x = x.astype(jnp.float32)
-    return fgc_scan.fgc_apply_l_pallas(x, p=p, block_rows=br,
-                                       interpret=interpret)
+    x, orig = _tpu_f32_inputs(x)
+    y = fgc_scan.fgc_apply_l_pallas(x, p=p, block_rows=br,
+                                    interpret=interpret)
+    return y.astype(orig)
+
+
+def fgc_apply_dtilde(x, p: int = 1, block_rows: int | None = None):
+    """y = (L + Lᵀ) x along axis 0 of an (N, B) array — the fused D̃-apply
+    (single row-block sweep; see fgc_scan._dtilde_kernel)."""
+    interpret = not _on_tpu()
+    br = block_rows or fgc_scan.BLOCK_ROWS
+    x, orig = _tpu_f32_inputs(x)
+    y = fgc_scan.fgc_apply_dtilde_pallas(x, p=p, block_rows=br,
+                                         interpret=interpret)
+    return y.astype(orig)
 
 
 def sinkhorn_row_update(cost, g, log_mu, eps: float):

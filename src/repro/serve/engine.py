@@ -1,7 +1,15 @@
-"""Batched serving engine: prefill + decode with per-request length
-tracking, greedy/temperature sampling, and a simple admission queue
+"""Batched serving engines.
+
+`Engine` (LM): prefill + decode with per-request length tracking,
+greedy/temperature sampling, and a simple admission queue
 (continuous-batching-lite: finished slots are refilled between decode
 bursts; the decode step itself is a fixed-shape jit — no recompilation).
+
+`GWEngine` (GW solves): admission queue for Gromov-Wasserstein requests.
+Requests are bucketed by (grid class, k, padded sizes rounded up to
+``size_bucket``) and flushed through `entropic_gw_batch` — one vmapped,
+jit-cached executable per bucket, so a stream of ragged-size requests pays
+compilation once per bucket instead of once per shape.
 """
 from __future__ import annotations
 
@@ -12,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.grids import Grid1D
+from repro.core.gw import GWConfig, GWResult, entropic_gw_batch
 from repro.models import lm
 from repro.models.common import ModelConfig
 
@@ -64,3 +74,86 @@ class Engine:
                                           caches)
             tok = jnp.where(done, tok, self._sample(logits))
         return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+@dataclasses.dataclass
+class GWServeConfig:
+    solver: GWConfig = dataclasses.field(default_factory=GWConfig)
+    max_batch: int = 16        # cap problems per vmapped solve
+    size_bucket: int = 64      # pad 1D sizes up to multiples of this
+
+
+class GWEngine:
+    """Admission-queue front end for batched GW solving.
+
+    submit() enqueues a (grid_x, grid_y, mu, nu) problem and returns a
+    request id; flush() groups the queue into shape buckets, runs one
+    `entropic_gw_batch` per bucket chunk (≤ max_batch problems, chunk length
+    rounded up to a power of two with duplicate problems), and returns
+    {request_id: GWResult}.  Because bucketed padded sizes AND chunk lengths
+    repeat, the underlying jitted solver compiles at most log2(max_batch)
+    executables per bucket, reused for every later flush — the serving
+    path's compilation amortization.  A failing bucket only drops its own
+    solved entries; unsolved requests stay queued for retry.
+    """
+
+    def __init__(self, cfg: GWServeConfig | None = None):
+        self.cfg = cfg or GWServeConfig()
+        self._queue: list[tuple[int, tuple]] = []
+        self._next_id = 0
+
+    def _bucket_size(self, size: int) -> int:
+        b = self.cfg.size_bucket
+        return -(-size // b) * b
+
+    def submit(self, grid_x, grid_y, mu, nu) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, (grid_x, grid_y, jnp.asarray(mu),
+                                  jnp.asarray(nu))))
+        return rid
+
+    def _bucket_key(self, prob):
+        gx, gy, _, _ = prob
+        pad_x = (self._bucket_size(gx.size) if isinstance(gx, Grid1D)
+                 else gx.size)
+        pad_y = (self._bucket_size(gy.size) if isinstance(gy, Grid1D)
+                 else gy.size)
+        return (type(gx), gx.k, pad_x, type(gy), gy.k, pad_y)
+
+    def flush(self) -> dict[int, GWResult]:
+        buckets: dict[tuple, list[tuple[int, tuple]]] = {}
+        for rid, prob in self._queue:
+            buckets.setdefault(self._bucket_key(prob), []).append((rid, prob))
+        results: dict[int, GWResult] = {}
+        done: set[int] = set()
+        try:
+            for key, entries in buckets.items():
+                pad_to = (key[2], key[5])
+                for i in range(0, len(entries), self.cfg.max_batch):
+                    chunk = entries[i:i + self.cfg.max_batch]
+                    # pad the chunk to the next power of two (≤ max_batch)
+                    # with copies of its last problem: the jit cache keys on
+                    # the batch dim, so this bounds compiles to log2(max_batch)
+                    # variants per bucket instead of one per flush size.
+                    b = 1
+                    while b < len(chunk):
+                        b *= 2
+                    b = min(b, self.cfg.max_batch)
+                    probs = ([p for _, p in chunk]
+                             + [chunk[-1][1]] * (b - len(chunk)))
+                    solved = entropic_gw_batch(probs, self.cfg.solver,
+                                               pad_to=pad_to)
+                    for (rid, _), res in zip(chunk, solved):
+                        results[rid] = res
+                        done.add(rid)
+        finally:
+            # only drop what actually solved — a bad request must not
+            # destroy the rest of the queue
+            self._queue = [(rid, p) for rid, p in self._queue
+                           if rid not in done]
+        return results
+
+    def solve(self, problems, pad_to=None) -> list[GWResult]:
+        """Direct batched solve (no queue) — thin passthrough."""
+        return entropic_gw_batch(problems, self.cfg.solver, pad_to=pad_to)

@@ -1,0 +1,62 @@
+"""Property-test shim: real `hypothesis` when installed, deterministic
+parametrized fallback when not.
+
+The container policy forbids installing packages, so test modules import
+
+    from _prop import given, settings, st
+
+instead of `from hypothesis import ...`.  With hypothesis present these are
+the genuine articles (full shrinking/fuzzing).  Without it, `st.integers`
+returns a range description and `given` expands into a fixed
+`pytest.mark.parametrize` sweep of `FALLBACK_EXAMPLES` draws from a seeded
+RNG — deterministic, so failures are reproducible, and the suite always
+collects.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+FALLBACK_EXAMPLES = 10
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _IntRange:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntRange:
+            return _IntRange(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """No-op stand-in for hypothesis.settings(...)."""
+        return lambda fn: fn
+
+    def given(**strategies):
+        """Deterministic sweep: the first draw is every range's low end
+        (hypothesis-style boundary case), the rest are seeded-random."""
+        names = sorted(strategies)
+
+        def deco(fn):
+            rng = random.Random(0xF6C)
+            cases = [tuple(strategies[n].lo for n in names)]
+            cases += [tuple(strategies[n].draw(rng) for n in names)
+                      for _ in range(FALLBACK_EXAMPLES - 1)]
+            if len(names) == 1:
+                # parametrize with one argname takes scalars, not 1-tuples
+                cases = [c[0] for c in cases]
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco

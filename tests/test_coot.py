@@ -52,9 +52,9 @@ def test_coot_gw_specialization_fgc_matches_dense():
     # 1e-8 value reflects that, still far inside solver tolerance
     assert float(jnp.linalg.norm(ps_f - ps_d)) < 1e-5
     assert abs(float(v_f - v_d)) < 1e-8
-    from repro.core.coot import _bilinear
+    from repro.core.gradient import bilinear_product
     pv = args[2][:, None] * args[3][None, :] * 0 + \
         args[4].sum() * args[2][:, None] * args[3][None, :]
-    b1 = _bilinear(x, pv, y, gx, gy, "cumsum")
-    b2 = _bilinear(x, pv, y, None, None, "cumsum")
+    b1 = bilinear_product(x, pv, y, gx, gy, "cumsum")
+    b2 = bilinear_product(x, pv, y, None, None, "cumsum")
     assert float(jnp.max(jnp.abs(b1 - b2))) < 1e-12

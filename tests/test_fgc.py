@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import fgc
 
@@ -80,6 +80,56 @@ def test_property_linearity(seed):
     rhs = (a * fgc.apply_abs_power(x, 0, 2, "scan")
            + b * fgc.apply_abs_power(y, 0, 2, "scan"))
     np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [2, 7, 16, 33, 64, 101])
+@pytest.mark.parametrize("p", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_dtilde_matches_dense_oracle(n, p, backend):
+    """Fused single-sweep D̃ backends vs the explicit lo + lo.T oracle,
+    p ∈ {0..4}, odd and even N (f64)."""
+    x = jnp.asarray(RNG.normal(size=(n, 2)))
+    if p == 0:
+        want = np.ones((n, n)) @ np.asarray(x)     # 0^0 := 1 on the diagonal
+    else:
+        lo = np.asarray(fgc.lower_toeplitz(n, p))
+        want = (lo + lo.T) @ np.asarray(x)
+    got = np.asarray(fgc.apply_abs_power(x, 0, p, backend))
+    np.testing.assert_allclose(got, want, rtol=1e-9,
+                               atol=1e-9 * max(1.0, float(n) ** p))
+
+
+@pytest.mark.parametrize("p", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_dtilde_f32(p, backend):
+    """Acceptance tolerance: fused D̃ within 1e-5 rtol of dense in f32."""
+    x = jnp.asarray(RNG.normal(size=(200, 4)), dtype=jnp.float32)
+    want = np.asarray(fgc.apply_abs_power(x, 0, p, "dense"))
+    got = np.asarray(fgc.apply_abs_power(x, 0, p, backend))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-5 * np.abs(want).max())
+
+
+def test_fused_scan_is_single_sweep():
+    """The fused scan backend must lower to exactly ONE lax.scan (the
+    bidirectional sweep), not the historical L-pass + flip/L/flip pass."""
+    x = jnp.asarray(RNG.normal(size=(33, 2)))
+    jaxpr = jax.make_jaxpr(lambda v: fgc.apply_abs_power(v, 0, 2, "scan"))(x)
+    scans = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 1, jaxpr
+
+
+def test_fused_matches_two_pass():
+    """Fused D̃ must equal the explicit L + Lᵀ composition per backend."""
+    x = jnp.asarray(RNG.normal(size=(47, 3)))
+    for p in (1, 2, 3):
+        for backend in ("scan", "cumsum"):
+            fused = fgc.apply_abs_power(x, 0, p, backend)
+            two = (fgc.apply_L(x, 0, p, backend)
+                   + fgc.apply_LT(x, 0, p, backend))
+            np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                                       rtol=1e-9, atol=1e-9 * 47.0 ** p)
 
 
 def test_flops_estimate_matches_paper():
