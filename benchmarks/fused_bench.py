@@ -90,8 +90,10 @@ def main():
                                          / "BENCH_fused.json"))
     ap.add_argument("--quick", action="store_true",
                     help="small sizes for CI smoke")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --quick (CI executes the perf path)")
     args = ap.parse_args()
-    if args.quick:
+    if args.quick or args.smoke:
         dt = bench_dtilde(ns=(256, 1024), ps=(1, 2), b=16)
         bs = bench_batched(sizes=((32, 40), (40, 32), (24, 36), (40, 40)))
     else:

@@ -4,15 +4,23 @@ Public API:
   fgc            — L/Lᵀ/|i−j|^p applies (scan|cumsum|dense|pallas backends,
                    fused single-sweep D̃)
   grids          — Grid1D / Grid2D geometries + gw_product (D_X Γ D_Y)
-  gradient       — GradientOperator: the gradient pieces shared by all solvers
+  geometry       — the Geometry interface: GridGeometry (FGC),
+                   LowRankGeometry (O(N·r) factored costs),
+                   PointCloudGeometry (dense fallback + to_low_rank),
+                   DenseGeometry (explicit matrices)
+  gradient       — GradientOperator: the gradient pieces shared by all
+                   solvers, dispatched through the Geometry interface
   sinkhorn       — log/kernel/unbalanced Sinkhorn
-  gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers, FGC-accelerated;
+  gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers over any geometry;
                    entropic_gw_batch solves many problems in one vmapped call
   barycenter     — fixed-support GW barycenter
   losses         — FGW sequence/patch alignment losses for LM training
 """
-from repro.core import (fgc, gradient, grids, sinkhorn, gw, fgw, ugw,
-                        barycenter, losses, coot)
+from repro.core import (fgc, geometry, gradient, grids, sinkhorn, gw, fgw,
+                        ugw, barycenter, losses, coot)
+from repro.core.geometry import (DenseGeometry, Geometry, GridGeometry,
+                                 LowRankGeometry, PointCloudGeometry,
+                                 as_geometry)
 from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
 from repro.core.gw import (GWConfig, GWResult, entropic_gw,
@@ -23,8 +31,10 @@ from repro.core.barycenter import BarycenterConfig, gw_barycenter
 from repro.core.losses import AlignConfig, fgw_alignment_loss
 
 __all__ = [
-    "fgc", "gradient", "grids", "sinkhorn", "gw", "fgw", "ugw",
+    "fgc", "geometry", "gradient", "grids", "sinkhorn", "gw", "fgw", "ugw",
     "barycenter", "losses", "GradientOperator",
+    "Geometry", "GridGeometry", "LowRankGeometry", "PointCloudGeometry",
+    "DenseGeometry", "as_geometry",
     "Grid1D", "Grid2D", "gw_product", "gw_product_dense",
     "GWConfig", "GWResult", "entropic_gw", "entropic_gw_batch", "gw_energy",
     "FGWConfig", "entropic_fgw", "fgw_energy",

@@ -1,14 +1,17 @@
 """Fixed-support entropic GW barycenter (Peyré et al. 2016, §conclusion of the
 paper: FGC "can be used to accelerate ... fixed support GW barycenter").
 
-Given S input measures on uniform grids (D_s structured) and barycenter
-weights λ_s, alternate:
+Given S input measures with structured geometries (grids, low-rank, point
+clouds — anything implementing `repro.core.geometry.Geometry`) and
+barycenter weights λ_s, alternate:
   1. for each s: solve entropic GW between the current barycenter matrix D̄
-     (dense) and grid s — the gradient term is D̄ Γ_s D_s, whose *grid side*
-     FGC accelerates to O(N²) (the D̄ side remains a dense matmul; see
-     DESIGN.md — the barycenter update itself is cubic, the per-iteration
-     grid-side products are quadratic).
-  2. D̄ ← (1/μ̄μ̄ᵀ) Σ_s λ_s Γ_s D_s Γ_sᵀ, with D_s Γ_sᵀ computed by FGC.
+     and geometry s.  The D̄ side is just another geometry — a
+     `DenseGeometry` — so the plan solve is the ordinary
+     `GradientOperator` mirror descent: its gradient term D̄ Γ_s D_s gets
+     the structured apply on the s side (FGC O(N²) for grids, O(N·r) for
+     low-rank) while the D̄ side stays a dense matmul (the barycenter
+     update itself is cubic; see DESIGN.md).
+  2. D̄ ← (1/μ̄μ̄ᵀ) Σ_s λ_s Γ_s D_s Γ_sᵀ, with D_s Γ_sᵀ via the fast apply.
 """
 from __future__ import annotations
 
@@ -19,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.grids import Grid
+from repro.core.geometry import DenseGeometry, as_geometry
+from repro.core.gradient import GradientOperator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,19 +35,16 @@ class BarycenterConfig:
     backend: str = "cumsum"
 
 
-def _gw_plan_mixed(dbar, grid_s: Grid, mu, nu_s, cfg: BarycenterConfig,
+def _gw_plan_mixed(dbar, geom_s, mu, nu_s, cfg: BarycenterConfig,
                    gamma0, f0, g0):
-    """Entropic GW between dense D̄ (support of barycenter) and a grid."""
-    dbar2_mu = (dbar ** 2) @ mu
-    dy2_nu = grid_s.apply_dist(nu_s, 0, power_mult=2, backend=cfg.backend)
-    c1 = 2.0 * (dbar2_mu[:, None] + dy2_nu[None, :])
+    """Entropic GW between dense D̄ (support of barycenter) and geometry s."""
+    op = GradientOperator(DenseGeometry(dbar), geom_s, cfg.backend)
+    c1, _, _ = op.constant_term(mu, nu_s)
     skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters)
 
     def outer(carry, _):
         gamma, f, g = carry
-        right = grid_s.apply_dist(gamma, axis=1, backend=cfg.backend)  # Γ D_s
-        grad = c1 - 4.0 * (dbar @ right)
-        gamma, f, g, _ = sk.solve(grad, mu, nu_s, skcfg, f, g)
+        gamma, f, g, _ = sk.solve(op.grad(gamma, c1), mu, nu_s, skcfg, f, g)
         return (gamma, f, g), ()
 
     (gamma, f, g), _ = jax.lax.scan(outer, (gamma0, f0, g0), None,
@@ -51,10 +52,15 @@ def _gw_plan_mixed(dbar, grid_s: Grid, mu, nu_s, cfg: BarycenterConfig,
     return gamma, f, g
 
 
-def gw_barycenter(grids: Sequence[Grid], measures: Sequence[jax.Array],
+def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],
                   weights: Sequence[float], mu_bar,
                   cfg: BarycenterConfig = BarycenterConfig(), dbar0=None):
-    """Returns (D̄, plans). ``mu_bar``: barycenter weights (fixed support)."""
+    """Returns (D̄, plans). ``mu_bar``: barycenter weights (fixed support).
+
+    ``grids``: per-input geometries — raw Grid1D/Grid2D (adapted with
+    ``cfg.backend``) or any Geometry.
+    """
+    geoms = [as_geometry(g, cfg.backend).materialize() for g in grids]
     m = mu_bar.shape[0]
     lam = jnp.asarray(weights, mu_bar.dtype)
     lam = lam / lam.sum()
@@ -71,13 +77,13 @@ def gw_barycenter(grids: Sequence[Grid], measures: Sequence[jax.Array],
     for _ in range(cfg.outer_iters):
         new_states = []
         acc = jnp.zeros_like(dbar)
-        for (grid_s, nu_s, lam_s, (gamma0, f0, g0)) in zip(
-                grids, measures, lam, states):
-            gamma, f, g = _gw_plan_mixed(dbar, grid_s, mu_bar, nu_s, cfg,
+        for (geom_s, nu_s, lam_s, (gamma0, f0, g0)) in zip(
+                geoms, measures, lam, states):
+            gamma, f, g = _gw_plan_mixed(dbar, geom_s, mu_bar, nu_s, cfg,
                                          gamma0, f0, g0)
             new_states.append((gamma, f, g))
-            # Γ_s D_s via FGC, then dense Γ_s D_s Γ_sᵀ
-            gds = grid_s.apply_dist(gamma, axis=1, backend=cfg.backend)
+            # Γ_s D_s via the structured apply, then dense Γ_s D_s Γ_sᵀ
+            gds = geom_s.apply_dist(gamma, axis=1)
             acc = acc + lam_s * (gds @ gamma.T)
         dbar = acc / (mu_bar[:, None] * mu_bar[None, :])
         states = new_states

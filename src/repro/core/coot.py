@@ -27,8 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.gradient import bilinear_product
-from repro.core.grids import Grid
+from repro.core.gradient import GeometryLike, bilinear_product
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +41,15 @@ class COOTConfig:
 
 def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                   cfg: COOTConfig = COOTConfig(),
-                  grid_x: Optional[Grid] = None,
-                  grid_y: Optional[Grid] = None):
+                  grid_x: Optional[GeometryLike] = None,
+                  grid_y: Optional[GeometryLike] = None):
     """Returns (pi_samples, pi_features, value).
 
     mu_s/nu_s: sample marginals (n,), (m); mu_v/nu_v: feature marginals.
-    ``grid_x``/``grid_y``: pass the grids when X/Y are |i−j|^k distance
-    matrices on uniform grids to enable the FGC product (GW specialization).
+    ``grid_x``/``grid_y``: pass the grids (or any structured Geometry) when
+    X/Y are themselves structured distance matrices — e.g. |i−j|^k on a
+    uniform grid, or a low-rank factorization — to switch those products to
+    the fast apply (GW specialization).
     """
     x2 = x * x
     y2 = y * y

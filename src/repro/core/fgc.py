@@ -56,6 +56,12 @@ import jax.numpy as jnp
 BACKENDS = ("scan", "cumsum", "blocked", "dense", "pallas")
 
 
+def default_float(dtype=None):
+    """Context-derived float dtype: honors the x64 flag instead of silently
+    downcasting a hard-wired float64 request (see kernels/ops.py)."""
+    return jnp.result_type(float) if dtype is None else dtype
+
+
 def pascal_matrix(p: int, dtype=jnp.float32):
     """(p+1)×(p+1) lower-triangular binomial matrix P[r,s] = C(r,s)."""
     m = [[math.comb(r, s) if s <= r else 0 for s in range(p + 1)]
@@ -63,8 +69,10 @@ def pascal_matrix(p: int, dtype=jnp.float32):
     return jnp.array(m, dtype=dtype)
 
 
-def lower_toeplitz(n: int, p: int, dtype=jnp.float64):
-    """Dense L with L[i,j] = (i-j)^p for i>j, else 0."""
+def lower_toeplitz(n: int, p: int, dtype=None):
+    """Dense L with L[i,j] = (i-j)^p for i>j, else 0 (dtype=None: derived
+    via default_float)."""
+    dtype = default_float(dtype)
     idx = jnp.arange(n, dtype=dtype)
     diff = idx[:, None] - idx[None, :]
     return jnp.where(diff > 0, diff ** p, jnp.zeros((), dtype))

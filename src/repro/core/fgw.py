@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.gradient import GradientOperator
-from repro.core.grids import Grid
+from repro.core.gradient import GeometryLike, GradientOperator
 from repro.core.gw import GWConfig, GWResult
 
 
@@ -24,22 +23,25 @@ class FGWConfig(GWConfig):
     theta: float = 0.5         # paper §4.1/§4.3 use θ=0.5; §4.4.1 θ=0.1
 
 
-def fgw_energy(grid_x: Grid, grid_y: Grid, feature_cost, gamma, theta,
+def fgw_energy(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
+               gamma, theta,
                backend: str = "cumsum"):
     lin = jnp.sum((feature_cost ** 2) * gamma)
     quad = GradientOperator(grid_x, grid_y, backend).energy(gamma)
     return (1.0 - theta) * lin + theta * quad
 
 
-def entropic_fgw(grid_x: Grid, grid_y: Grid, feature_cost, mu, nu,
+def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
+                 mu, nu,
                  cfg: FGWConfig = FGWConfig(), gamma0=None) -> GWResult:
-    """``feature_cost``: (M,N) linear-term cost matrix C (paper's c_ip)."""
+    """``feature_cost``: (M,N) linear-term cost matrix C (paper's c_ip).
+    ``grid_x``/``grid_y``: Grids or any Geometry (grid/low-rank/point-cloud/
+    dense) — see repro.core.geometry."""
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     theta = cfg.theta
     c1, _, _ = op.constant_term(mu, nu)
     c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
-    f = jnp.zeros_like(mu)
-    g = jnp.zeros_like(nu)
+    f, g = sk.zero_mass_potentials(mu, nu)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
     skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters,
                               mode=cfg.sinkhorn_mode)

@@ -1,0 +1,410 @@
+"""Geometry abstraction: one gradient engine over grid (FGC), low-rank, and
+dense point-cloud costs.
+
+Every GW-family solver in this repo needs exactly one capability from a
+metric space: "apply my (elementwise-powered) distance matrix to a batch of
+vectors fast".  The paper's FGC trick provides it in O(k²N) for uniform
+grids; Scetbon et al. (2021, *Linear-Time Gromov-Wasserstein Distances using
+Low Rank Couplings and Costs*) provide it in O(N·r) for factored costs
+D = A Bᵀ; everything else falls back to the dense O(N²) matvec.  `Geometry`
+is that capability as an interface:
+
+  size                  number of support points N
+  spec                  static hashable key (class/shape/static params) —
+                        the jit/bucket cache key; contains NO traced values
+  cost_rank             rank r of the factored cost, or None (unfactored)
+  apply_dist(x, axis, power_mult)
+                        y = D^{⊙power_mult} ·_axis x  (power_mult=2 gives the
+                        squared-distance apply needed by the C1 term).  The
+                        contraction is against D's SECOND index along every
+                        axis (axis 0: D x; axis 1: x Dᵀ) — distance matrices
+                        are symmetric, so supply symmetric costs (or a
+                        symmetric factorization) for the GW formulas.
+  dist_matrix(power_mult, dtype)
+                        the dense matrix (oracle / dense fallback)
+
+Implementations
+---------------
+``GridGeometry``        wraps Grid1D/Grid2D; keeps the FGC scan/cumsum/
+                        blocked/Pallas backends (backend is part of the spec).
+``LowRankGeometry``     factors (A, B) with D = A Bᵀ; D^{⊙p} = Ap Bpᵀ with
+                        the Khatri-Rao p-th power factors (rank r^p), so the
+                        C1 term's D∘D is rank r² — applies are O(N·r^p·batch).
+``PointCloudGeometry``  raw points, metric sqeuclidean|euclidean; dense
+                        apply, plus `.to_low_rank(r)` conversion (exact rank
+                        d+2 factorization for squared Euclidean, truncated
+                        SVD otherwise).
+``DenseGeometry``       an explicit cost matrix (the barycenter's D̄ side).
+
+All geometries are pytrees: traced data (h, factors, points, cost) are
+leaves; `spec` is the aux data.  That makes batching uniform — pad each
+problem's geometry to the bucket size with `pad_to(n)` (zero-mass padding,
+exact under log-domain Sinkhorn), `jnp.stack` the leaves, and `jax.vmap`
+over the stacked geometry pytree; the jit cache then keys on the spec, so a
+ragged request stream compiles once per bucket, not once per shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fgc import default_float as _default_float
+from repro.core.grids import Grid1D, Grid2D
+
+
+def _matrix_apply(mat, x, axis):
+    """y = mat ·_axis x for a dense (N, N) matrix."""
+    axis = axis % x.ndim
+    y = jnp.tensordot(mat, jnp.moveaxis(x, axis, 0), axes=1)
+    return jnp.moveaxis(y, 0, axis)
+
+
+def _ones_apply(x, axis):
+    """D^{⊙0} = J (all-ones): matches fgc.apply_abs_power's 0^0 := 1."""
+    return jnp.sum(x, axis=axis, keepdims=True) * jnp.ones_like(x)
+
+
+def _powered(d, power_mult: int):
+    """D^{⊙p} for a materialized matrix (p=0 → J, p=1 → D unchanged)."""
+    if power_mult == 0:
+        return jnp.ones_like(d)
+    return d if power_mult == 1 else d ** power_mult
+
+
+class Geometry:
+    """Interface base — see module docstring.  Subclasses are frozen
+    dataclasses registered as pytrees with `spec` as static aux data."""
+
+    #: zero-mass padding to a larger size is exact for this geometry
+    paddable: bool = True
+
+    @property
+    def size(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def spec(self) -> tuple:
+        """Static hashable identity (class + shapes + static params)."""
+        raise NotImplementedError
+
+    @property
+    def cost_rank(self):
+        """Rank of the factored cost, or None when the apply is unfactored
+        (dense or grid-structured)."""
+        return None
+
+    def batch_key(self) -> tuple:
+        """`spec` minus the size dimension(s) a bucket may pad — problems
+        sharing a batch_key can ride one vmapped executable."""
+        return self.spec if not self.paddable else self.spec_unsized()
+
+    def spec_unsized(self) -> tuple:
+        raise NotImplementedError
+
+    def apply_dist(self, x, axis: int = 0, power_mult: int = 1):
+        """Default: the universal dense fallback through dist_matrix.
+        Structured geometries (grid, low-rank) override with their fast
+        applies."""
+        if power_mult == 0:
+            return _ones_apply(x, axis % x.ndim)
+        return _matrix_apply(self.dist_matrix(power_mult, x.dtype), x, axis)
+
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        raise NotImplementedError
+
+    def materialize(self) -> "Geometry":
+        """An equivalent geometry whose apply does no per-call matrix
+        construction — what solvers should hold across their iteration
+        loops.  Structured geometries return themselves; point clouds
+        trade their O(N²d) per-apply gram construction for one explicit
+        matrix."""
+        return self
+
+    def pad_to(self, n: int) -> "Geometry":
+        """Same geometry embedded in ``n`` points; the extra points carry
+        zero mass downstream, which log-domain Sinkhorn treats exactly."""
+        raise NotImplementedError
+
+
+def as_geometry(obj, backend: str = "cumsum") -> Geometry:
+    """Adapter: Grid1D/Grid2D become GridGeometry (with the given FGC
+    backend); Geometry instances pass through unchanged."""
+    if isinstance(obj, Geometry):
+        return obj
+    if isinstance(obj, (Grid1D, Grid2D)):
+        return GridGeometry(obj, backend)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a Geometry")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GridGeometry(Geometry):
+    """Uniform-grid metric (the paper's structure): FGC applies in O(k²N).
+
+    ``backend`` selects the FGC implementation (scan|cumsum|blocked|pallas)
+    or the dense oracle ("dense" multiplies by the explicit matrix); it is
+    part of the spec, so switching backend recompiles rather than retraces
+    into the wrong kernel.
+    """
+
+    grid: Grid1D | Grid2D
+    backend: str = "cumsum"
+
+    @property
+    def size(self) -> int:
+        return self.grid.size
+
+    @property
+    def spec(self) -> tuple:
+        g = self.grid
+        return ("grid", type(g).__name__, g.n, g.k, self.backend)
+
+    def spec_unsized(self) -> tuple:
+        g = self.grid
+        return ("grid", type(g).__name__, g.k, self.backend)
+
+    @property
+    def paddable(self) -> bool:
+        # Grid2D's Kronecker unfolding owns the grid axis: zero-padding the
+        # flattened axis is not expressible, so 2D buckets are exact-size.
+        return isinstance(self.grid, Grid1D)
+
+    def apply_dist(self, x, axis: int = 0, power_mult: int = 1):
+        if self.backend == "dense":   # explicit-matrix oracle path
+            return Geometry.apply_dist(self, x, axis, power_mult)
+        return self.grid.apply_dist(x, axis=axis, power_mult=power_mult,
+                                    backend=self.backend)
+
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        return self.grid.dist_matrix(power_mult, dtype=dtype)
+
+    def pad_to(self, n: int) -> "GridGeometry":
+        g = self.grid
+        if n == g.size:
+            return self
+        if not isinstance(g, Grid1D):
+            raise ValueError("Grid2D geometries cannot be padded")
+        return GridGeometry(Grid1D(n, g.h, g.k), self.backend)
+
+    def tree_flatten(self):
+        g = self.grid
+        return (g.h,), (type(g), g.n, g.k, self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        grid_cls, n, k, backend = aux
+        (h,) = children
+        return cls(grid_cls(n, h, k), backend)
+
+
+def _khatri_rao_power(m, p: int):
+    """Row-wise Kronecker p-th power: out[i] = m[i] ⊗ ... ⊗ m[i] (p times),
+    so (A Bᵀ)^{⊙p} = Ap Bpᵀ — the elementwise power of a rank-r factorization
+    is a rank-r^p factorization."""
+    n = m.shape[0]
+    out = m
+    for _ in range(p - 1):
+        out = (out[:, :, None] * m[:, None, :]).reshape(n, -1)
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LowRankGeometry(Geometry):
+    """Factored cost D = A Bᵀ (A, B: (N, r)) — O(N·r) applies (Scetbon et
+    al. 2021).  ``power_mult=p`` uses the Khatri-Rao power factors (rank
+    r^p), so the C1 term's squared distances cost O(N·r²) instead of O(N²).
+
+    D should be symmetric (a distance/cost matrix) for the GW gradient
+    formulas; the factors themselves need not be equal.
+    """
+
+    a: jax.Array
+    b: jax.Array
+
+    def __post_init__(self):
+        if self.a.ndim != 2 or self.a.shape != self.b.shape:
+            raise ValueError(
+                f"factors must be matching (N, r): {self.a.shape} vs "
+                f"{self.b.shape}")
+
+    @property
+    def size(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.a.shape[1]
+
+    @property
+    def cost_rank(self):
+        return self.rank
+
+    @property
+    def spec(self) -> tuple:
+        return ("lowrank", self.size, self.rank)
+
+    def spec_unsized(self) -> tuple:
+        return ("lowrank", self.rank)
+
+    def apply_dist(self, x, axis: int = 0, power_mult: int = 1):
+        if power_mult == 0:
+            return _ones_apply(x, axis % x.ndim)
+        ap = _khatri_rao_power(self.a, power_mult).astype(x.dtype)
+        bp = _khatri_rao_power(self.b, power_mult).astype(x.dtype)
+        axis = axis % x.ndim
+        x2 = jnp.moveaxis(x, axis, 0)
+        y2 = jnp.tensordot(ap, jnp.tensordot(bp.T, x2, axes=1), axes=1)
+        return jnp.moveaxis(y2, 0, axis)
+
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        d = (self.a @ self.b.T).astype(_default_float(dtype))
+        return _powered(d, power_mult)
+
+    def pad_to(self, n: int) -> "LowRankGeometry":
+        if n == self.size:
+            return self
+        pad = ((0, n - self.size), (0, 0))
+        return LowRankGeometry(jnp.pad(self.a, pad), jnp.pad(self.b, pad))
+
+    def tree_flatten(self):
+        return (self.a, self.b), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        object.__setattr__(obj, "a", children[0])
+        object.__setattr__(obj, "b", children[1])
+        return obj
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PointCloudGeometry(Geometry):
+    """Raw points (N, d) with pairwise metric sqeuclidean|euclidean.
+
+    The apply is dense O(N²) — this is the universal fallback that makes
+    arbitrary point clouds servable at all; `.to_low_rank(r)` trades it for
+    the O(N·r) factored apply (exact at rank d+2 for squared Euclidean,
+    truncated SVD otherwise).
+    """
+
+    points: jax.Array
+    metric: str = "sqeuclidean"
+
+    def __post_init__(self):
+        if self.metric not in ("sqeuclidean", "euclidean"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        if self.points.ndim != 2:
+            raise ValueError("points must be (N, d)")
+
+    @property
+    def size(self) -> int:
+        return self.points.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.points.shape[1]
+
+    @property
+    def spec(self) -> tuple:
+        return ("pointcloud", self.size, self.dim, self.metric)
+
+    def spec_unsized(self) -> tuple:
+        return ("pointcloud", self.dim, self.metric)
+
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        pts = self.points.astype(_default_float(dtype))
+        sq = jnp.sum(pts ** 2, axis=1)
+        d = sq[:, None] + sq[None, :] - 2.0 * (pts @ pts.T)
+        d = jnp.maximum(d, 0.0)
+        if self.metric == "euclidean":
+            d = jnp.sqrt(d)
+        return _powered(d, power_mult)
+
+    def materialize(self) -> "DenseGeometry":
+        # solvers apply the cost inside iteration loops: hand them the
+        # explicit matrix so the O(N²d) gram construction happens once per
+        # solve, not once per loop step (XLA's loop-invariant hoisting out
+        # of scan bodies is not guaranteed, especially under vmap)
+        return DenseGeometry(self.dist_matrix(dtype=self.points.dtype))
+
+    def pad_to(self, n: int) -> "PointCloudGeometry":
+        if n == self.size:
+            return self
+        return PointCloudGeometry(
+            jnp.pad(self.points, ((0, n - self.size), (0, 0))), self.metric)
+
+    def to_low_rank(self, r: int | None = None) -> LowRankGeometry:
+        """Factor D ≈ A Bᵀ.  Squared Euclidean with ``r=None`` uses the
+        exact rank-(d+2) identity
+            ‖x_i−x_j‖² = [‖x_i‖², 1, −2x_i] · [1, ‖x_j‖², x_j]ᵀ;
+        otherwise a truncated SVD of the dense matrix (rank r required)."""
+        if self.metric == "sqeuclidean" and r is None:
+            pts = self.points
+            sq = jnp.sum(pts ** 2, axis=1, keepdims=True)
+            one = jnp.ones_like(sq)
+            a = jnp.concatenate([sq, one, -2.0 * pts], axis=1)
+            b = jnp.concatenate([one, sq, pts], axis=1)
+            return LowRankGeometry(a, b)
+        if r is None:
+            raise ValueError("euclidean to_low_rank requires an explicit r")
+        u, s, vt = jnp.linalg.svd(self.dist_matrix(), full_matrices=False)
+        root = jnp.sqrt(s[:r])
+        return LowRankGeometry(u[:, :r] * root[None, :],
+                               vt[:r].T * root[None, :])
+
+    def tree_flatten(self):
+        return (self.points,), (self.metric,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        object.__setattr__(obj, "points", children[0])
+        object.__setattr__(obj, "metric", aux[0])
+        return obj
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DenseGeometry(Geometry):
+    """An explicit (N, N) cost matrix — e.g. the GW barycenter's evolving
+    support matrix D̄, or any precomputed distance matrix."""
+
+    cost: jax.Array
+
+    def __post_init__(self):
+        if self.cost.ndim != 2 or self.cost.shape[0] != self.cost.shape[1]:
+            raise ValueError("cost must be square (N, N)")
+
+    @property
+    def size(self) -> int:
+        return self.cost.shape[0]
+
+    @property
+    def spec(self) -> tuple:
+        return ("dense", self.size)
+
+    def spec_unsized(self) -> tuple:
+        return ("dense",)
+
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        d = self.cost.astype(_default_float(dtype))
+        return _powered(d, power_mult)
+
+    def pad_to(self, n: int) -> "DenseGeometry":
+        if n == self.size:
+            return self
+        p = n - self.size
+        return DenseGeometry(jnp.pad(self.cost, ((0, p), (0, p))))
+
+    def tree_flatten(self):
+        return (self.cost,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        object.__setattr__(obj, "cost", children[0])
+        return obj

@@ -5,70 +5,86 @@ Every FGC-amenable solver builds its mirror-descent cost from three pieces
 (paper §2-3):
 
   product(Γ)        the bottleneck term D_X Γ D_Y — O(k²MN) via FGC,
-                    O(M²N + MN²) dense,
+                    O((M+N)r) low-rank, O(M²N + MN²) dense,
   constant_term     C1 = 2((D_X∘D_X)μ 1ᵀ + 1((D_Y∘D_Y)ν)ᵀ),
   energy(Γ)         E(Γ) = Σ (d^X_ij − d^Y_pq)² γ_ip γ_jq via the
                     three-term expansion.
 
-`GradientOperator` bundles a (grid_x, grid_y, backend) triple and exposes
-exactly those pieces; `bilinear_product` is the COOT generalization where
-either side may be an unstructured data matrix instead of a grid.
+`GradientOperator` bundles a geometry pair and dispatches every piece
+through the `Geometry` interface (repro.core.geometry) — grid/FGC,
+low-rank, point-cloud, and dense costs all ride the same code path; raw
+Grid1D/Grid2D arguments are adapted with the given FGC ``backend`` so
+pre-geometry call sites keep working.  `bilinear_product` is the COOT
+generalization where either side may be an unstructured data matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
-from repro.core.grids import Grid, gw_product, gw_product_dense
+from repro.core.geometry import Geometry, as_geometry
+from repro.core.grids import Grid
+
+GeometryLike = Union[Geometry, Grid]
 
 
-def bilinear_product(x, pi, y, grid_x: Optional[Grid], grid_y: Optional[Grid],
+def bilinear_product(x, pi, y, grid_x: Optional[GeometryLike],
+                     grid_y: Optional[GeometryLike],
                      backend: str = "cumsum"):
-    """X π Yᵀ with the FGC fast apply on any grid-structured side.
+    """X π Yᵀ with the structured fast apply on any geometry-backed side.
 
-    ``x``/``y`` are dense data matrices used only when the corresponding grid
-    is None (COOT's general case); a Grid on either side switches that factor
-    to the O(k²·size) structured apply.
+    ``x``/``y`` are dense data matrices used only when the corresponding
+    side is None (COOT's general case); a Grid or Geometry on either side
+    switches that factor to its structured apply.
     """
     if grid_x is not None:
-        left = grid_x.apply_dist(pi, axis=0, backend=backend)    # X π
+        left = as_geometry(grid_x, backend).apply_dist(pi, axis=0)   # X π
     else:
         left = x @ pi
     if grid_y is not None:
-        return grid_y.apply_dist(left, axis=1, backend=backend)  # (·) Yᵀ
+        return as_geometry(grid_y, backend).apply_dist(left, axis=1)
     return left @ y.T
 
 
 @dataclasses.dataclass(frozen=True)
 class GradientOperator:
-    """GW gradient pieces for a fixed geometry pair + FGC backend."""
+    """GW gradient pieces for a fixed geometry pair.
 
-    grid_x: Grid
-    grid_y: Grid
+    ``backend`` only matters when a raw Grid is passed (it selects the FGC
+    implementation for the adapter); Geometry arguments carry their own
+    dispatch and ignore it.
+    """
+
+    geom_x: GeometryLike
+    geom_y: GeometryLike
     backend: str = "cumsum"
+
+    def __post_init__(self):
+        # materialize(): solvers call these applies inside iteration loops,
+        # so point-cloud costs become one explicit matrix per solve instead
+        # of a per-apply gram construction
+        object.__setattr__(self, "geom_x",
+                           as_geometry(self.geom_x, self.backend)
+                           .materialize())
+        object.__setattr__(self, "geom_y",
+                           as_geometry(self.geom_y, self.backend)
+                           .materialize())
 
     def product(self, gamma):
         """D_X Γ D_Y — the paper's bottleneck term."""
-        if self.backend == "dense":
-            return gw_product_dense(self.grid_x, self.grid_y, gamma)
-        return gw_product(self.grid_x, self.grid_y, gamma,
-                          backend=self.backend)
+        left = self.geom_x.apply_dist(gamma, axis=0)       # D_X Γ
+        return self.geom_y.apply_dist(left, axis=1)        # (D_X Γ) D_Y
 
     def apply_sq_x(self, vec):
-        """(D_X ∘ D_X) v — squared distances are the same grid structure with
-        power 2k, so FGC applies unchanged."""
-        if self.backend == "dense":
-            return self.grid_x.dist_matrix(2, vec.dtype) @ vec
-        return self.grid_x.apply_dist(vec, axis=0, power_mult=2,
-                                      backend=self.backend)
+        """(D_X ∘ D_X) v — squared distances are the same structure with
+        power_mult=2 (grids: power 2k; low-rank: rank-r² Khatri-Rao
+        factors), so the fast apply survives."""
+        return self.geom_x.apply_dist(vec, axis=0, power_mult=2)
 
     def apply_sq_y(self, vec):
-        if self.backend == "dense":
-            return self.grid_y.dist_matrix(2, vec.dtype) @ vec
-        return self.grid_y.apply_dist(vec, axis=0, power_mult=2,
-                                      backend=self.backend)
+        return self.geom_y.apply_dist(vec, axis=0, power_mult=2)
 
     def constant_term(self, mu, nu):
         """C1 = 2((D_X∘D_X)μ 1ᵀ + 1((D_Y∘D_Y)ν)ᵀ) — O(k²(M+N)) via FGC.

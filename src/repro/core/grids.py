@@ -36,9 +36,11 @@ class Grid1D:
     def size(self) -> int:
         return self.n
 
-    def dist_matrix(self, power_mult: int = 1, dtype=jnp.float64):
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
+        # dtype=None derives from context (fgc.default_float) instead of
+        # hard-wiring float64, which JAX silently downcasts with x64 off.
         p = self.k * power_mult
-        idx = jnp.arange(self.n, dtype=dtype)
+        idx = jnp.arange(self.n, dtype=fgc.default_float(dtype))
         d = jnp.abs(idx[:, None] - idx[None, :]) ** p
         return (self.h ** p) * d
 
@@ -65,9 +67,9 @@ class Grid2D:
     def size(self) -> int:
         return self.n * self.n
 
-    def dist_matrix(self, power_mult: int = 1, dtype=jnp.float64):
+    def dist_matrix(self, power_mult: int = 1, dtype=None):
         p = self.k * power_mult
-        idx = jnp.arange(self.n, dtype=dtype)
+        idx = jnp.arange(self.n, dtype=fgc.default_float(dtype))
         d1 = jnp.abs(idx[:, None] - idx[None, :])
         man = d1[:, None, :, None] + d1[None, :, None, :]  # (a,b,a',b')
         d = (man ** p).reshape(self.size, self.size)

@@ -6,11 +6,19 @@ Each outer iteration:
     Γ   ← Sinkhorn(Π, μ, ν, ε)               (τ = ε, Remark 2.1)
 with warm-started log-domain potentials carried across iterations.
 
-All gradient pieces come from `repro.core.gradient.GradientOperator` (shared
-with fgw/ugw/coot).  `entropic_gw_batch` solves MANY problems in one vmapped
-program: ragged 1D sizes are zero-mass padded to a common shape, which is
-exact under log-domain Sinkhorn (padded potentials pin to −inf, the plan is
-identically 0 there), so one compilation serves a whole batch of requests.
+Either side may be any `repro.core.geometry.Geometry` — uniform grids (FGC
+applies), low-rank factored costs (O((M+N)r) applies), raw point clouds, or
+explicit dense matrices; raw Grid1D/Grid2D arguments are adapted with
+``cfg.backend``.  All gradient pieces come from
+`repro.core.gradient.GradientOperator` (shared with fgw/ugw/coot).
+
+`entropic_gw_batch` solves MANY problems in one vmapped program: every
+geometry is padded to a common bucket size with zero-mass support points
+(exact under log-domain Sinkhorn — padded potentials pin to −inf, the plan
+is identically 0 there), the padded geometries are stacked leaf-wise as
+pytrees, and ONE jit-compiled vmap serves the whole batch.  The executable
+cache keys on the geometry spec (class/padded size/static params), so a
+ragged request stream compiles once per bucket, not once per shape.
 """
 from __future__ import annotations
 
@@ -22,8 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
+from repro.core.geometry import Geometry, as_geometry
 from repro.core.gradient import GradientOperator
-from repro.core.grids import Grid, Grid1D, Grid2D
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,20 +60,23 @@ class GWResult:
         return cls(*children)
 
 
-def gw_energy(grid_x: Grid, grid_y: Grid, gamma, backend: str = "cumsum",
+def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
               dx2_mu=None, dy2_nu=None):
     """E(Γ) = Σ (d^X_ij − d^Y_pq)² γ_ip γ_jq, via the three-term expansion."""
     return GradientOperator(grid_x, grid_y, backend).energy(
         gamma, dx2_mu, dy2_nu)
 
 
-def entropic_gw(grid_x: Grid, grid_y: Grid, mu, nu,
+def entropic_gw(grid_x, grid_y, mu, nu,
                 cfg: GWConfig = GWConfig(), gamma0=None) -> GWResult:
-    """Entropic GW distance + plan. jit-compatible; differentiable by unroll."""
+    """Entropic GW distance + plan. jit-compatible; differentiable by unroll.
+
+    ``grid_x``/``grid_y``: Geometry instances, or raw Grid1D/Grid2D (adapted
+    with ``cfg.backend``).
+    """
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
-    f = jnp.zeros_like(mu)
-    g = jnp.zeros_like(nu)
+    f, g = sk.zero_mass_potentials(mu, nu)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
     skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters,
                               mode=cfg.sinkhorn_mode)
@@ -85,72 +96,92 @@ def entropic_gw(grid_x: Grid, grid_y: Grid, mu, nu,
 # batched solving: many problems, one compiled program
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("spec_x", "spec_y", "cfg"))
-def _solve_stacked(h_x, h_y, mus, nus, spec_x, spec_y, cfg: GWConfig):
-    """vmap core: specs are (grid_class, n, k) — static so the executable is
-    cached per padded shape bucket; h varies per problem (traced)."""
-    cls_x, n_x, k_x = spec_x
-    cls_y, n_y, k_y = spec_y
+@partial(jax.jit, static_argnames=("cfg",))
+def _solve_stacked(geoms_x, geoms_y, mus, nus, cfg: GWConfig):
+    """vmap core over stacked geometry pytrees.  The jit cache keys on the
+    pytree structure — i.e. each side's geometry spec (class, padded size,
+    static params) — plus leaf shapes, so one executable per bucket."""
+    def one(gx, gy, mu, nu):
+        return entropic_gw(gx, gy, mu, nu, cfg)
 
-    def one(hx, hy, mu, nu):
-        return entropic_gw(cls_x(n_x, hx, k_x), cls_y(n_y, hy, k_y),
-                           mu, nu, cfg)
-
-    return jax.vmap(one)(h_x, h_y, mus, nus)
+    return jax.vmap(one)(geoms_x, geoms_y, mus, nus)
 
 
 def _pad_to(vec, size: int):
     return jnp.pad(vec, (0, size - vec.shape[0]))
 
 
-def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
-                      pad_to: tuple[int, int] | None = None
-                      ) -> list[GWResult]:
-    """Solve a batch of GW problems ``[(grid_x, grid_y, mu, nu), ...]`` with
-    ONE vmapped solver call.
+def _stack_side(geoms: Sequence[Geometry], measures, pad: int | None):
+    """Validate one side of a batch, pad every geometry to the bucket size,
+    and stack (geometry pytrees leaf-wise, measures zero-padded)."""
+    for g, m in zip(geoms, measures):
+        if m.shape[0] != g.size:
+            raise ValueError(
+                f"measure length {m.shape[0]} != geometry size {g.size} — "
+                "bucket padding would silently absorb the mismatch")
+    keys = {g.batch_key() for g in geoms}
+    if len(keys) != 1:
+        raise ValueError(
+            "batch requires compatible geometries per side (one class and "
+            f"one set of static params); got keys {sorted(map(str, keys))}")
+    sizes = [g.size for g in geoms]
+    if not geoms[0].paddable:
+        if len(set(sizes)) != 1 or (pad is not None and pad != sizes[0]):
+            raise ValueError(
+                f"{type(geoms[0]).__name__} batches must be equal-sized")
+        n = sizes[0]
+    else:
+        n = max(sizes) if pad is None else pad
+        if n < max(sizes):
+            raise ValueError(f"pad_to={pad} < largest problem {max(sizes)}")
+    # stack with natural promotion — forcing the measures' dtype here would
+    # silently downcast f64 geometry data under f32 measures and break the
+    # batch == unbatched-solve guarantee
+    stacked_g = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(l) for l in leaves]),
+        *[g.pad_to(n) for g in geoms])
+    stacked_m = jnp.stack([_pad_to(m, n) for m in measures])
+    return stacked_g, stacked_m
 
-    Ragged sizes (Grid1D) are padded to the max (or to ``pad_to=(M, N)`` —
-    the serving path passes bucketed sizes so repeated batches reuse the same
-    compiled executable).  Padded entries carry zero mass, which the
+
+def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
+                      pad_to: tuple[int, int] | None = None,
+                      num_results: int | None = None) -> list[GWResult]:
+    """Solve a batch of GW problems ``[(geom_x, geom_y, mu, nu), ...]`` with
+    ONE vmapped solver call.  Geometries may be raw Grids (adapted with
+    ``cfg.backend``) or any Geometry — low-rank, point-cloud, dense.
+
+    Ragged sizes are padded to the max (or to ``pad_to=(M, N)`` — the
+    serving path passes bucketed sizes so repeated batches reuse the same
+    compiled executable).  Padded support points carry zero mass, which the
     log-domain Sinkhorn treats exactly (their potentials are −inf, the plan
     is 0 there), so each result matches the unbatched solve on the unpadded
-    problem.  Grids may differ in spacing ``h`` per problem but must share
-    class and exponent ``k`` per side; Grid2D problems must be equal-sized
+    problem.  Per side, geometries must share their static params (grid
+    class + exponent ``k``, low-rank rank, point dimension + metric) but may
+    differ in traced data (spacing ``h``, factors, points) and — when the
+    geometry is paddable — in size.  Grid2D problems must be equal-sized
     (the Kronecker unfolding owns the grid axis, so zero-padding the flat
     axis is not available there).
 
     Returns per-problem GWResults sliced back to their true sizes.
+    ``num_results`` limits unpacking to the first so-many problems — the
+    serving path pads chunks with duplicate problems to hit power-of-two
+    batch shapes, and skips slicing/transferring the duplicates.
     """
     if not problems:
         return []
-    gxs, gys, mus, nus = zip(*problems)
+    gxs = [as_geometry(p[0], cfg.backend) for p in problems]
+    gys = [as_geometry(p[1], cfg.backend) for p in problems]
+    mus = [p[2] for p in problems]
+    nus = [p[3] for p in problems]
 
-    def _side_spec(grids, measures, pad):
-        cls = type(grids[0])
-        ks = {g.k for g in grids}
-        if not all(type(g) is cls for g in grids) or len(ks) != 1:
-            raise ValueError("batch requires one grid class and one k per side")
-        sizes = [g.size for g in grids]
-        if cls is Grid2D:
-            if len(set(g.n for g in grids)) != 1 or (
-                    pad is not None and pad != sizes[0]):
-                raise ValueError("Grid2D batches must be equal-sized")
-            n = grids[0].n
-        else:
-            n = max(sizes) if pad is None else pad
-            if n < max(sizes):
-                raise ValueError(f"pad_to={pad} < largest problem {max(sizes)}")
-        h = jnp.asarray([g.h for g in grids], dtype=measures[0].dtype)
-        padded = jnp.stack([_pad_to(m, n if cls is Grid1D else g.size)
-                            for g, m in zip(grids, measures)])
-        return (cls, n, ks.pop()), h, padded
-
-    spec_x, h_x, mus_p = _side_spec(gxs, mus, pad_to and pad_to[0])
-    spec_y, h_y, nus_p = _side_spec(gys, nus, pad_to and pad_to[1])
-    stacked = _solve_stacked(h_x, h_y, mus_p, nus_p, spec_x, spec_y, cfg)
+    geoms_x, mus_p = _stack_side(gxs, mus, pad_to and pad_to[0])
+    geoms_y, nus_p = _stack_side(gys, nus, pad_to and pad_to[1])
+    stacked = _solve_stacked(geoms_x, geoms_y, mus_p, nus_p, cfg)
+    k = len(problems) if num_results is None else num_results
     return [
-        GWResult(plan=stacked.plan[i, :gx.size, :gy.size],
+        GWResult(plan=stacked.plan[i, :gxs[i].size, :gys[i].size],
                  value=stacked.value[i], marginal_err=stacked.marginal_err[i],
-                 f=stacked.f[i, :gx.size], g=stacked.g[i, :gy.size])
-        for i, (gx, gy) in enumerate(zip(gxs, gys))
+                 f=stacked.f[i, :gxs[i].size], g=stacked.g[i, :gys[i].size])
+        for i in range(k)
     ]

@@ -26,6 +26,20 @@ class SinkhornConfig:
     mode: str = "log"  # "log" | "kernel"
 
 
+def zero_mass_potentials(mu, nu):
+    """Initial (f, g) with −inf on zero-mass atoms — their exact value at
+    the Sinkhorn fixed point.  Starting there keeps the FIRST iteration's
+    logsumexp from seeing zero-mass (batch-padding) columns at potential 0:
+    padded support points that happen to sit near the data (point clouds
+    pad at the origin; zero low-rank factor rows pad at distance 0) would
+    otherwise perturb warm-started potentials at finite iteration counts.
+    Grid padding never tripped this only because padded grid points are far
+    away and exp(−C/ε) underflows."""
+    f = jnp.where(mu > 0, 0.0, -jnp.inf).astype(mu.dtype)
+    g = jnp.where(nu > 0, 0.0, -jnp.inf).astype(nu.dtype)
+    return f, g
+
+
 def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None):
     """Log-domain Sinkhorn. Returns (plan, f, g, err) — err = L1 row-marginal gap."""
     log_mu = jnp.log(mu)

@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.gradient import GradientOperator
-from repro.core.grids import Grid
+from repro.core.gradient import GeometryLike, GradientOperator
 from repro.core.gw import GWResult
 
 
@@ -38,9 +37,7 @@ def _kl(a, b):
     return jnp.sum(jax.scipy.special.rel_entr(a, b)) - a.sum() + b.sum()
 
 
-def local_cost(grid_x: Grid, grid_y: Grid, gamma, mu, nu, eps, rho,
-               backend: str):
-    op = GradientOperator(grid_x, grid_y, backend)
+def local_cost(op: GradientOperator, gamma, mu, nu, eps, rho):
     mu_g = gamma.sum(axis=1)
     nu_g = gamma.sum(axis=0)
     a = op.apply_sq_x(mu_g)
@@ -51,8 +48,9 @@ def local_cost(grid_x: Grid, grid_y: Grid, gamma, mu, nu, eps, rho,
     return cost
 
 
-def entropic_ugw(grid_x: Grid, grid_y: Grid, mu, nu,
+def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
                  cfg: UGWConfig = UGWConfig(), gamma0=None) -> GWResult:
+    """``grid_x``/``grid_y``: Grids or any Geometry (repro.core.geometry)."""
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
     f = jnp.zeros_like(mu)
@@ -61,8 +59,9 @@ def entropic_ugw(grid_x: Grid, grid_y: Grid, mu, nu,
     def outer(carry, _):
         gamma, f, g = carry
         mass = gamma.sum()
-        cost = local_cost(grid_x, grid_y, gamma, mu, nu, cfg.eps, cfg.rho,
-                          cfg.backend)
+        # reuse the materialized operator: rebuilding it here would re-trace
+        # point-cloud gram construction inside the scan body
+        cost = local_cost(op, gamma, mu, nu, cfg.eps, cfg.rho)
         eps_t = cfg.eps * mass
         rho_t = cfg.rho * mass
         new, f, g = sk.sinkhorn_unbalanced_log(

@@ -5,11 +5,13 @@ greedy/temperature sampling, and a simple admission queue
 (continuous-batching-lite: finished slots are refilled between decode
 bursts; the decode step itself is a fixed-shape jit — no recompilation).
 
-`GWEngine` (GW solves): admission queue for Gromov-Wasserstein requests.
-Requests are bucketed by (grid class, k, padded sizes rounded up to
-``size_bucket``) and flushed through `entropic_gw_batch` — one vmapped,
-jit-cached executable per bucket, so a stream of ragged-size requests pays
-compilation once per bucket instead of once per shape.
+`GWEngine` (GW solves): admission queue for Gromov-Wasserstein requests over
+ANY geometry — uniform grids (FGC), low-rank factored costs, raw point
+clouds, explicit dense matrices.  Requests are bucketed by geometry spec
+(class + static params + padded sizes rounded up to ``size_bucket``) and
+flushed through `entropic_gw_batch` — one vmapped, jit-cached executable per
+bucket, so a stream of ragged-size requests pays compilation once per bucket
+instead of once per shape.
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grids import Grid1D
+from repro.core.geometry import as_geometry
 from repro.core.gw import GWConfig, GWResult, entropic_gw_batch
 from repro.models import lm
 from repro.models.common import ModelConfig
@@ -86,40 +88,60 @@ class GWServeConfig:
 class GWEngine:
     """Admission-queue front end for batched GW solving.
 
-    submit() enqueues a (grid_x, grid_y, mu, nu) problem and returns a
-    request id; flush() groups the queue into shape buckets, runs one
+    submit() enqueues a (geom_x, geom_y, mu, nu) problem — geometries may be
+    raw Grids (adapted with the solver backend) or any
+    `repro.core.geometry.Geometry` — and returns a request id; flush()
+    groups the queue into geometry-spec buckets, runs one
     `entropic_gw_batch` per bucket chunk (≤ max_batch problems, chunk length
-    rounded up to a power of two with duplicate problems), and returns
+    rounded up to a power of two with duplicate problems — the duplicates
+    are solved for shape reuse but never sliced or transferred), and returns
     {request_id: GWResult}.  Because bucketed padded sizes AND chunk lengths
     repeat, the underlying jitted solver compiles at most log2(max_batch)
     executables per bucket, reused for every later flush — the serving
-    path's compilation amortization.  A failing bucket only drops its own
-    solved entries; unsolved requests stay queued for retry.
+    path's compilation amortization, now shared by ragged point-cloud and
+    low-rank request streams, not just grids.
+
+    Failure isolation: each bucket is solved independently.  When a bucket
+    raises, its UNSOLVED requests stay queued for retry (chunks solved
+    before the failure are returned and dequeued) and the error is recorded
+    in ``last_errors``; other buckets' results are still returned.  If every
+    bucket failed (and something was queued), the first error is re-raised —
+    a fully-failing flush should not look like an empty queue.
     """
 
     def __init__(self, cfg: GWServeConfig | None = None):
         self.cfg = cfg or GWServeConfig()
         self._queue: list[tuple[int, tuple]] = []
         self._next_id = 0
+        self.last_errors: list[tuple[tuple, Exception]] = []
 
     def _bucket_size(self, size: int) -> int:
         b = self.cfg.size_bucket
         return -(-size // b) * b
 
-    def submit(self, grid_x, grid_y, mu, nu) -> int:
+    def submit(self, geom_x, geom_y, mu, nu) -> int:
+        backend = self.cfg.solver.backend
+        gx = as_geometry(geom_x, backend)
+        gy = as_geometry(geom_y, backend)
+        mu = jnp.asarray(mu)
+        nu = jnp.asarray(nu)
+        # reject data-independent malformations HERE: once queued, a bad
+        # request would fail its whole bucket on every flush and starve the
+        # valid requests chunked with it
+        if mu.shape != (gx.size,) or nu.shape != (gy.size,):
+            raise ValueError(
+                f"measure shapes {mu.shape}/{nu.shape} do not match "
+                f"geometry sizes {gx.size}/{gy.size}")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append((rid, (grid_x, grid_y, jnp.asarray(mu),
-                                  jnp.asarray(nu))))
+        self._queue.append((rid, (gx, gy, mu, nu)))
         return rid
 
     def _bucket_key(self, prob):
         gx, gy, _, _ = prob
-        pad_x = (self._bucket_size(gx.size) if isinstance(gx, Grid1D)
-                 else gx.size)
-        pad_y = (self._bucket_size(gy.size) if isinstance(gy, Grid1D)
-                 else gy.size)
-        return (type(gx), gx.k, pad_x, type(gy), gy.k, pad_y)
+        pad_x = self._bucket_size(gx.size) if gx.paddable else gx.size
+        pad_y = self._bucket_size(gy.size) if gy.paddable else gy.size
+        return (gx.batch_key(), pad_x, gy.batch_key(), pad_y)
 
     def flush(self) -> dict[int, GWResult]:
         buckets: dict[tuple, list[tuple[int, tuple]]] = {}
@@ -127,31 +149,40 @@ class GWEngine:
             buckets.setdefault(self._bucket_key(prob), []).append((rid, prob))
         results: dict[int, GWResult] = {}
         done: set[int] = set()
+        self.last_errors = []
         try:
             for key, entries in buckets.items():
-                pad_to = (key[2], key[5])
-                for i in range(0, len(entries), self.cfg.max_batch):
-                    chunk = entries[i:i + self.cfg.max_batch]
-                    # pad the chunk to the next power of two (≤ max_batch)
-                    # with copies of its last problem: the jit cache keys on
-                    # the batch dim, so this bounds compiles to log2(max_batch)
-                    # variants per bucket instead of one per flush size.
-                    b = 1
-                    while b < len(chunk):
-                        b *= 2
-                    b = min(b, self.cfg.max_batch)
-                    probs = ([p for _, p in chunk]
-                             + [chunk[-1][1]] * (b - len(chunk)))
-                    solved = entropic_gw_batch(probs, self.cfg.solver,
-                                               pad_to=pad_to)
-                    for (rid, _), res in zip(chunk, solved):
-                        results[rid] = res
-                        done.add(rid)
+                pad_to = (key[1], key[3])
+                try:
+                    for i in range(0, len(entries), self.cfg.max_batch):
+                        chunk = entries[i:i + self.cfg.max_batch]
+                        # pad the chunk to the next power of two
+                        # (≤ max_batch) with copies of its last problem: the
+                        # jit cache keys on the batch dim, so this bounds
+                        # compiles to log2(max_batch) variants per bucket
+                        # instead of one per flush size.  num_results stops
+                        # the duplicates from being re-sliced/transferred.
+                        b = 1
+                        while b < len(chunk):
+                            b *= 2
+                        b = min(b, self.cfg.max_batch)
+                        probs = ([p for _, p in chunk]
+                                 + [chunk[-1][1]] * (b - len(chunk)))
+                        solved = entropic_gw_batch(probs, self.cfg.solver,
+                                                   pad_to=pad_to,
+                                                   num_results=len(chunk))
+                        for (rid, _), res in zip(chunk, solved):
+                            results[rid] = res
+                            done.add(rid)
+                except Exception as exc:   # noqa: BLE001 — bucket isolation
+                    self.last_errors.append((key, exc))
         finally:
             # only drop what actually solved — a bad request must not
             # destroy the rest of the queue
             self._queue = [(rid, p) for rid, p in self._queue
                            if rid not in done]
+        if self.last_errors and not results:
+            raise self.last_errors[0][1]
         return results
 
     def solve(self, problems, pad_to=None) -> list[GWResult]:

@@ -1,0 +1,347 @@
+"""Geometry abstraction layer: LowRank/PointCloud/Dense/Grid geometries all
+drive the same GradientOperator; parity with the dense oracle (f32 1e-4
+acceptance); ragged point-cloud batching and the GWEngine serving path with
+a jit-cache-size (no per-request recompilation) assertion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DenseGeometry, GradientOperator, GridGeometry,
+                        GWConfig, LowRankGeometry, PointCloudGeometry,
+                        as_geometry, entropic_gw, entropic_gw_batch)
+from repro.core.grids import Grid1D, Grid2D
+from repro.core.gw import _solve_stacked
+from repro.serve.engine import GWEngine, GWServeConfig
+
+CFG = GWConfig(eps=5e-3, outer_iters=5, sinkhorn_iters=100)
+
+
+def _measure(n, seed, dtype=None):
+    r = np.random.default_rng(seed)
+    u = r.random(n) + 0.05
+    u = u / u.sum()
+    return jnp.asarray(u, dtype=dtype) if dtype else jnp.asarray(u)
+
+
+def _points(n, d, seed, dtype=None):
+    pts = np.random.default_rng(seed).normal(size=(n, d))
+    return jnp.asarray(pts, dtype=dtype) if dtype else jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# apply/dist_matrix parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [0, 1, 2, 3])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_lowrank_apply_matches_dense(p, axis):
+    r = np.random.default_rng(1)
+    a = jnp.asarray(r.normal(size=(14, 3)))
+    b = jnp.asarray(r.normal(size=(14, 3)))
+    geom = LowRankGeometry(a, b)
+    x = jnp.asarray(r.normal(size=(14, 14)))
+    # the apply contracts D's second index along every axis (axis 0: D x,
+    # axis 1: x Dᵀ) — equal for the symmetric matrices solvers use
+    want = np.asarray(geom.dist_matrix(p) @ x if axis == 0
+                      else x @ geom.dist_matrix(p).T)
+    got = np.asarray(geom.apply_dist(x, axis=axis, power_mult=p))
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("metric", ["sqeuclidean", "euclidean"])
+def test_pointcloud_dist_matrix(metric):
+    pts = _points(12, 3, 2)
+    geom = PointCloudGeometry(pts, metric)
+    p = np.asarray(pts)
+    d = ((p[:, None, :] - p[None, :, :]) ** 2).sum(-1)
+    if metric == "euclidean":
+        d = np.sqrt(d)
+    # the gram-form ‖x‖²+‖x'‖²−2xᵀx' loses ~1e-15 to cancellation, which
+    # sqrt amplifies near zero — hence the looser tolerance vs the direct
+    # difference form
+    np.testing.assert_allclose(np.asarray(geom.dist_matrix()), d, atol=1e-7)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(12, 4)))
+    np.testing.assert_allclose(np.asarray(geom.apply_dist(x, 0)), d @ x,
+                               atol=1e-6)
+
+
+def test_to_low_rank_exact_sqeuclidean():
+    pc = PointCloudGeometry(_points(15, 4, 3))
+    lr = pc.to_low_rank()
+    assert lr.rank == 4 + 2 and lr.cost_rank == 6
+    np.testing.assert_allclose(np.asarray(lr.dist_matrix()),
+                               np.asarray(pc.dist_matrix()), atol=1e-12)
+
+
+def test_to_low_rank_svd_euclidean():
+    pc = PointCloudGeometry(_points(10, 2, 4), "euclidean")
+    lr = pc.to_low_rank(10)     # full rank: exact reconstruction
+    np.testing.assert_allclose(np.asarray(lr.dist_matrix()),
+                               np.asarray(pc.dist_matrix()), atol=1e-8)
+    with pytest.raises(ValueError):
+        pc.to_low_rank()        # euclidean needs an explicit rank
+
+
+# ---------------------------------------------------------------------------
+# acceptance: gradient pieces vs the dense oracle within f32 1e-4
+# ---------------------------------------------------------------------------
+
+def _assert_pieces_match(op, oracle, mu, nu, gamma, tol):
+    np.testing.assert_allclose(np.asarray(op.product(gamma)),
+                               np.asarray(oracle.product(gamma)),
+                               rtol=tol, atol=tol)
+    c, _, _ = op.constant_term(mu, nu)
+    c_o, _, _ = oracle.constant_term(mu, nu)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_o),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(op.grad(gamma, c)),
+                               np.asarray(oracle.grad(gamma, c_o)),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(op.energy(gamma)),
+                               float(oracle.energy(gamma)),
+                               rtol=tol, atol=tol)
+
+
+def test_lowrank_gradient_matches_dense_oracle_f32():
+    r = np.random.default_rng(5)
+    m, n = 21, 17
+    # symmetric PSD-style factors (a distance-like symmetric cost)
+    fx = jnp.asarray(r.normal(size=(m, 3)), jnp.float32)
+    fy = jnp.asarray(r.normal(size=(n, 4)), jnp.float32)
+    gx = LowRankGeometry(fx, fx)
+    gy = LowRankGeometry(fy, fy)
+    oracle = GradientOperator(DenseGeometry(gx.dist_matrix(dtype=jnp.float32)),
+                              DenseGeometry(gy.dist_matrix(dtype=jnp.float32)))
+    mu, nu = _measure(m, 0, jnp.float32), _measure(n, 1, jnp.float32)
+    gamma = mu[:, None] * nu[None, :]
+    op = GradientOperator(gx, gy)
+    _assert_pieces_match(op, oracle, mu, nu, gamma, 1e-4)
+
+
+@pytest.mark.parametrize("metric", ["sqeuclidean", "euclidean"])
+def test_pointcloud_gradient_matches_dense_oracle_f32(metric):
+    m, n = 19, 23
+    gx = PointCloudGeometry(_points(m, 3, 6, jnp.float32), metric)
+    gy = PointCloudGeometry(_points(n, 2, 7, jnp.float32), metric)
+    oracle = GradientOperator(DenseGeometry(gx.dist_matrix(dtype=jnp.float32)),
+                              DenseGeometry(gy.dist_matrix(dtype=jnp.float32)))
+    mu, nu = _measure(m, 2, jnp.float32), _measure(n, 3, jnp.float32)
+    gamma = mu[:, None] * nu[None, :]
+    op = GradientOperator(gx, gy)
+    _assert_pieces_match(op, oracle, mu, nu, gamma, 1e-4)
+
+
+def test_mixed_grid_pointcloud_sides():
+    """One grid side (FGC apply), one point-cloud side (dense apply) in the
+    same operator — the whole point of the abstraction."""
+    m, n = 16, 13
+    gx = Grid1D(m, 1.0 / (m - 1), 1)
+    gy = PointCloudGeometry(_points(n, 2, 8))
+    op = GradientOperator(gx, gy)
+    oracle = GradientOperator(DenseGeometry(as_geometry(gx).dist_matrix()),
+                              DenseGeometry(gy.dist_matrix()))
+    mu, nu = _measure(m, 4), _measure(n, 5)
+    gamma = mu[:, None] * nu[None, :]
+    _assert_pieces_match(op, oracle, mu, nu, gamma, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# solver + batching over geometries
+# ---------------------------------------------------------------------------
+
+def test_entropic_gw_pointcloud_matches_dense_geometry():
+    n = 20
+    pc = PointCloudGeometry(_points(n, 2, 9))
+    dense = DenseGeometry(pc.dist_matrix())
+    mu, nu = _measure(n, 6), _measure(n, 7)
+    a = entropic_gw(pc, pc, mu, nu, CFG)
+    b = entropic_gw(dense, dense, mu, nu, CFG)
+    np.testing.assert_allclose(np.asarray(a.plan), np.asarray(b.plan),
+                               atol=1e-12)
+
+
+def test_entropic_gw_lowrank_matches_pointcloud():
+    """Exact sqeuclidean factorization ⇒ identical solves through the
+    O(N·r) path."""
+    n = 24
+    pc = PointCloudGeometry(_points(n, 3, 10))
+    lr = pc.to_low_rank()
+    mu, nu = _measure(n, 8), _measure(n, 9)
+    a = entropic_gw(lr, lr, mu, nu, CFG)
+    b = entropic_gw(pc, pc, mu, nu, CFG)
+    np.testing.assert_allclose(np.asarray(a.plan), np.asarray(b.plan),
+                               atol=1e-8)
+    assert abs(float(a.value - b.value)) < 1e-8
+
+
+def test_batch_ragged_pointclouds_matches_loop():
+    probs = []
+    for i, n in enumerate([20, 26, 15, 22]):
+        pts = _points(n, 2, 20 + i)
+        probs.append((PointCloudGeometry(pts), PointCloudGeometry(pts),
+                      _measure(n, 30 + i), _measure(n, 40 + i)))
+    batch = entropic_gw_batch(probs, CFG)
+    for res, (gx, gy, mu, nu) in zip(batch, probs):
+        single = entropic_gw(gx, gy, mu, nu, CFG)
+        assert res.plan.shape == (gx.size, gy.size)
+        np.testing.assert_allclose(np.asarray(res.plan),
+                                   np.asarray(single.plan), atol=1e-10)
+
+
+def test_batch_ragged_lowrank_matches_loop():
+    probs = []
+    for i, n in enumerate([18, 25, 21]):
+        lr = PointCloudGeometry(_points(n, 2, 50 + i)).to_low_rank()
+        probs.append((lr, lr, _measure(n, 60 + i), _measure(n, 70 + i)))
+    batch = entropic_gw_batch(probs, CFG, pad_to=(32, 32))
+    for res, (gx, gy, mu, nu) in zip(batch, probs):
+        single = entropic_gw(gx, gy, mu, nu, CFG)
+        np.testing.assert_allclose(np.asarray(res.plan),
+                                   np.asarray(single.plan), atol=1e-8)
+
+
+def test_batch_mixed_geometry_sides():
+    """Grid side + point-cloud side per problem, ragged on both sides."""
+    probs = []
+    for i, (m, n) in enumerate([(20, 17), (25, 21), (16, 26)]):
+        probs.append((Grid1D(m, 1.0 / (m - 1), 1),
+                      PointCloudGeometry(_points(n, 2, 80 + i)),
+                      _measure(m, 90 + i), _measure(n, 95 + i)))
+    batch = entropic_gw_batch(probs, CFG)
+    for res, (gx, gy, mu, nu) in zip(batch, probs):
+        single = entropic_gw(gx, gy, mu, nu, CFG)
+        np.testing.assert_allclose(np.asarray(res.plan),
+                                   np.asarray(single.plan), atol=1e-10)
+
+
+def test_batch_rejects_mixed_ranks():
+    a = PointCloudGeometry(_points(10, 2, 0)).to_low_rank()   # rank 4
+    b = PointCloudGeometry(_points(10, 3, 1)).to_low_rank()   # rank 5
+    probs = [(a, a, _measure(10, 0), _measure(10, 1)),
+             (b, b, _measure(10, 2), _measure(10, 3))]
+    with pytest.raises(ValueError):
+        entropic_gw_batch(probs, CFG)
+
+
+def test_batch_preserves_geometry_dtype():
+    """f64 geometry data under f32 measures must not be downcast by the
+    batch stacking (the leaves keep their dtype; solves agree to f32
+    accuracy — vmap reduction order makes bitwise equality f64-only)."""
+    n = 18
+    pts = _points(n, 2, 77)                       # float64
+    pc = PointCloudGeometry(pts)
+    mu = _measure(n, 0, jnp.float32)
+    nu = _measure(n, 1, jnp.float32)
+    from repro.core.gw import _stack_side
+    stacked, _ = _stack_side([pc], [mu], None)
+    assert stacked.points.dtype == jnp.float64    # not forced to f32
+    [res] = entropic_gw_batch([(pc, pc, mu, nu)], CFG)
+    single = entropic_gw(pc, pc, mu, nu, CFG)
+    np.testing.assert_allclose(np.asarray(res.plan),
+                               np.asarray(single.plan), atol=5e-4)
+
+
+def test_batch_num_results_skips_duplicates():
+    n = 12
+    pc = PointCloudGeometry(_points(n, 2, 33))
+    prob = (pc, pc, _measure(n, 0), _measure(n, 1))
+    out = entropic_gw_batch([prob, prob, prob], CFG, num_results=1)
+    assert len(out) == 1
+    single = entropic_gw(*prob, CFG)
+    np.testing.assert_allclose(np.asarray(out[0].plan),
+                               np.asarray(single.plan), atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# pytree / spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_geometry_pytree_roundtrip():
+    geoms = [GridGeometry(Grid1D(8, 0.1, 2), "scan"),
+             GridGeometry(Grid2D(3, 0.5, 1)),
+             LowRankGeometry(jnp.ones((5, 2)), jnp.ones((5, 2))),
+             PointCloudGeometry(_points(6, 3, 0), "euclidean"),
+             DenseGeometry(jnp.eye(4))]
+    for g in geoms:
+        leaves, treedef = jax.tree_util.tree_flatten(g)
+        g2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert g2.spec == g.spec and g2.size == g.size
+
+
+def test_geometry_specs_are_static_and_distinct():
+    pc = PointCloudGeometry(_points(6, 3, 0))
+    specs = {GridGeometry(Grid1D(8, 0.1, 2)).spec,
+             GridGeometry(Grid2D(3, 0.5, 1)).spec,
+             LowRankGeometry(jnp.ones((5, 2)), jnp.ones((5, 2))).spec,
+             pc.spec, DenseGeometry(jnp.eye(4)).spec}
+    assert len(specs) == 5
+    hash(pc.spec)                          # usable as jit/bucket key
+    assert pc.batch_key() == ("pointcloud", 3, "sqeuclidean")
+    assert not GridGeometry(Grid2D(3, 0.5, 1)).paddable
+
+
+def test_jit_through_geometry_argument():
+    """A Geometry is a valid jit argument: leaves traced, spec static."""
+    pc = PointCloudGeometry(_points(9, 2, 1))
+
+    @jax.jit
+    def total(geom, v):
+        return geom.apply_dist(v, 0).sum()
+
+    v = _measure(9, 2)
+    want = float(pc.dist_matrix() @ v @ jnp.ones(9))
+    np.testing.assert_allclose(float(total(pc, v)), want, rtol=1e-10)
+
+
+def test_pad_to_zero_mass_exactness():
+    """Padded support points change nothing when they carry zero mass."""
+    n = 14
+    pc = PointCloudGeometry(_points(n, 2, 11))
+    mu, nu = _measure(n, 12), _measure(n, 13)
+    base = entropic_gw(pc, pc, mu, nu, CFG)
+    padded = entropic_gw(pc.pad_to(20), pc.pad_to(20),
+                         jnp.pad(mu, (0, 6)), jnp.pad(nu, (0, 6)), CFG)
+    np.testing.assert_allclose(np.asarray(padded.plan[:n, :n]),
+                               np.asarray(base.plan), atol=1e-10)
+    assert float(jnp.abs(padded.plan[n:, :]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving: ragged point-cloud stream, bucketed, no per-request recompilation
+# ---------------------------------------------------------------------------
+
+def test_engine_pointcloud_stream_bucketed_no_recompile():
+    _solve_stacked.clear_cache()
+    scfg = GWServeConfig(solver=CFG, max_batch=4, size_bucket=16)
+    eng = GWEngine(scfg)
+    rng = np.random.default_rng(123)
+    # two waves of ragged request sizes, all inside the same (d=2, ≤16 →
+    # pad 16) bucket except the 20s (pad 32 bucket)
+    sizes = [10, 13, 16, 9, 20, 11, 18]
+    probs = {}
+    for i, n in enumerate(sizes):
+        pc = PointCloudGeometry(jnp.asarray(rng.normal(size=(n, 2))))
+        mu, nu = _measure(n, 200 + i), _measure(n, 300 + i)
+        rid = eng.submit(pc, pc, mu, nu)
+        probs[rid] = (pc, pc, mu, nu)
+    out = eng.flush()
+    assert set(out) == set(probs)
+    for rid, (gx, gy, mu, nu) in probs.items():
+        ref = entropic_gw(gx, gy, mu, nu, CFG)
+        assert out[rid].plan.shape == (gx.size, gy.size)
+        np.testing.assert_allclose(np.asarray(out[rid].plan),
+                                   np.asarray(ref.plan), atol=1e-8)
+    compiles_first = _solve_stacked._cache_size()
+    # wave 1 shapes: bucket pad16 chunks of 4 and 1, bucket pad32 chunk of
+    # 2 → exactly 3 executables for 7 ragged requests
+    assert compiles_first <= 3
+
+    # second wave: same buckets and chunk shapes, fresh data — must be
+    # served entirely from the jit cache (no per-request recompilation)
+    for i, n in enumerate([12, 15, 14, 9, 19, 17]):
+        pc = PointCloudGeometry(jnp.asarray(rng.normal(size=(n, 2))))
+        eng.submit(pc, pc, _measure(n, 400 + i), _measure(n, 500 + i))
+    out2 = eng.flush()
+    assert len(out2) == 6
+    assert _solve_stacked._cache_size() == compiles_first

@@ -48,3 +48,35 @@ def test_2d_matrix_matches_manhattan():
     assert d[0, 2 * 3 + 1] == pytest.approx(6.0)
     assert np.allclose(d, d.T)
     assert np.all(np.diag(d) == 0)
+
+
+def test_dist_matrix_default_dtype_follows_x64():
+    """dtype=None derives from the x64 setting (conftest enables it → f64);
+    an explicit dtype is honored as-is."""
+    assert grids.Grid1D(5).dist_matrix().dtype == jnp.float64
+    assert grids.Grid2D(3).dist_matrix().dtype == jnp.float64
+    assert grids.Grid1D(5).dist_matrix(dtype=jnp.float32).dtype == jnp.float32
+
+
+def test_dist_matrix_no_silent_downcast_without_x64():
+    """With x64 disabled the default must be float32 by DERIVATION, not by a
+    silently-downcast float64 request (subprocess: x64 is process-global)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    code = (
+        "import jax, jax.numpy as jnp\n"
+        "from repro.core import grids, fgc\n"
+        "assert grids.Grid1D(4).dist_matrix().dtype == jnp.float32\n"
+        "assert grids.Grid2D(3).dist_matrix().dtype == jnp.float32\n"
+        "assert fgc.lower_toeplitz(4, 1).dtype == jnp.float32\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_ENABLE_X64"] = "0"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=300,
+                         cwd=str(pathlib.Path(__file__).parent.parent))
+    assert out.returncode == 0, out.stderr[-2000:]

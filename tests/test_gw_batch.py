@@ -106,15 +106,88 @@ def test_engine_flush_matches_single():
     assert eng.flush() == {}       # queue drained
 
 
-def test_engine_failed_flush_keeps_queue():
-    """A bad request must not destroy other queued work: unsolved entries
-    survive a failing flush for retry/inspection."""
+def test_engine_rejects_malformed_request_at_submit():
+    """A data-independent malformation (measure length != geometry size) is
+    rejected at submit() — once queued it would fail its whole bucket on
+    every flush and starve the valid requests chunked with it."""
     eng = GWEngine(GWServeConfig(solver=CFG, size_bucket=16))
     gx = Grid1D(5, 0.1, 1)
-    rid = eng.submit(gx, gx, _measures(20, 0), _measures(5, 1))  # mu too long
     with pytest.raises(ValueError):
+        eng.submit(gx, gx, _measures(20, 0), _measures(5, 1))  # mu too long
+    assert eng._queue == []
+    # batch-level validation also rejects it (direct entropic_gw_batch use)
+    with pytest.raises(ValueError):
+        entropic_gw_batch([(gx, gx, _measures(20, 0), _measures(5, 1))], CFG)
+
+
+def test_engine_partial_failure_isolates_bucket(monkeypatch):
+    """A bucket that raises at flush time leaves its requests queued for
+    retry and records the error; other buckets still return their results."""
+    from repro.serve import engine as engine_mod
+
+    eng = GWEngine(GWServeConfig(solver=CFG, size_bucket=16))
+    good = _problems_1d([(10, 12), (14, 9)])
+    good_rids = [eng.submit(*p) for p in good]
+    bad_grid = Grid1D(40, 0.1, 1)        # lands in a different size bucket
+    bad_rid = eng.submit(bad_grid, bad_grid,
+                         _measures(40, 0), _measures(40, 1))
+
+    real_batch = engine_mod.entropic_gw_batch
+
+    def failing_batch(probs, cfg, pad_to=None, num_results=None):
+        if pad_to and pad_to[0] >= 48:   # only the bad-request bucket
+            raise RuntimeError("injected bucket failure")
+        return real_batch(probs, cfg, pad_to=pad_to, num_results=num_results)
+
+    monkeypatch.setattr(engine_mod, "entropic_gw_batch", failing_batch)
+    out = eng.flush()                     # must NOT raise: good bucket solved
+    assert set(out) == set(good_rids)
+    for rid, (gx, gy, mu, nu) in zip(good_rids, good):
+        ref = entropic_gw(gx, gy, mu, nu, CFG)
+        np.testing.assert_allclose(np.asarray(out[rid].plan),
+                                   np.asarray(ref.plan), atol=1e-8)
+    # failed bucket: request still queued, error recorded
+    assert [r for r, _ in eng._queue] == [bad_rid]
+    assert len(eng.last_errors) == 1
+    assert isinstance(eng.last_errors[0][1], RuntimeError)
+    # a retry with nothing else queued surfaces the error
+    with pytest.raises(RuntimeError):
         eng.flush()
-    assert [r for r, _ in eng._queue] == [rid]
+    assert [r for r, _ in eng._queue] == [bad_rid]
+    # once the fault clears, the queued request finally solves
+    monkeypatch.setattr(engine_mod, "entropic_gw_batch", real_batch)
+    out2 = eng.flush()
+    assert set(out2) == {bad_rid} and eng._queue == []
+
+
+def test_engine_mixed_grid_pointcloud_queue():
+    """Grids and point clouds interleave in one queue; bucketing splits them
+    by geometry spec and every request is solved correctly."""
+    from repro.core.geometry import PointCloudGeometry
+
+    eng = GWEngine(GWServeConfig(solver=CFG, max_batch=4, size_bucket=32))
+    rng = np.random.default_rng(7)
+    probs = {}
+    for i, (m, n) in enumerate([(20, 25), (30, 18), (25, 25)]):
+        p = (Grid1D(m, 1 / (m - 1), 1), Grid1D(n, 1 / (n - 1), 1),
+             _measures(m, 2 * i), _measures(n, 2 * i + 1))
+        probs[eng.submit(*p)] = p
+    for i, n in enumerate([22, 17, 28]):
+        pc = PointCloudGeometry(jnp.asarray(rng.normal(size=(n, 2))))
+        p = (pc, pc, _measures(n, 50 + i), _measures(n, 60 + i))
+        probs[eng.submit(*p)] = p
+    # two distinct geometry buckets
+    keys = {eng._bucket_key(p) for _, p in eng._queue}
+    assert len(keys) == 2
+    out = eng.flush()
+    assert set(out) == set(probs)
+    for rid, (gx, gy, mu, nu) in probs.items():
+        ref = entropic_gw(gx, gy, mu, nu, CFG)
+        assert out[rid].plan.shape == (np.asarray(mu).size,
+                                       np.asarray(nu).size)
+        np.testing.assert_allclose(np.asarray(out[rid].plan),
+                                   np.asarray(ref.plan), atol=1e-8)
+    assert eng.flush() == {}
 
 
 def test_gradient_operator_matches_dense():
