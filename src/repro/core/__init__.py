@@ -10,33 +10,42 @@ Public API:
                    DenseGeometry (explicit matrices)
   gradient       — GradientOperator: the gradient pieces shared by all
                    solvers, dispatched through the Geometry interface
-  sinkhorn       — log/kernel/unbalanced Sinkhorn
+  solver         — the convergence-controlled mirror-descent driver
+                   (SolveControls, ConvergenceInfo, mirror_descent) behind
+                   every solver: tol-based early stopping, ε-annealing,
+                   per-problem masking under vmap
+  sinkhorn       — log/kernel/unbalanced Sinkhorn (+ chunked adaptive
+                   variants with early stopping)
   gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers over any geometry;
                    entropic_gw_batch solves many problems in one vmapped call
   barycenter     — fixed-support GW barycenter
   losses         — FGW sequence/patch alignment losses for LM training
 """
-from repro.core import (fgc, geometry, gradient, grids, sinkhorn, gw, fgw,
-                        ugw, barycenter, losses, coot)
+from repro.core import (fgc, geometry, gradient, grids, sinkhorn, solver, gw,
+                        fgw, ugw, barycenter, losses, coot)
+from repro.core.solver import (ConvergenceInfo, SolveControls,
+                               mirror_descent, resolve_controls)
 from repro.core.geometry import (DenseGeometry, Geometry, GridGeometry,
                                  LowRankGeometry, PointCloudGeometry,
                                  as_geometry)
 from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
 from repro.core.gw import (GWConfig, GWResult, entropic_gw,
-                           entropic_gw_batch, gw_energy)
+                           entropic_gw_batch, gw_energy, gw_plan_solve)
 from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
 from repro.core.ugw import UGWConfig, entropic_ugw
 from repro.core.barycenter import BarycenterConfig, gw_barycenter
 from repro.core.losses import AlignConfig, fgw_alignment_loss
 
 __all__ = [
-    "fgc", "geometry", "gradient", "grids", "sinkhorn", "gw", "fgw", "ugw",
-    "barycenter", "losses", "GradientOperator",
+    "fgc", "geometry", "gradient", "grids", "sinkhorn", "solver", "gw",
+    "fgw", "ugw", "barycenter", "losses", "GradientOperator",
+    "ConvergenceInfo", "SolveControls", "mirror_descent", "resolve_controls",
     "Geometry", "GridGeometry", "LowRankGeometry", "PointCloudGeometry",
     "DenseGeometry", "as_geometry",
     "Grid1D", "Grid2D", "gw_product", "gw_product_dense",
     "GWConfig", "GWResult", "entropic_gw", "entropic_gw_batch", "gw_energy",
+    "gw_plan_solve",
     "FGWConfig", "entropic_fgw", "fgw_energy",
     "UGWConfig", "entropic_ugw",
     "BarycenterConfig", "gw_barycenter",

@@ -6,11 +6,14 @@ clouds — anything implementing `repro.core.geometry.Geometry`) and
 barycenter weights λ_s, alternate:
   1. for each s: solve entropic GW between the current barycenter matrix D̄
      and geometry s.  The D̄ side is just another geometry — a
-     `DenseGeometry` — so the plan solve is the ordinary
-     `GradientOperator` mirror descent: its gradient term D̄ Γ_s D_s gets
-     the structured apply on the s side (FGC O(N²) for grids, O(N·r) for
-     low-rank) while the D̄ side stays a dense matmul (the barycenter
-     update itself is cubic; see DESIGN.md).
+     `DenseGeometry` — so the plan solve is `repro.core.gw.gw_plan_solve`,
+     the same convergence-controlled mirror descent every solver uses (its
+     gradient term D̄ Γ_s D_s gets the structured apply on the s side —
+     FGC O(N²) for grids, O(N·r) for low-rank — while the D̄ side stays a
+     dense matmul; the barycenter update itself is cubic, see DESIGN.md).
+     With ``cfg.tol>0`` each plan solve early-stops; plan states AND
+     potentials warm-start across barycenter updates, so later sweeps'
+     inner solves converge in a handful of iterations.
   2. D̄ ← (1/μ̄μ̄ᵀ) Σ_s λ_s Γ_s D_s Γ_sᵀ, with D_s Γ_sᵀ via the fast apply.
 """
 from __future__ import annotations
@@ -21,35 +24,31 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import sinkhorn as sk
 from repro.core.geometry import DenseGeometry, as_geometry
 from repro.core.gradient import GradientOperator
+from repro.core.gw import GWConfig, gw_plan_solve
 
 
 @dataclasses.dataclass(frozen=True)
 class BarycenterConfig:
     eps: float = 5e-3
     outer_iters: int = 5        # barycenter updates
-    gw_iters: int = 5           # mirror-descent steps per plan solve
+    gw_iters: int = 5           # mirror-descent cap per plan solve
     sinkhorn_iters: int = 100
     backend: str = "cumsum"
+    tol: float = 0.0            # early-stop tolerance for the plan solves
+    eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
+    anneal_decay: float = 0.5
+    sinkhorn_chunk: int = 25
 
-
-def _gw_plan_mixed(dbar, geom_s, mu, nu_s, cfg: BarycenterConfig,
-                   gamma0, f0, g0):
-    """Entropic GW between dense D̄ (support of barycenter) and geometry s."""
-    op = GradientOperator(DenseGeometry(dbar), geom_s, cfg.backend)
-    c1, _, _ = op.constant_term(mu, nu_s)
-    skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters)
-
-    def outer(carry, _):
-        gamma, f, g = carry
-        gamma, f, g, _ = sk.solve(op.grad(gamma, c1), mu, nu_s, skcfg, f, g)
-        return (gamma, f, g), ()
-
-    (gamma, f, g), _ = jax.lax.scan(outer, (gamma0, f0, g0), None,
-                                    length=cfg.gw_iters)
-    return gamma, f, g
+    def gw_config(self) -> GWConfig:
+        """The inner plan-solve config this barycenter cfg induces."""
+        return GWConfig(eps=self.eps, outer_iters=self.gw_iters,
+                        sinkhorn_iters=self.sinkhorn_iters,
+                        backend=self.backend, tol=self.tol,
+                        eps_init=self.eps_init,
+                        anneal_decay=self.anneal_decay,
+                        sinkhorn_chunk=self.sinkhorn_chunk)
 
 
 def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],
@@ -71,16 +70,24 @@ def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],
         idx = jnp.arange(m, dtype=mu_bar.dtype)
         dbar = jnp.abs(idx[:, None] - idx[None, :]) / max(m - 1, 1)
 
+    gw_cfg = cfg.gw_config()
+    # ε-annealing is for the COLD first sweep only: later sweeps warm-start
+    # from near-converged plans, and re-running the ramp would walk them
+    # away from the fixed point (and the convergence gate waits for the
+    # ramp, which may never finish inside gw_iters)
+    warm_cfg = dataclasses.replace(gw_cfg, eps_init=None)
     states = [(mu_bar[:, None] * nu[None, :], jnp.zeros_like(mu_bar),
                jnp.zeros_like(nu)) for nu in measures]
 
-    for _ in range(cfg.outer_iters):
+    for sweep in range(cfg.outer_iters):
+        solve_cfg = gw_cfg if sweep == 0 else warm_cfg
         new_states = []
         acc = jnp.zeros_like(dbar)
-        for (geom_s, nu_s, lam_s, (gamma0, f0, g0)) in zip(
-                geoms, measures, lam, states):
-            gamma, f, g = _gw_plan_mixed(dbar, geom_s, mu_bar, nu_s, cfg,
-                                         gamma0, f0, g0)
+        for (geom_s, nu_s, lam_s, state) in zip(geoms, measures, lam, states):
+            op = GradientOperator(DenseGeometry(dbar), geom_s, cfg.backend)
+            c1, _, _ = op.constant_term(mu_bar, nu_s)
+            (gamma, f, g), _ = gw_plan_solve(op, c1, mu_bar, nu_s, solve_cfg,
+                                             state0=state)
             new_states.append((gamma, f, g))
             # Γ_s D_s via the structured apply, then dense Γ_s D_s Γ_sᵀ
             gds = geom_s.apply_dist(gamma, axis=1)

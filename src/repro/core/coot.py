@@ -17,17 +17,23 @@ of the product are Toeplitz-structured and FGC applies — ``grid_x`` /
 matrices the products stay dense (no grid structure to exploit; recorded
 in DESIGN.md §Arch-applicability spirit: we accelerate exactly what the
 structure allows, no more).
+
+The BCD outer loop is the shared convergence-controlled driver
+(`repro.core.solver.mirror_descent`): one driver step runs both half-steps;
+early stopping (``cfg.tol>0``) triggers when BOTH plans stop moving and
+both inner residuals pass; ε-annealing scales ``eps_samples`` and
+``eps_features`` by the same geometric ramp.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
 from repro.core.gradient import GeometryLike, bilinear_product
+from repro.core.solver import mirror_descent, resolve_controls
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,13 +43,26 @@ class COOTConfig:
     outer_iters: int = 10
     sinkhorn_iters: int = 100
     backend: str = "cumsum"       # used only on grid-structured sides
+    tol: float = 0.0              # early-stop tolerance (0 → fixed-iteration)
+    eps_init: float | None = None  # annealing start for eps_samples;
+    #                                eps_features ramps by the same ratio
+    anneal_decay: float = 0.5
+    sinkhorn_chunk: int = 25
+
+    @property
+    def eps(self) -> float:
+        """The ε the annealing schedule targets (for SolveControls):
+        eps_samples; eps_features ramps by the same ratio."""
+        return self.eps_samples
 
 
 def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                   cfg: COOTConfig = COOTConfig(),
                   grid_x: Optional[GeometryLike] = None,
-                  grid_y: Optional[GeometryLike] = None):
-    """Returns (pi_samples, pi_features, value).
+                  grid_y: Optional[GeometryLike] = None,
+                  return_info: bool = False):
+    """Returns (pi_samples, pi_features, value), plus a `ConvergenceInfo`
+    when ``return_info=True``.
 
     mu_s/nu_s: sample marginals (n,), (m); mu_v/nu_v: feature marginals.
     ``grid_x``/``grid_y``: pass the grids (or any structured Geometry) when
@@ -51,43 +70,52 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
     uniform grid, or a low-rank factorization — to switch those products to
     the fast apply (GW specialization).
     """
+    ctl, unroll = resolve_controls(cfg)
     x2 = x * x
     y2 = y * y
-    pi_s = mu_s[:, None] * nu_s[None, :]
-    pi_v = mu_v[:, None] * nu_v[None, :]
-    f_s = jnp.zeros_like(mu_s)
-    g_s = jnp.zeros_like(nu_s)
-    f_v = jnp.zeros_like(mu_v)
-    g_v = jnp.zeros_like(nu_v)
+    state0 = (mu_s[:, None] * nu_s[None, :], mu_v[:, None] * nu_v[None, :],
+              jnp.zeros_like(mu_s), jnp.zeros_like(nu_s),
+              jnp.zeros_like(mu_v), jnp.zeros_like(nu_v))
 
-    def outer(carry, _):
-        pi_s, pi_v, f_s, g_s, f_v, g_v = carry
+    def step(state, eps_s):
+        pi_s, pi_v, f_s, g_s, f_v, g_v = state
+        eps_v = cfg.eps_features * (eps_s / ctl.eps)  # same annealing ramp
         # samples half-step
         a = x2 @ pi_v.sum(axis=1)              # (n,) weights of π_v rows
         b = y2 @ pi_v.sum(axis=0)
         m_s = (a[:, None] + b[None, :]
                - 2.0 * bilinear_product(x, pi_v, y, grid_x, grid_y,
                                         cfg.backend))
-        pi_s, f_s, g_s, _ = sk.sinkhorn_log(m_s, mu_s, nu_s,
-                                            cfg.eps_samples,
-                                            cfg.sinkhorn_iters, f_s, g_s)
+        pi_s, f_s, g_s, err_s, used_s = sk.solve_adaptive(
+            m_s, mu_s, nu_s, eps_s, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            ctl.tol, "log", f_s, g_s, unroll=unroll)
         # features half-step
         c = x2.T @ pi_s.sum(axis=1)
         d = y2.T @ pi_s.sum(axis=0)
         m_v = (c[:, None] + d[None, :]
                - 2.0 * (x.T @ pi_s @ y))
-        pi_v, f_v, g_v, _ = sk.sinkhorn_log(m_v, mu_v, nu_v,
-                                            cfg.eps_features,
-                                            cfg.sinkhorn_iters, f_v, g_v)
-        return (pi_s, pi_v, f_s, g_s, f_v, g_v), ()
+        pi_v, f_v, g_v, err_v, used_v = sk.solve_adaptive(
+            m_v, mu_v, nu_v, eps_v, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            ctl.tol, "log", f_v, g_v, unroll=unroll)
+        # gate on the worse of the two residuals: each half-step drives its
+        # OWN residual to ≤ tol, so summing would demand 2× what the inner
+        # solves deliver and could wedge convergence just above tol
+        return ((pi_s, pi_v, f_s, g_s, f_v, g_v), jnp.maximum(err_s, err_v),
+                used_s + used_v)
 
-    (pi_s, pi_v, f_s, g_s, f_v, g_v), _ = jax.lax.scan(
-        outer, (pi_s, pi_v, f_s, g_s, f_v, g_v), None,
-        length=cfg.outer_iters)
+    def delta(new, old):       # both plans must stop moving
+        return (jnp.abs(new[0] - old[0]).sum()
+                + jnp.abs(new[1] - old[1]).sum())
+
+    state, info = mirror_descent(step, state0, delta, ctl, cfg.outer_iters,
+                                 unroll=unroll)
+    pi_s, pi_v, f_s, g_s, f_v, g_v = state
     # final objective
     a = x2 @ pi_v.sum(axis=1)
     b = y2 @ pi_v.sum(axis=0)
     cross = jnp.sum(pi_s * bilinear_product(x, pi_v, y, grid_x, grid_y,
                                             cfg.backend))
     value = pi_s.sum(1) @ a + pi_s.sum(0) @ b - 2.0 * cross
+    if return_info:
+        return pi_s, pi_v, value, info
     return pi_s, pi_v, value

@@ -4,18 +4,22 @@ Objective: (1−θ)·Σ c²_ip γ_ip + θ·E(Γ); gradient C2 − 4θ·D_X Γ D_
 C2 = (1−θ)·C⊙C + 2θ·((D_X∘D_X)μ 1ᵀ + 1((D_Y∘D_Y)ν)ᵀ).
 
 Gradient pieces come from `repro.core.gradient.GradientOperator` (shared
-with gw/ugw/coot).
+with gw/ugw/coot); the outer loop is the shared convergence-controlled
+driver `repro.core.solver.mirror_descent` (tol=0 → the paper's fixed
+iteration count; tol>0 → early stopping + optional ε-annealing, with a
+`ConvergenceInfo` on the result).
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
 from repro.core.gradient import GeometryLike, GradientOperator
 from repro.core.gw import GWConfig, GWResult
+from repro.core.solver import (SolveControls, mirror_descent, plan_delta,
+                               resolve_controls)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,27 +37,31 @@ def fgw_energy(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
 
 def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
                  mu, nu,
-                 cfg: FGWConfig = FGWConfig(), gamma0=None) -> GWResult:
+                 cfg: FGWConfig = FGWConfig(), gamma0=None,
+                 controls: SolveControls | None = None) -> GWResult:
     """``feature_cost``: (M,N) linear-term cost matrix C (paper's c_ip).
     ``grid_x``/``grid_y``: Grids or any Geometry (grid/low-rank/point-cloud/
     dense) — see repro.core.geometry."""
+    ctl, unroll = resolve_controls(cfg, controls)
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     theta = cfg.theta
     c1, _, _ = op.constant_term(mu, nu)
     c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
     f, g = sk.zero_mass_potentials(mu, nu)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
-    skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters,
-                              mode=cfg.sinkhorn_mode)
 
-    def outer(carry, _):
-        gamma, f, g = carry
+    def step(state, eps):
+        gamma, f, g = state
         grad = c2 - 4.0 * theta * op.product(gamma)
-        gamma, f, g, err = sk.solve(grad, mu, nu, skcfg, f, g)
-        return (gamma, f, g), err
+        gamma, f, g, err, used = sk.solve_adaptive(
+            grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            ctl.tol, cfg.sinkhorn_mode, f, g, unroll=unroll)
+        return (gamma, f, g), err, used
 
-    (gamma, f, g), errs = jax.lax.scan(outer, (gamma, f, g), None,
-                                       length=cfg.outer_iters)
+    (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,
+                                         ctl, cfg.outer_iters,
+                                         unroll=unroll)
     value = fgw_energy(grid_x, grid_y, feature_cost, gamma, theta,
                        cfg.backend)
-    return GWResult(plan=gamma, value=value, marginal_err=errs[-1], f=f, g=g)
+    return GWResult(plan=gamma, value=value, marginal_err=info.marginal_err,
+                    f=f, g=g, errs=info.err_trace, info=info)

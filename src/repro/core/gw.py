@@ -6,19 +6,29 @@ Each outer iteration:
     Γ   ← Sinkhorn(Π, μ, ν, ε)               (τ = ε, Remark 2.1)
 with warm-started log-domain potentials carried across iterations.
 
+The outer loop itself lives in `repro.core.solver.mirror_descent` — the
+convergence-controlled driver shared with fgw/ugw/coot and the barycenter.
+With ``cfg.tol=0`` (default) it runs exactly ``outer_iters`` steps, the
+paper-faithful fixed mode; ``tol>0`` adds tolerance-based early stopping and
+(with ``eps_init``) ε-annealing, and every result carries a
+`ConvergenceInfo` plus the per-outer-step marginal-error trace.
+
 Either side may be any `repro.core.geometry.Geometry` — uniform grids (FGC
-applies), low-rank factored costs (O((M+N)r) applies), raw point clouds, or
-explicit dense matrices; raw Grid1D/Grid2D arguments are adapted with
-``cfg.backend``.  All gradient pieces come from
-`repro.core.gradient.GradientOperator` (shared with fgw/ugw/coot).
+applies), low-rank factored costs, raw point clouds, or explicit dense
+matrices; raw Grid1D/Grid2D arguments are adapted with ``cfg.backend``.  All
+gradient pieces come from `repro.core.gradient.GradientOperator` (shared
+with fgw/ugw/coot).
 
 `entropic_gw_batch` solves MANY problems in one vmapped program: every
 geometry is padded to a common bucket size with zero-mass support points
 (exact under log-domain Sinkhorn — padded potentials pin to −inf, the plan
 is identically 0 there), the padded geometries are stacked leaf-wise as
 pytrees, and ONE jit-compiled vmap serves the whole batch.  The executable
-cache keys on the geometry spec (class/padded size/static params), so a
-ragged request stream compiles once per bucket, not once per shape.
+cache keys on the geometry spec (class/padded size/static params) plus the
+cfg's STRUCTURAL fields only — eps/tol/annealing knobs travel as traced
+`SolveControls`, so retuning them never recompiles.  Under ``tol>0`` each
+lane early-stops on its own schedule (the driver's per-problem masking);
+the batch returns when every lane has converged or hit the cap.
 """
 from __future__ import annotations
 
@@ -32,15 +42,39 @@ import jax.numpy as jnp
 from repro.core import sinkhorn as sk
 from repro.core.geometry import Geometry, as_geometry
 from repro.core.gradient import GradientOperator
+from repro.core.solver import (ConvergenceInfo, SolveControls, mirror_descent,
+                               plan_delta, resolve_controls)
 
 
 @dataclasses.dataclass(frozen=True)
 class GWConfig:
     eps: float = 2e-3          # paper §4.1 uses 0.002 (1D) / 0.004 (2D)
-    outer_iters: int = 10      # paper §4.1: "number of iterations ... set to 10"
-    sinkhorn_iters: int = 200
+    outer_iters: int = 10      # cap; exact count when tol=0 (paper §4.1: 10)
+    sinkhorn_iters: int = 200  # inner cap per outer step
     backend: str = "cumsum"    # "scan" (paper-faithful) | "cumsum" | "dense" | "pallas"
     sinkhorn_mode: str = "log"
+    tol: float = 0.0           # early-stop tolerance (0 → fixed-iteration)
+    eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
+    anneal_decay: float = 0.5  # geometric ε decay per outer step
+    sinkhorn_chunk: int = 25   # inner iterations between residual checks
+    unroll: bool = False       # scan-only path (reverse-mode differentiable)
+
+    def __post_init__(self):
+        # unroll is the fixed-length differentiable path: it ignores tol by
+        # design, so pairing them is always a misconfiguration — and a
+        # silent one (results would look like hard non-converged problems)
+        if self.unroll and self.tol > 0.0:
+            raise ValueError(
+                "unroll=True runs the fixed-length scan path and ignores "
+                "tol; set tol=0 (fixed mode) or unroll=False (adaptive)")
+
+    def static_key(self) -> "GWConfig":
+        """This cfg with the traced value-knobs canonicalized — the jit
+        cache key.  eps/tol/eps_init/anneal_decay reach the solver as
+        `SolveControls` operands instead, so retuning them reuses the
+        compiled executable."""
+        return dataclasses.replace(self, eps=0.0, tol=0.0, eps_init=None,
+                                   anneal_decay=0.0)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -51,9 +85,13 @@ class GWResult:
     marginal_err: jax.Array
     f: jax.Array
     g: jax.Array
+    #: per-outer-step marginal-error trace (outer_iters,), NaN past the stop
+    errs: jax.Array | None = None
+    info: ConvergenceInfo | None = None
 
     def tree_flatten(self):
-        return (self.plan, self.value, self.marginal_err, self.f, self.g), None
+        return (self.plan, self.value, self.marginal_err, self.f, self.g,
+                self.errs, self.info), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -67,29 +105,55 @@ def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
         gamma, dx2_mu, dy2_nu)
 
 
+def gw_plan_solve(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
+                  controls: SolveControls | None = None, state0=None):
+    """Convergence-controlled GW mirror descent on a prepared operator.
+
+    The single plan-solve shared by `entropic_gw` and the barycenter's
+    inner solves.  ``state0``: optional (gamma, f, g) warm start.  Returns
+    ``((gamma, f, g), ConvergenceInfo)``.
+    """
+    ctl, unroll = resolve_controls(cfg, controls)
+    if state0 is None:
+        f, g = sk.zero_mass_potentials(mu, nu)
+        state0 = (mu[:, None] * nu[None, :], f, g)
+
+    def step(state, eps):
+        gamma, f, g = state
+        gamma, f, g, err, used = sk.solve_adaptive(
+            op.grad(gamma, c1), mu, nu, eps, cfg.sinkhorn_iters,
+            cfg.sinkhorn_chunk, ctl.tol, cfg.sinkhorn_mode, f, g,
+            unroll=unroll)
+        return (gamma, f, g), err, used
+
+    return mirror_descent(step, state0, plan_delta, ctl, cfg.outer_iters,
+                          unroll=unroll)
+
+
 def entropic_gw(grid_x, grid_y, mu, nu,
-                cfg: GWConfig = GWConfig(), gamma0=None) -> GWResult:
-    """Entropic GW distance + plan. jit-compatible; differentiable by unroll.
+                cfg: GWConfig = GWConfig(), gamma0=None,
+                controls: SolveControls | None = None) -> GWResult:
+    """Entropic GW distance + plan. jit-compatible.  The default fixed mode
+    (``tol=0``) runs on the scan path and is differentiable by unroll, as
+    before; adaptive mode (``tol>0``) uses the bounded while_loop and
+    supports forward-mode / envelope (stop_gradient) differentiation only.
 
     ``grid_x``/``grid_y``: Geometry instances, or raw Grid1D/Grid2D (adapted
-    with ``cfg.backend``).
+    with ``cfg.backend``).  ``controls`` overrides the cfg's traced value
+    knobs (eps/tol/eps_init/anneal_decay) — jitted callers pass it as an
+    operand so those values never enter the compilation cache key.
     """
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
-    f, g = sk.zero_mass_potentials(mu, nu)
-    gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
-    skcfg = sk.SinkhornConfig(eps=cfg.eps, iters=cfg.sinkhorn_iters,
-                              mode=cfg.sinkhorn_mode)
-
-    def outer(carry, _):
-        gamma, f, g = carry
-        gamma, f, g, err = sk.solve(op.grad(gamma, c1), mu, nu, skcfg, f, g)
-        return (gamma, f, g), err
-
-    (gamma, f, g), errs = jax.lax.scan(outer, (gamma, f, g), None,
-                                       length=cfg.outer_iters)
+    state0 = None
+    if gamma0 is not None:
+        f, g = sk.zero_mass_potentials(mu, nu)
+        state0 = (gamma0, f, g)
+    (gamma, f, g), info = gw_plan_solve(op, c1, mu, nu, cfg, controls,
+                                        state0)
     value = op.energy(gamma, dx2_mu, dy2_nu)
-    return GWResult(plan=gamma, value=value, marginal_err=errs[-1], f=f, g=g)
+    return GWResult(plan=gamma, value=value, marginal_err=info.marginal_err,
+                    f=f, g=g, errs=info.err_trace, info=info)
 
 
 # ---------------------------------------------------------------------------
@@ -97,14 +161,17 @@ def entropic_gw(grid_x, grid_y, mu, nu,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _solve_stacked(geoms_x, geoms_y, mus, nus, cfg: GWConfig):
+def _solve_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
+                   cfg: GWConfig):
     """vmap core over stacked geometry pytrees.  The jit cache keys on the
     pytree structure — i.e. each side's geometry spec (class, padded size,
-    static params) — plus leaf shapes, so one executable per bucket."""
+    static params) — plus leaf shapes and the cfg's structural fields
+    (``cfg`` arrives pre-canonicalized via ``static_key()``; the value
+    knobs ride in ``controls``, shared across lanes)."""
     def one(gx, gy, mu, nu):
-        return entropic_gw(gx, gy, mu, nu, cfg)
+        return entropic_gw(gx, gy, mu, nu, cfg, controls=controls)
 
-    return jax.vmap(one)(geoms_x, geoms_y, mus, nus)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0))(geoms_x, geoms_y, mus, nus)
 
 
 def _pad_to(vec, size: int):
@@ -156,12 +223,15 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
     compiled executable).  Padded support points carry zero mass, which the
     log-domain Sinkhorn treats exactly (their potentials are −inf, the plan
     is 0 there), so each result matches the unbatched solve on the unpadded
-    problem.  Per side, geometries must share their static params (grid
-    class + exponent ``k``, low-rank rank, point dimension + metric) but may
-    differ in traced data (spacing ``h``, factors, points) and — when the
-    geometry is paddable — in size.  Grid2D problems must be equal-sized
-    (the Kronecker unfolding owns the grid axis, so zero-padding the flat
-    axis is not available there).
+    problem — including its `ConvergenceInfo`: with ``cfg.tol>0`` each lane
+    stops on its own iteration count (masked in the shared while_loop), so
+    batching changes neither plans nor convergence behaviour.  Per side,
+    geometries must share their static params (grid class + exponent ``k``,
+    low-rank rank, point dimension + metric) but may differ in traced data
+    (spacing ``h``, factors, points) and — when the geometry is paddable —
+    in size.  Grid2D problems must be equal-sized (the Kronecker unfolding
+    owns the grid axis, so zero-padding the flat axis is not available
+    there).
 
     Returns per-problem GWResults sliced back to their true sizes.
     ``num_results`` limits unpacking to the first so-many problems — the
@@ -177,11 +247,15 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
 
     geoms_x, mus_p = _stack_side(gxs, mus, pad_to and pad_to[0])
     geoms_y, nus_p = _stack_side(gys, nus, pad_to and pad_to[1])
-    stacked = _solve_stacked(geoms_x, geoms_y, mus_p, nus_p, cfg)
+    stacked = _solve_stacked(geoms_x, geoms_y, mus_p, nus_p,
+                             SolveControls.from_config(cfg), cfg.static_key())
     k = len(problems) if num_results is None else num_results
     return [
         GWResult(plan=stacked.plan[i, :gxs[i].size, :gys[i].size],
                  value=stacked.value[i], marginal_err=stacked.marginal_err[i],
-                 f=stacked.f[i, :gxs[i].size], g=stacked.g[i, :gys[i].size])
+                 f=stacked.f[i, :gxs[i].size], g=stacked.g[i, :gys[i].size],
+                 errs=stacked.errs[i],
+                 info=jax.tree_util.tree_map(lambda l, i=i: l[i],
+                                             stacked.info))
         for i in range(k)
     ]

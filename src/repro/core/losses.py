@@ -60,7 +60,7 @@ def fgw_alignment_loss(h_src, h_tgt, cfg: AlignConfig = AlignConfig(),
                         else jnp.zeros((s, t), h_src.dtype))
     fcfg = FGWConfig(eps=cfg.eps, outer_iters=cfg.outer_iters,
                      sinkhorn_iters=cfg.sinkhorn_iters, backend=cfg.backend,
-                     theta=cfg.theta)
+                     theta=cfg.theta, unroll=cfg.unroll_grad)
     if cfg.unroll_grad:
         res = entropic_fgw(gx, gy, feature_cost, mu, nu, fcfg)
         return res.value

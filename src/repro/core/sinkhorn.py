@@ -8,11 +8,23 @@ is kept for large-ε paths and as the paper-literal reference.
 
 Conventions: plan γ_ip = exp((f_i + g_p − C_ip)/ε); marginals Σ_p γ = μ,
 Σ_i γ = ν.  All solvers are jit-compatible (fixed iteration counts via scan).
+
+The ``*_chunked`` variants add tolerance-based early stopping for the
+convergence-controlled driver (repro.core.solver): a bounded
+``lax.while_loop`` whose body runs one ``scan`` sweep of ``chunk``
+iterations and then checks the residual, so the (plan-sized) error check is
+amortized over the chunk.  Individual steps are masked by the global
+iteration counter, so the ``tol=0`` path performs EXACTLY ``iters`` dual
+updates — bit-identical to the fixed scan — while ``tol>0`` stops at the
+first post-sweep check that passes.  They return the iteration count
+actually used, which the driver aggregates into ``ConvergenceInfo``.
+Each mode's dual update and plan assembly live in ONE ``_*_pieces`` builder
+shared by the fixed scan and the chunked loop, so the bit-identity contract
+cannot drift.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -40,46 +52,170 @@ def zero_mass_potentials(mu, nu):
     return f, g
 
 
-def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None):
-    """Log-domain Sinkhorn. Returns (plan, f, g, err) — err = L1 row-marginal gap."""
+# ---------------------------------------------------------------------------
+# per-mode pieces: ONE home for each dual update + plan assembly, used by
+# both the fixed scans and the chunked early-stopping loops
+# ---------------------------------------------------------------------------
+
+def _log_pieces(cost, mu, nu, eps):
+    """step((f,g))->(f,g) and plan_err((f,g))->(plan, L1 row-marginal gap)."""
     log_mu = jnp.log(mu)
     log_nu = jnp.log(nu)
-    f = jnp.zeros_like(mu) if f0 is None else f0
-    g = jnp.zeros_like(nu) if g0 is None else g0
 
-    def step(carry, _):
+    def step(carry):
         f, g = carry
-        f = eps * (log_mu - logsumexp((g[None, :] - cost) / eps, axis=1))
-        g = eps * (log_nu - logsumexp((f[:, None] - cost) / eps, axis=0))
-        return (f, g), ()
+        fn = eps * (log_mu - logsumexp((g[None, :] - cost) / eps, axis=1))
+        gn = eps * (log_nu - logsumexp((fn[:, None] - cost) / eps, axis=0))
+        return fn, gn
 
-    (f, g), _ = jax.lax.scan(step, (f, g), None, length=iters)
-    plan = jnp.exp((f[:, None] + g[None, :] - cost) / eps)
-    err = jnp.abs(plan.sum(axis=1) - mu).sum()
-    return plan, f, g, err
+    def plan_err(carry):
+        f, g = carry
+        plan = jnp.exp((f[:, None] + g[None, :] - cost) / eps)
+        return plan, jnp.abs(plan.sum(axis=1) - mu).sum()
+
+    return step, plan_err
 
 
-def sinkhorn_kernel(cost, mu, nu, eps, iters, a0=None):
-    """Kernel-domain Sinkhorn (paper-literal matvec iteration).
-
-    Stabilized by a dual shift: subtracting row/col minima from C changes
-    the scalings a,b but not the plan (a valid Kantorovich dual offset), and
-    keeps exp(−C/ε) representable in the paper's ε regime."""
+def _kernel_pieces(cost, mu, nu, eps):
+    """Kernel-domain pieces, stabilized by a dual shift: subtracting row/col
+    minima from C changes the scalings a,b but not the plan (a valid
+    Kantorovich dual offset), and keeps exp(−C/ε) representable in the
+    paper's ε regime."""
     rmin = cost.min(axis=1, keepdims=True)
     cmin = (cost - rmin).min(axis=0, keepdims=True)
     K = jnp.exp(-(cost - rmin - cmin) / eps)
-    a = jnp.ones_like(mu) if a0 is None else a0
 
-    def step(a, _):
+    def step(a):
+        return mu / (K @ (nu / (K.T @ a)))
+
+    def plan_err(a):
         b = nu / (K.T @ a)
-        a = mu / (K @ b)
-        return a, ()
+        plan = a[:, None] * K * b[None, :]
+        return plan, b, jnp.abs(plan.sum(axis=1) - mu).sum()
 
-    a, _ = jax.lax.scan(step, a, None, length=iters)
-    b = nu / (K.T @ a)
-    plan = a[:, None] * K * b[None, :]
-    err = jnp.abs(plan.sum(axis=1) - mu).sum()
+    return step, plan_err
+
+
+def _unbalanced_pieces(cost, mu, nu, eps, rho_x, rho_y):
+    eps = jnp.asarray(eps, mu.dtype)
+    rho_x = jnp.asarray(rho_x, mu.dtype)
+    rho_y = jnp.asarray(rho_y, mu.dtype)
+    tx = rho_x / (rho_x + eps)
+    ty = rho_y / (rho_y + eps)
+    log_mu = jnp.log(mu)
+    log_nu = jnp.log(nu)
+
+    def step(carry):
+        f, g = carry
+        lse_r = logsumexp((g[None, :] - cost) / eps + log_nu[None, :], axis=1)
+        fn = -tx * eps * lse_r
+        lse_c = logsumexp((fn[:, None] - cost) / eps + log_mu[:, None],
+                          axis=0)
+        return fn, -ty * eps * lse_c
+
+    def plan_of(carry):
+        f, g = carry
+        return jnp.exp((f[:, None] + g[None, :] - cost) / eps
+                       + log_mu[:, None] + log_nu[None, :])
+
+    return step, plan_of
+
+
+def _chunked_loop(carry0, step_fn, residual_fn, iters, chunk, tol, err_dtype):
+    """The shared chunked early-stopping scaffold: a bounded while_loop whose
+    body runs one scan sweep of ``chunk`` live-masked ``step_fn`` updates and
+    then evaluates ``residual_fn(new_carry, old_carry)``.
+
+    Steps past the global ``iters`` cap are masked no-ops, so ``tol=0``
+    performs EXACTLY ``iters`` updates — bit-identical to the fixed scans.
+    Returns (carry, iters_used, last_residual).
+    """
+    def sweep(carry, it):
+        def step(c, _):
+            carry, it = c
+            live = it < iters
+            new = step_fn(carry)
+            carry = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(live, n, o), new, carry)
+            return (carry, it + jnp.int32(live)), ()
+
+        (carry, it), _ = jax.lax.scan(step, (carry, it), None, length=chunk)
+        return carry, it
+
+    def cond(c):
+        _, it, err = c
+        return (it < iters) & (err > tol)
+
+    def body(c):
+        carry, it, _ = c
+        new, it = sweep(carry, it)
+        return new, it, residual_fn(new, carry)
+
+    return jax.lax.while_loop(
+        cond, body,
+        (carry0, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, err_dtype)))
+
+
+# ---------------------------------------------------------------------------
+# solvers
+# ---------------------------------------------------------------------------
+
+def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None):
+    """Log-domain Sinkhorn. Returns (plan, f, g, err) — err = L1 row-marginal gap."""
+    step, plan_err = _log_pieces(cost, mu, nu, eps)
+    f = jnp.zeros_like(mu) if f0 is None else f0
+    g = jnp.zeros_like(nu) if g0 is None else g0
+    (f, g), _ = jax.lax.scan(lambda c, _: (step(c), ()), (f, g), None,
+                             length=iters)
+    plan, err = plan_err((f, g))
+    return plan, f, g, err
+
+
+def sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
+                         f0=None, g0=None):
+    """Log-domain Sinkhorn with chunked early stopping.
+
+    Returns (plan, f, g, err, iters_used).  ``tol=0`` runs exactly ``iters``
+    updates (steps past the cap are masked no-ops inside the last sweep), so
+    it reproduces :func:`sinkhorn_log` bit-for-bit; ``tol>0`` stops at the
+    first sweep whose L1 row-marginal gap is ≤ tol.
+    """
+    # traced ε arrives strongly typed (SolveControls builds f64 scalars
+    # under x64); pin it to the measures' dtype so the scan carry keeps the
+    # caller's precision instead of being promoted
+    eps = jnp.asarray(eps, mu.dtype)
+    step, plan_err = _log_pieces(cost, mu, nu, eps)
+    f = jnp.zeros_like(mu) if f0 is None else f0
+    g = jnp.zeros_like(nu) if g0 is None else g0
+    (f, g), it, _ = _chunked_loop((f, g), step,
+                                  lambda new, _old: plan_err(new)[1],
+                                  iters, chunk, tol, mu.dtype)
+    plan, err = plan_err((f, g))
+    return plan, f, g, err, it
+
+
+def sinkhorn_kernel(cost, mu, nu, eps, iters, a0=None):
+    """Kernel-domain Sinkhorn (paper-literal matvec iteration)."""
+    step, plan_err = _kernel_pieces(cost, mu, nu, eps)
+    a = jnp.ones_like(mu) if a0 is None else a0
+    a, _ = jax.lax.scan(lambda a, _: (step(a), ()), a, None, length=iters)
+    plan, b, err = plan_err(a)
     return plan, a, b, err
+
+
+def sinkhorn_kernel_chunked(cost, mu, nu, eps, iters, chunk, tol, a0=None):
+    """Kernel-domain counterpart of :func:`sinkhorn_log_chunked`.
+
+    Returns (plan, a, b, err, iters_used); steps past ``iters`` are masked
+    no-ops.
+    """
+    eps = jnp.asarray(eps, mu.dtype)
+    step, plan_err = _kernel_pieces(cost, mu, nu, eps)
+    a = jnp.ones_like(mu) if a0 is None else a0
+    a, it, _ = _chunked_loop(a, step, lambda new, _old: plan_err(new)[2],
+                             iters, chunk, tol, mu.dtype)
+    plan, b, err = plan_err(a)
+    return plan, a, b, err, it
 
 
 def sinkhorn_unbalanced_log(cost, mu, nu, eps, rho_x, rho_y, iters,
@@ -89,30 +225,85 @@ def sinkhorn_unbalanced_log(cost, mu, nu, eps, rho_x, rho_y, iters,
     Solves min_γ ⟨C,γ⟩ + rho_x KL(γ1|μ) + rho_y KL(γᵀ1|ν) + ε KL(γ|μ⊗ν).
     Plan convention: γ = exp((f⊕g − C)/ε)·(μ⊗ν).
     """
-    tx = rho_x / (rho_x + eps)
-    ty = rho_y / (rho_y + eps)
-    log_mu = jnp.log(mu)
-    log_nu = jnp.log(nu)
+    step, plan_of = _unbalanced_pieces(cost, mu, nu, eps, rho_x, rho_y)
+    f = jnp.zeros_like(mu) if f0 is None else f0
+    g = jnp.zeros_like(nu) if g0 is None else g0
+    (f, g), _ = jax.lax.scan(lambda c, _: (step(c), ()), (f, g), None,
+                             length=iters)
+    return plan_of((f, g)), f, g
+
+
+def sinkhorn_unbalanced_log_chunked(cost, mu, nu, eps, rho_x, rho_y, iters,
+                                    chunk, tol, f0=None, g0=None):
+    """Unbalanced log-domain Sinkhorn with chunked early stopping.
+
+    Returns (plan, f, g, drift, iters_used).  Unbalanced plans satisfy no
+    exact marginal, so the residual is the fixed-point drift — the L∞
+    change of (f, g) across the last sweep; steps past ``iters`` are masked
+    no-ops (zero drift), and the cap check keeps them from stopping a live
+    solve early.
+    """
+    step, plan_of = _unbalanced_pieces(cost, mu, nu, eps, rho_x, rho_y)
     f = jnp.zeros_like(mu) if f0 is None else f0
     g = jnp.zeros_like(nu) if g0 is None else g0
 
-    def step(carry, _):
-        f, g = carry
-        lse_r = logsumexp((g[None, :] - cost) / eps + log_nu[None, :], axis=1)
-        f = -tx * eps * lse_r
-        lse_c = logsumexp((f[:, None] - cost) / eps + log_mu[:, None], axis=0)
-        g = -ty * eps * lse_c
-        return (f, g), ()
+    def residual(new, old):
+        return (jnp.abs(new[0] - old[0]).max()
+                + jnp.abs(new[1] - old[1]).max())
 
-    (f, g), _ = jax.lax.scan(step, (f, g), None, length=iters)
-    plan = jnp.exp((f[:, None] + g[None, :] - cost) / eps
-                   + log_mu[:, None] + log_nu[None, :])
-    return plan, f, g
+    (f, g), it, drift = _chunked_loop((f, g), step, residual, iters, chunk,
+                                      tol, mu.dtype)
+    return plan_of((f, g)), f, g, drift, it
+
+
+def _warm_scalings(f0, eps):
+    """Potentials → kernel scalings: a0 = exp((f0 − shift)/ε).
+
+    Keeps the warm start alive across Sinkhorn modes.  Scalings are defined
+    up to a scalar (a Kantorovich dual offset), so shifting by the largest
+    finite potential changes nothing — but keeps exp() from overflowing
+    when log-domain-scale potentials meet a small ε.  −inf entries
+    (zero-mass atoms) map to 0, their exact fixed point.
+    """
+    if f0 is None:
+        return None
+    # shift by the largest FINITE potential (uniformly negative potentials
+    # are a valid dual point — clamping the shift at 0 would underflow every
+    # scaling to 0 and NaN the solve); all-(−inf) degenerates to shift 0
+    shift = jnp.max(jnp.where(jnp.isfinite(f0), f0, -jnp.inf))
+    shift = jnp.where(jnp.isfinite(shift), shift, 0.0)
+    return jnp.exp((f0 - shift) / eps)
 
 
 def solve(cost, mu, nu, cfg: SinkhornConfig, f0=None, g0=None):
     if cfg.mode == "log":
         return sinkhorn_log(cost, mu, nu, cfg.eps, cfg.iters, f0, g0)
-    plan, a, b, err = sinkhorn_kernel(cost, mu, nu, cfg.eps, cfg.iters)
+    plan, a, b, err = sinkhorn_kernel(cost, mu, nu, cfg.eps, cfg.iters,
+                                      _warm_scalings(f0, cfg.eps))
     # convert scalings to potentials so warm-start is mode-agnostic
     return plan, cfg.eps * jnp.log(a), cfg.eps * jnp.log(b), err
+
+
+def solve_adaptive(cost, mu, nu, eps, iters, chunk, tol, mode="log",
+                   f0=None, g0=None, unroll=False):
+    """Mode dispatch for the convergence-controlled driver.
+
+    Returns (plan, f, g, err, iters_used) with warm-startable potentials in
+    either mode.  ``unroll=True`` uses the fixed-length scans (reverse-mode
+    differentiable; ``tol`` ignored, ``iters_used == iters``).
+    """
+    eps = jnp.asarray(eps, mu.dtype)
+    if mode == "log":
+        if unroll:
+            plan, f, g, err = sinkhorn_log(cost, mu, nu, eps, iters, f0, g0)
+            return plan, f, g, err, jnp.asarray(iters, jnp.int32)
+        return sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
+                                    f0, g0)
+    a0 = _warm_scalings(f0, eps)
+    if unroll:
+        plan, a, b, err = sinkhorn_kernel(cost, mu, nu, eps, iters, a0)
+        used = jnp.asarray(iters, jnp.int32)
+    else:
+        plan, a, b, err, used = sinkhorn_kernel_chunked(
+            cost, mu, nu, eps, iters, chunk, tol, a0)
+    return plan, eps * jnp.log(a), eps * jnp.log(b), err, used

@@ -10,7 +10,13 @@ quadratic-mass optimality condition  Γ ← Γ·√(m(Γ̂)/m(Γ)).
 
 The paper's point (Remark 2.3): the O(M²N+MN²) bottleneck is the same
 D_X Γ D_Y term, so FGC applies verbatim — everything else is O(MN).
-Gradient pieces come from `repro.core.gradient.GradientOperator`.
+Gradient pieces come from `repro.core.gradient.GradientOperator`; the outer
+loop is the shared convergence-controlled driver
+(`repro.core.solver.mirror_descent`).  Unbalanced plans satisfy no exact
+marginal, so the per-step residual reported in `ConvergenceInfo` /
+`GWResult.errs` is the inner solver's fixed-point drift (L∞ potential
+change over its last sweep), and early stopping triggers on plan movement +
+drift ≤ tol.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ import jax.numpy as jnp
 from repro.core import sinkhorn as sk
 from repro.core.gradient import GeometryLike, GradientOperator
 from repro.core.gw import GWResult
+from repro.core.solver import (SolveControls, mirror_descent, plan_delta,
+                               resolve_controls)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +39,10 @@ class UGWConfig:
     outer_iters: int = 10
     sinkhorn_iters: int = 200
     backend: str = "cumsum"
+    tol: float = 0.0           # early-stop tolerance (0 → fixed-iteration)
+    eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
+    anneal_decay: float = 0.5
+    sinkhorn_chunk: int = 25
 
 
 def _kl(a, b):
@@ -49,28 +61,38 @@ def local_cost(op: GradientOperator, gamma, mu, nu, eps, rho):
 
 
 def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
-                 cfg: UGWConfig = UGWConfig(), gamma0=None) -> GWResult:
+                 cfg: UGWConfig = UGWConfig(), gamma0=None,
+                 controls: SolveControls | None = None) -> GWResult:
     """``grid_x``/``grid_y``: Grids or any Geometry (repro.core.geometry)."""
+    ctl, unroll = resolve_controls(cfg, controls)
+    # reuse the materialized operator: rebuilding it inside the loop body
+    # would re-trace point-cloud gram construction every outer step
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
     f = jnp.zeros_like(mu)
     g = jnp.zeros_like(nu)
 
-    def outer(carry, _):
-        gamma, f, g = carry
+    def step(state, eps):
+        gamma, f, g = state
         mass = gamma.sum()
-        # reuse the materialized operator: rebuilding it here would re-trace
-        # point-cloud gram construction inside the scan body
-        cost = local_cost(op, gamma, mu, nu, cfg.eps, cfg.rho)
-        eps_t = cfg.eps * mass
+        cost = local_cost(op, gamma, mu, nu, eps, cfg.rho)
+        eps_t = eps * mass
         rho_t = cfg.rho * mass
-        new, f, g = sk.sinkhorn_unbalanced_log(
-            cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters, f, g)
+        if unroll:
+            new, f2, g2 = sk.sinkhorn_unbalanced_log(
+                cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters, f, g)
+            drift = jnp.abs(f2 - f).max() + jnp.abs(g2 - g).max()
+            used = jnp.asarray(cfg.sinkhorn_iters, jnp.int32)
+            f, g = f2, g2
+        else:
+            new, f, g, drift, used = sk.sinkhorn_unbalanced_log_chunked(
+                cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters,
+                cfg.sinkhorn_chunk, ctl.tol, f, g)
         new = new * jnp.sqrt(mass / jnp.maximum(new.sum(), 1e-300))
-        return (new, f, g), new.sum()
+        return (new, f, g), drift, used
 
-    (gamma, f, g), masses = jax.lax.scan(outer, (gamma, f, g), None,
-                                         length=cfg.outer_iters)
+    (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,
+                                         ctl, cfg.outer_iters, unroll=unroll)
     # UGW divergence value at the returned plan: the shared energy() plus
     # marginal/mass penalties.
     mu_g, nu_g = gamma.sum(1), gamma.sum(0)
@@ -80,4 +102,5 @@ def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
     val = (energy
            + cfg.rho * (2 * m * _kl(mu_g, mu) + (m - mu.sum()) ** 2)
            + cfg.rho * (2 * m * _kl(nu_g, nu) + (m - nu.sum()) ** 2))
-    return GWResult(plan=gamma, value=val, marginal_err=masses[-1], f=f, g=g)
+    return GWResult(plan=gamma, value=val, marginal_err=info.marginal_err,
+                    f=f, g=g, errs=info.err_trace, info=info)

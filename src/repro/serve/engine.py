@@ -83,6 +83,15 @@ class GWServeConfig:
     solver: GWConfig = dataclasses.field(default_factory=GWConfig)
     max_batch: int = 16        # cap problems per vmapped solve
     size_bucket: int = 64      # pad 1D sizes up to multiples of this
+    #: serving-time convergence tolerance; overrides ``solver.tol`` when set.
+    #: A traced operand of the jitted solver, so retuning it between flushes
+    #: (or running mixed-tol engines against one bucket) never recompiles.
+    tol: float | None = None
+
+    def solver_cfg(self) -> GWConfig:
+        if self.tol is None:
+            return self.solver
+        return dataclasses.replace(self.solver, tol=self.tol)
 
 
 class GWEngine:
@@ -100,6 +109,16 @@ class GWEngine:
     executables per bucket, reused for every later flush — the serving
     path's compilation amortization, now shared by ragged point-cloud and
     low-rank request streams, not just grids.
+
+    Convergence control: ``GWServeConfig.tol`` switches the whole serving
+    path to the adaptive driver — each lane of a vmapped chunk early-stops
+    on its own schedule (converged lanes commit no further dual updates;
+    the chunk's compute runs until its slowest lane finishes), and
+    every returned `GWResult` carries its own `ConvergenceInfo`
+    (``result.info``: outer/inner iterations used, final marginal error,
+    converged flag) plus the per-outer-step error trace (``result.errs``).
+    Tolerance and ε-annealing knobs are traced operands, so retuning them
+    between flushes never recompiles a bucket executable.
 
     Failure isolation: each bucket is solved independently.  When a bucket
     raises, its UNSOLVED requests stay queued for retry (chunks solved
@@ -168,7 +187,8 @@ class GWEngine:
                         b = min(b, self.cfg.max_batch)
                         probs = ([p for _, p in chunk]
                                  + [chunk[-1][1]] * (b - len(chunk)))
-                        solved = entropic_gw_batch(probs, self.cfg.solver,
+                        solved = entropic_gw_batch(probs,
+                                                   self.cfg.solver_cfg(),
                                                    pad_to=pad_to,
                                                    num_results=len(chunk))
                         for (rid, _), res in zip(chunk, solved):
@@ -187,4 +207,5 @@ class GWEngine:
 
     def solve(self, problems, pad_to=None) -> list[GWResult]:
         """Direct batched solve (no queue) — thin passthrough."""
-        return entropic_gw_batch(problems, self.cfg.solver, pad_to=pad_to)
+        return entropic_gw_batch(problems, self.cfg.solver_cfg(),
+                                 pad_to=pad_to)

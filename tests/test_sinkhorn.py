@@ -70,3 +70,65 @@ def test_warm_start_helps():
     _, f, g, err_cold = sk.sinkhorn_log(cost, mu, nu, 0.01, 50)
     _, _, _, err_warm = sk.sinkhorn_log(cost, mu, nu, 0.01, 50, f, g)
     assert float(err_warm) <= float(err_cold) + 1e-12
+
+
+def test_kernel_warm_start_survives_solve():
+    """solve() in kernel mode must convert warm-start potentials to
+    scalings (a0 = exp(f0/ε)) instead of starting cold."""
+    cost = jnp.asarray(RNG.random((15, 18)))
+    mu, nu = _rand_measures(15, 18, 5)
+    cfg = sk.SinkhornConfig(eps=0.1, iters=25, mode="kernel")
+    _, f, g, err_cold = sk.solve(cost, mu, nu, cfg)
+    _, _, _, err_warm = sk.solve(cost, mu, nu, cfg, f, g)
+    assert float(err_warm) < float(err_cold)
+
+
+def test_kernel_warm_start_large_potentials_stay_finite():
+    """Potentials → scalings must not overflow exp(): shifting by the max
+    finite potential is a free dual offset.  f0 + 5 is the same dual point
+    as f0 (shift absorbed by g), but exp((f0+5)/eps) alone would blow up."""
+    cost = jnp.asarray(RNG.random((12, 12)))
+    mu, nu = _rand_measures(12, 12, 9)
+    cfg = sk.SinkhornConfig(eps=5e-3, iters=40, mode="kernel")
+    _, f, g, _ = sk.sinkhorn_log(cost, mu, nu, cfg.eps, 200)
+    plan, fw, gw, err = sk.solve(cost, mu, nu, cfg, f + 5.0, g - 5.0)
+    assert np.isfinite(np.asarray(plan)).all()
+    assert np.isfinite(float(err))
+    # uniformly NEGATIVE potentials with a −inf zero-mass atom: the shift
+    # must track the largest finite entry, not clamp at 0 (else every
+    # scaling underflows to 0 and the solve NaNs)
+    f2 = (f - 5.0).at[0].set(-jnp.inf)
+    mu2 = mu.at[0].set(0.0)
+    mu2 = mu2 / mu2.sum()
+    plan2, *_ , err2 = sk.solve(cost, mu2, nu, cfg, f2, g + 5.0)
+    assert np.isfinite(np.asarray(plan2)).all()
+    assert np.isfinite(float(err2))
+
+
+def test_kernel_chunked_matches_kernel_at_tol0():
+    cost = jnp.asarray(RNG.random((20, 25)))
+    mu, nu = _rand_measures(20, 25, 6)
+    p0, a0, b0, e0 = sk.sinkhorn_kernel(cost, mu, nu, 0.1, 130)
+    p1, a1, b1, e1, used = sk.sinkhorn_kernel_chunked(cost, mu, nu, 0.1, 130,
+                                                      chunk=25, tol=0.0)
+    assert int(used) == 130
+    np.testing.assert_allclose(np.asarray(p0), np.asarray(p1), atol=1e-14)
+
+
+def test_unbalanced_chunked_matches_unbalanced_at_tol0():
+    cost = jnp.asarray(RNG.random((15, 15)))
+    mu, nu = _rand_measures(15, 15, 7)
+    p0, f0, g0 = sk.sinkhorn_unbalanced_log(cost, mu, nu, 0.05, 1.0, 1.0, 130)
+    p1, f1, g1, drift, used = sk.sinkhorn_unbalanced_log_chunked(
+        cost, mu, nu, 0.05, 1.0, 1.0, 130, chunk=25, tol=0.0)
+    assert int(used) == 130
+    np.testing.assert_allclose(np.asarray(p0), np.asarray(p1), atol=1e-14)
+
+
+def test_unbalanced_chunked_early_stops():
+    cost = jnp.asarray(RNG.random((15, 15)))
+    mu, nu = _rand_measures(15, 15, 8)
+    _, _, _, drift, used = sk.sinkhorn_unbalanced_log_chunked(
+        cost, mu, nu, 0.05, 1.0, 1.0, 2000, chunk=25, tol=1e-10)
+    assert int(used) < 2000
+    assert float(drift) <= 1e-10

@@ -1,0 +1,324 @@
+"""Convergence-controlled solver core: adaptive-vs-fixed parity, early
+stopping, ε-annealing, per-problem masking under vmap, traced-controls
+no-recompile guarantees, and the serving tol knob."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BarycenterConfig, FGWConfig, GWConfig, UGWConfig,
+                        coot, entropic_fgw, entropic_gw, entropic_gw_batch,
+                        entropic_ugw, gw_barycenter)
+from repro.core import sinkhorn as sk
+from repro.core.grids import Grid1D
+from repro.core.gw import _solve_stacked
+from repro.serve.engine import GWEngine, GWServeConfig
+
+
+def _measures(n, seed):
+    r = np.random.default_rng(seed)
+    u = r.random(n) + 0.05
+    return jnp.asarray(u / u.sum())
+
+
+def _problem(n=40, seed=0, k=1):
+    g = Grid1D(n, 1 / (n - 1), k)
+    return g, _measures(n, seed), _measures(n, seed + 1)
+
+
+FIXED = GWConfig(eps=2e-3, outer_iters=10, sinkhorn_iters=200)
+
+
+# ---------------------------------------------------------------------------
+# chunked Sinkhorn == plain Sinkhorn at tol=0 (exact iteration masking)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters", [40, 130])   # neither divisible by chunk:
+#                                                the final partial sweep must
+#                                                mask its trailing steps
+def test_chunked_sinkhorn_matches_plain_at_tol0(iters):
+    r = np.random.default_rng(5)
+    cost = jnp.asarray(r.random((20, 25)))
+    mu, nu = _measures(20, 0), _measures(25, 1)
+    p0, f0, g0, e0 = sk.sinkhorn_log(cost, mu, nu, 0.01, iters)
+    p1, f1, g1, e1, used = sk.sinkhorn_log_chunked(cost, mu, nu, 0.01, iters,
+                                                   chunk=25, tol=0.0)
+    assert int(used) == iters            # masked remainder steps are no-ops
+    np.testing.assert_allclose(np.asarray(p0), np.asarray(p1), atol=1e-14)
+    np.testing.assert_allclose(float(e0), float(e1), rtol=1e-10)
+
+
+def test_chunked_sinkhorn_early_stops():
+    r = np.random.default_rng(6)
+    cost = jnp.asarray(r.random((20, 20)))
+    mu, nu = _measures(20, 2), _measures(20, 3)
+    plan, f, g, err, used = sk.sinkhorn_log_chunked(cost, mu, nu, 0.1, 500,
+                                                    chunk=25, tol=1e-8)
+    assert int(used) < 500
+    assert float(err) <= 1e-8
+    np.testing.assert_allclose(np.asarray(plan.sum(1)), np.asarray(mu),
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# adaptive vs fixed: parity, early stop, annealing
+# ---------------------------------------------------------------------------
+
+def test_adaptive_matches_fixed_at_tight_tol():
+    """Without annealing the adaptive driver follows the fixed iterates and
+    merely stops once the plan is stationary — at tight tol the plans agree
+    to that tolerance (f64)."""
+    g, mu, nu = _problem(40, 0)
+    fixed = entropic_gw(g, g, mu, nu, FIXED)
+    ad = entropic_gw(g, g, mu, nu,
+                     dataclasses.replace(FIXED, tol=1e-10, outer_iters=10))
+    np.testing.assert_allclose(np.asarray(ad.plan), np.asarray(fixed.plan),
+                               atol=1e-6)
+    assert abs(float(ad.value - fixed.value)) < 1e-8
+
+
+def test_fixed_mode_runs_exactly_the_cap():
+    g, mu, nu = _problem(30, 4)
+    res = entropic_gw(g, g, mu, nu, FIXED)
+    assert int(res.info.outer_iters) == FIXED.outer_iters
+    assert int(res.info.inner_iters) == (FIXED.outer_iters
+                                         * FIXED.sinkhorn_iters)
+    assert not bool(res.info.converged)
+    assert np.isfinite(np.asarray(res.errs)).all()   # full trace, no NaN
+
+
+def test_early_stop_actually_stops():
+    """Easy regime: the driver must use far fewer iterations than the caps
+    and flag convergence."""
+    g, mu, nu = _problem(40, 6)
+    cfg = GWConfig(eps=5e-2, outer_iters=40, sinkhorn_iters=500, tol=1e-6)
+    res = entropic_gw(g, g, mu, nu, cfg)
+    assert bool(res.info.converged)
+    assert int(res.info.outer_iters) < cfg.outer_iters
+    assert int(res.info.inner_iters) < cfg.outer_iters * cfg.sinkhorn_iters
+    # and the result is actually converged
+    assert float(jnp.abs(res.plan.sum(1) - mu).sum()) <= 1e-6
+
+
+def test_error_trace_is_surfaced():
+    g, mu, nu = _problem(40, 8)
+    cfg = GWConfig(eps=5e-2, outer_iters=40, sinkhorn_iters=500, tol=1e-6)
+    res = entropic_gw(g, g, mu, nu, cfg)
+    k = int(res.info.outer_iters)
+    errs = np.asarray(res.errs)
+    assert errs.shape == (cfg.outer_iters,)
+    assert np.isfinite(errs[:k]).all()       # executed steps recorded
+    assert np.isnan(errs[k:]).all()          # NaN past the stopping point
+    assert errs[k - 1] == float(res.info.marginal_err)
+
+
+def test_annealing_converges_and_improves_hard_regime():
+    """ε-annealing at the paper's ε=0.002: converges under the cap and finds
+    an equal-or-better energy basin than the blind fixed loop."""
+    g, mu, nu = _problem(40, 0)
+    fixed = entropic_gw(g, g, mu, nu, FIXED)
+    ad = entropic_gw(g, g, mu, nu,
+                     GWConfig(eps=2e-3, outer_iters=60, sinkhorn_iters=500,
+                              tol=1e-5, eps_init=5e-2))
+    assert bool(ad.info.converged)
+    assert (float(jnp.abs(ad.plan.sum(1) - mu).sum())
+            <= float(jnp.abs(fixed.plan.sum(1) - mu).sum()))
+    assert float(ad.value) <= float(fixed.value) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# vmapped batch: per-problem masking
+# ---------------------------------------------------------------------------
+
+def test_masked_batch_matches_unbatched_adaptive():
+    """Each lane of an adaptive vmapped batch must stop on its own schedule
+    and reproduce the unbatched solve exactly — plans AND iteration
+    counts."""
+    cfg = GWConfig(eps=5e-2, outer_iters=40, sinkhorn_iters=300, tol=1e-6)
+    probs = []
+    for i, (m, n) in enumerate([(30, 30), (25, 40), (17, 22)]):
+        probs.append((Grid1D(m, 1 / (m - 1), 1), Grid1D(n, 1 / (n - 1), 1),
+                      _measures(m, 2 * i), _measures(n, 2 * i + 1)))
+    batch = entropic_gw_batch(probs, cfg)
+    outer_counts = set()
+    for res, (gx, gy, mu, nu) in zip(batch, probs):
+        single = entropic_gw(gx, gy, mu, nu, cfg)
+        np.testing.assert_allclose(np.asarray(res.plan),
+                                   np.asarray(single.plan), atol=1e-10)
+        assert int(res.info.outer_iters) == int(single.info.outer_iters)
+        assert int(res.info.inner_iters) == int(single.info.inner_iters)
+        assert bool(res.info.converged)
+        outer_counts.add(int(res.info.outer_iters))
+    # the problems genuinely stop at different iterations — the masking is
+    # exercised, not vacuous
+    assert len(outer_counts) > 1
+
+
+# ---------------------------------------------------------------------------
+# traced controls: no recompilation when tol/ε/schedule values change
+# ---------------------------------------------------------------------------
+
+def test_no_recompile_varying_tol_and_schedule():
+    _solve_stacked.clear_cache()
+    probs = [(Grid1D(20, 1 / 19, 1), Grid1D(20, 1 / 19, 1),
+              _measures(20, 0), _measures(20, 1))]
+    base = GWConfig(eps=5e-2, outer_iters=8, sinkhorn_iters=100, tol=1e-5)
+    entropic_gw_batch(probs, base)
+    n0 = _solve_stacked._cache_size()
+    for cfg in [dataclasses.replace(base, tol=1e-7),
+                dataclasses.replace(base, eps=1e-2),
+                dataclasses.replace(base, eps_init=0.1, anneal_decay=0.7),
+                dataclasses.replace(base, tol=0.0)]:
+        entropic_gw_batch(probs, cfg)
+    assert _solve_stacked._cache_size() == n0
+    # structural knobs DO recompile (deliberately part of the cfg hash)
+    entropic_gw_batch(probs, dataclasses.replace(base, outer_iters=4))
+    assert _solve_stacked._cache_size() == n0 + 1
+
+
+# ---------------------------------------------------------------------------
+# the other solvers ride the same driver
+# ---------------------------------------------------------------------------
+
+def test_fgw_adaptive_matches_fixed():
+    n = 30
+    g = Grid1D(n, 1 / (n - 1), 1)
+    mu, nu = _measures(n, 10), _measures(n, 11)
+    c = jnp.abs(jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) \
+        .astype(jnp.float64) / (n - 1)
+    fixed = entropic_fgw(g, g, c, mu, nu,
+                         FGWConfig(eps=5e-3, outer_iters=10,
+                                   sinkhorn_iters=200))
+    ad = entropic_fgw(g, g, c, mu, nu,
+                      FGWConfig(eps=5e-3, outer_iters=30, sinkhorn_iters=300,
+                                tol=1e-7))
+    assert bool(ad.info.converged)
+    np.testing.assert_allclose(np.asarray(ad.plan), np.asarray(fixed.plan),
+                               atol=1e-5)
+
+
+def test_ugw_adaptive_converges():
+    n = 25
+    g = Grid1D(n, 1 / (n - 1), 1)
+    mu, nu = _measures(n, 12), _measures(n, 13)
+    # deep fixed run = the converged reference; adaptive must land there
+    # while stopping on its own signal
+    fixed = entropic_ugw(g, g, mu, nu,
+                         UGWConfig(eps=1e-2, rho=1.0, outer_iters=30,
+                                   sinkhorn_iters=300))
+    ad = entropic_ugw(g, g, mu, nu,
+                      UGWConfig(eps=1e-2, rho=1.0, outer_iters=30,
+                                sinkhorn_iters=300, tol=1e-7))
+    assert bool(ad.info.converged)
+    assert int(ad.info.inner_iters) < int(fixed.info.inner_iters)
+    np.testing.assert_allclose(np.asarray(ad.plan), np.asarray(fixed.plan),
+                               atol=1e-5)
+    assert abs(float(ad.value - fixed.value)) < 1e-6
+
+
+def test_coot_adaptive_converges_with_info():
+    r = np.random.default_rng(14)
+    x = jnp.asarray(r.normal(size=(12, 8)))
+    u = lambda n: jnp.full((n,), 1.0 / n, jnp.float64)
+    cfg = coot.COOTConfig(eps_samples=5e-3, eps_features=5e-3,
+                          outer_iters=30, sinkhorn_iters=200, tol=1e-7)
+    pi_s, pi_v, val, info = coot.entropic_coot(
+        x, x, u(12), u(12), u(8), u(8), cfg, return_info=True)
+    assert bool(info.converged)
+    assert int(info.outer_iters) < 30
+    assert (np.argmax(np.asarray(pi_s), 1) == np.arange(12)).mean() > 0.8
+    assert np.isfinite(float(val))
+
+
+def test_barycenter_adaptive_plans_feasible():
+    grids = [Grid1D(20, 1 / 19, 1), Grid1D(25, 1 / 24, 1)]
+    measures = [_measures(20, 16), _measures(25, 17)]
+    mu_bar = jnp.full((22,), 1 / 22.)
+    cfg = BarycenterConfig(eps=5e-3, outer_iters=3, gw_iters=10,
+                           sinkhorn_iters=200, tol=1e-6)
+    dbar, plans = gw_barycenter(grids, measures, [0.5, 0.5], mu_bar, cfg)
+    assert bool(jnp.isfinite(dbar).all())
+    for plan, nu in zip(plans, measures):
+        np.testing.assert_allclose(np.asarray(plan.sum(0)), np.asarray(nu),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(plan.sum(1)),
+                                   np.asarray(mu_bar), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# serving path: tol knob, per-request ConvergenceInfo, no recompilation
+# ---------------------------------------------------------------------------
+
+def test_engine_tol_knob_and_per_request_info():
+    _solve_stacked.clear_cache()
+    solver = GWConfig(eps=5e-2, outer_iters=30, sinkhorn_iters=300)
+    eng = GWEngine(GWServeConfig(solver=solver, max_batch=4, size_bucket=32,
+                                 tol=1e-6))
+    probs = []
+    for i, (m, n) in enumerate([(20, 25), (30, 18), (25, 25)]):
+        p = (Grid1D(m, 1 / (m - 1), 1), Grid1D(n, 1 / (n - 1), 1),
+             _measures(m, 2 * i), _measures(n, 2 * i + 1))
+        probs.append(p)
+        eng.submit(*p)
+    out = eng.flush()
+    assert len(out) == 3
+    for rid, (gx, gy, mu, nu) in zip(sorted(out), probs):
+        res = out[rid]
+        assert bool(res.info.converged)
+        assert int(res.info.inner_iters) < 30 * 300
+        assert float(res.info.marginal_err) <= 1e-6
+        assert res.errs.shape == (30,)
+        ref = entropic_gw(gx, gy, mu, nu,
+                          dataclasses.replace(solver, tol=1e-6))
+        np.testing.assert_allclose(np.asarray(res.plan),
+                                   np.asarray(ref.plan), atol=1e-8)
+    n0 = _solve_stacked._cache_size()
+    # retuning the serving tolerance must NOT recompile the bucket
+    eng.cfg.tol = 1e-4
+    for p in probs:
+        eng.submit(*p)
+    out2 = eng.flush()
+    assert len(out2) == 3
+    assert _solve_stacked._cache_size() == n0
+
+
+# ---------------------------------------------------------------------------
+# differentiability: the tol=0 default must stay on the scan path
+# ---------------------------------------------------------------------------
+
+def test_fixed_mode_stays_reverse_differentiable():
+    """The pre-driver solvers were differentiable by unroll; the tol=0
+    default must still be (the while_loop engages only for adaptive mode
+    and the batched path)."""
+    n = 12
+    mu = _measures(n, 20)
+
+    def loss(h):
+        g = Grid1D(n, h, 1)
+        return entropic_gw(g, g, mu, mu,
+                           GWConfig(eps=1e-2, outer_iters=3,
+                                    sinkhorn_iters=30)).value
+
+    grad = jax.grad(loss)(0.1)
+    assert np.isfinite(float(grad))
+
+
+# ---------------------------------------------------------------------------
+# kernel-mode warm start (sinkhorn.solve satellite)
+# ---------------------------------------------------------------------------
+
+def test_unroll_with_tol_is_rejected():
+    with pytest.raises(ValueError):
+        GWConfig(tol=1e-6, unroll=True)
+
+
+def test_solve_kernel_mode_uses_warm_start():
+    r = np.random.default_rng(18)
+    cost = jnp.asarray(r.random((20, 20)))
+    mu, nu = _measures(20, 18), _measures(20, 19)
+    cfg = sk.SinkhornConfig(eps=0.1, iters=30, mode="kernel")
+    _, f, g, err_cold = sk.solve(cost, mu, nu, cfg)
+    _, _, _, err_warm = sk.solve(cost, mu, nu, cfg, f, g)
+    assert float(err_warm) < float(err_cold)
