@@ -1,0 +1,81 @@
+"""Serving example: continuous-batching GW solving with per-request ε.
+
+A mixed-difficulty request stream (easy ε=0.05 → the paper's hard ε=0.002,
+with ε-annealing) flows through `GWEngine`'s slot scheduler: bounded
+segments of outer steps per dispatch, converged lanes harvested and their
+slots refilled between segments, hardest-predicted requests admitted first.
+The flush-barrier scheduler solves the same stream for comparison — results
+must agree bit-for-bit (scheduling changes WHEN work runs, never what it
+computes).
+
+Run:  PYTHONPATH=src python examples/serve_gw.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GWConfig
+from repro.core.grids import Grid1D
+from repro.serve.engine import GWEngine, GWServeConfig
+
+
+def measure(n, seed):
+    r = np.random.default_rng(seed)
+    u = r.random(n) + 0.05
+    return jnp.asarray(u / u.sum())
+
+
+def run(scheduler, stream, solver):
+    eng = GWEngine(GWServeConfig(solver=solver, max_batch=4, size_bucket=48,
+                                 tol=1e-4, scheduler=scheduler))
+    rids = {eng.submit(g, g, mu, nu, eps=eps, eps_init=5e-2): eps
+            for g, mu, nu, eps in stream}
+    t0 = time.perf_counter()
+    out = eng.flush()
+    jax.block_until_ready([r.plan for r in out.values()])
+    return eng, rids, out, time.perf_counter() - t0
+
+
+def main():
+    n = 48
+    g = Grid1D(n, 1.0 / (n - 1), 1)
+    eps_cycle = [5e-2, 2e-2, 8e-3, 2e-3]
+    stream = [(g, measure(n, 2 * i), measure(n, 2 * i + 1),
+               eps_cycle[i % 4]) for i in range(12)]
+    solver = GWConfig(eps=2e-3, outer_iters=60, sinkhorn_iters=400)
+
+    run("continuous", stream, solver)          # warm the jit caches
+    run("barrier", stream, solver)
+    eng, rids, out, wall_c = run("continuous", stream, solver)
+    _, _, out_b, wall_b = run("barrier", stream, solver)
+
+    print(f"{'req':>4} {'eps':>7} {'outer':>6} {'inner':>6} "
+          f"{'marginal err':>13} conv")
+    for rid in sorted(out):
+        info = out[rid].info
+        print(f"{rid:4d} {rids[rid]:7.0e} {int(info.outer_iters):6d} "
+              f"{int(info.inner_iters):6d} "
+              f"{float(info.marginal_err):13.2e} "
+              f"{bool(info.converged)}")
+    s = eng.stats
+    print(f"\ncontinuous: {s['dispatches']} dispatches, "
+          f"{s['refills']} refills, {s['repacks']} repacks; "
+          f"executed/useful inner {s['executed_inner']}/{s['useful_inner']}")
+    print(f"wall: barrier {wall_b:.3f}s → continuous {wall_c:.3f}s")
+    # scheduling must not change results
+    same = all(bool(jnp.array_equal(out[r].plan, out_b[r].plan))
+               for r in out)
+    assert same and set(out) == set(out_b)
+    print("barrier and continuous schedules returned identical plans OK")
+
+
+if __name__ == "__main__":
+    main()

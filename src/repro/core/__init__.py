@@ -23,15 +23,17 @@ Public API:
 """
 from repro.core import (fgc, geometry, gradient, grids, sinkhorn, solver, gw,
                         fgw, ugw, barycenter, losses, coot)
-from repro.core.solver import (ConvergenceInfo, SolveControls,
-                               mirror_descent, resolve_controls)
+from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
+                               info_of, init_carry, mirror_descent,
+                               mirror_descent_segment, resolve_controls)
 from repro.core.geometry import (DenseGeometry, Geometry, GridGeometry,
                                  LowRankGeometry, PointCloudGeometry,
                                  as_geometry)
 from repro.core.gradient import GradientOperator
 from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
 from repro.core.gw import (GWConfig, GWResult, entropic_gw,
-                           entropic_gw_batch, gw_energy, gw_plan_solve)
+                           entropic_gw_batch, gw_energy, gw_plan_segment,
+                           gw_plan_solve, stack_controls)
 from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
 from repro.core.ugw import UGWConfig, entropic_ugw
 from repro.core.barycenter import BarycenterConfig, gw_barycenter
@@ -40,12 +42,14 @@ from repro.core.losses import AlignConfig, fgw_alignment_loss
 __all__ = [
     "fgc", "geometry", "gradient", "grids", "sinkhorn", "solver", "gw",
     "fgw", "ugw", "barycenter", "losses", "GradientOperator",
-    "ConvergenceInfo", "SolveControls", "mirror_descent", "resolve_controls",
+    "ConvergenceInfo", "MirrorCarry", "SolveControls", "info_of",
+    "init_carry", "mirror_descent", "mirror_descent_segment",
+    "resolve_controls",
     "Geometry", "GridGeometry", "LowRankGeometry", "PointCloudGeometry",
     "DenseGeometry", "as_geometry",
     "Grid1D", "Grid2D", "gw_product", "gw_product_dense",
     "GWConfig", "GWResult", "entropic_gw", "entropic_gw_batch", "gw_energy",
-    "gw_plan_solve",
+    "gw_plan_segment", "gw_plan_solve", "stack_controls",
     "FGWConfig", "entropic_fgw", "fgw_energy",
     "UGWConfig", "entropic_ugw",
     "BarycenterConfig", "gw_barycenter",

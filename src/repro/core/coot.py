@@ -77,7 +77,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
               jnp.zeros_like(mu_s), jnp.zeros_like(nu_s),
               jnp.zeros_like(mu_v), jnp.zeros_like(nu_v))
 
-    def step(state, eps_s):
+    def step(state, eps_s, inner_tol):
         pi_s, pi_v, f_s, g_s, f_v, g_v = state
         eps_v = cfg.eps_features * (eps_s / ctl.eps)  # same annealing ramp
         # samples half-step
@@ -88,7 +88,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                                         cfg.backend))
         pi_s, f_s, g_s, err_s, used_s = sk.solve_adaptive(
             m_s, mu_s, nu_s, eps_s, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            ctl.tol, "log", f_s, g_s, unroll=unroll)
+            inner_tol, "log", f_s, g_s, unroll=unroll)
         # features half-step
         c = x2.T @ pi_s.sum(axis=1)
         d = y2.T @ pi_s.sum(axis=0)
@@ -96,7 +96,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                - 2.0 * (x.T @ pi_s @ y))
         pi_v, f_v, g_v, err_v, used_v = sk.solve_adaptive(
             m_v, mu_v, nu_v, eps_v, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            ctl.tol, "log", f_v, g_v, unroll=unroll)
+            inner_tol, "log", f_v, g_v, unroll=unroll)
         # gate on the worse of the two residuals: each half-step drives its
         # OWN residual to ≤ tol, so summing would demand 2× what the inner
         # solves deliver and could wedge convergence just above tol

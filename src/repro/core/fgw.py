@@ -50,12 +50,12 @@ def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
     f, g = sk.zero_mass_potentials(mu, nu)
     gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
 
-    def step(state, eps):
+    def step(state, eps, inner_tol):
         gamma, f, g = state
         grad = c2 - 4.0 * theta * op.product(gamma)
         gamma, f, g, err, used = sk.solve_adaptive(
             grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            ctl.tol, cfg.sinkhorn_mode, f, g, unroll=unroll)
+            inner_tol, cfg.sinkhorn_mode, f, g, unroll=unroll)
         return (gamma, f, g), err, used
 
     (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,

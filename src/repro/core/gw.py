@@ -26,9 +26,20 @@ is identically 0 there), the padded geometries are stacked leaf-wise as
 pytrees, and ONE jit-compiled vmap serves the whole batch.  The executable
 cache keys on the geometry spec (class/padded size/static params) plus the
 cfg's STRUCTURAL fields only — eps/tol/annealing knobs travel as traced
-`SolveControls`, so retuning them never recompiles.  Under ``tol>0`` each
-lane early-stops on its own schedule (the driver's per-problem masking);
-the batch returns when every lane has converged or hit the cap.
+`SolveControls` (stacked per lane, so every request may carry its own
+ε/tol/annealing schedule), so retuning them never recompiles.  Under
+``tol>0`` each lane early-stops on its own schedule (the driver's
+per-problem masking); the batch returns when every lane has converged or
+hit the cap.
+
+The batch is also *resumable*: ``max_outer_segment=k`` advances every lane
+by at most k outer steps and returns ``(results, resume_state)``; feeding
+``resume_state`` back continues bit-identically (the driver's ε/tolerance
+schedules are functions of each lane's carried step index).  That segmented
+surface — `_init_stacked` / `_segment_stacked` / `stack_problems` /
+`_init_lane` — is what `repro.serve.engine.GWEngine` drives as a
+continuous-batching scheduler: harvest converged lanes after each segment,
+refill the freed slots from the admission queue.
 """
 from __future__ import annotations
 
@@ -42,8 +53,10 @@ import jax.numpy as jnp
 from repro.core import sinkhorn as sk
 from repro.core.geometry import Geometry, as_geometry
 from repro.core.gradient import GradientOperator
-from repro.core.solver import (ConvergenceInfo, SolveControls, mirror_descent,
-                               plan_delta, resolve_controls)
+from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
+                               info_of, init_carry, mirror_descent,
+                               mirror_descent_segment, plan_delta,
+                               resolve_controls)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +71,7 @@ class GWConfig:
     anneal_decay: float = 0.5  # geometric ε decay per outer step
     sinkhorn_chunk: int = 25   # inner iterations between residual checks
     unroll: bool = False       # scan-only path (reverse-mode differentiable)
+    inner_loosen: float = 1.0  # inner-tol ε-scaling strength (0 → flat tol)
 
     def __post_init__(self):
         # unroll is the fixed-length differentiable path: it ignores tol by
@@ -74,7 +88,7 @@ class GWConfig:
         `SolveControls` operands instead, so retuning them reuses the
         compiled executable."""
         return dataclasses.replace(self, eps=0.0, tol=0.0, eps_init=None,
-                                   anneal_decay=0.0)
+                                   anneal_decay=0.0, inner_loosen=0.0)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -105,6 +119,30 @@ def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
         gamma, dx2_mu, dy2_nu)
 
 
+def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
+               unroll: bool = False):
+    """The GW mirror-descent step closure — the ONE step body behind the
+    one-shot solve, the batched solve, and the segmented (continuous
+    batching) solve, so all three walk identical iterates."""
+
+    def step(state, eps, inner_tol):
+        gamma, f, g = state
+        gamma, f, g, err, used = sk.solve_adaptive(
+            op.grad(gamma, c1), mu, nu, eps, cfg.sinkhorn_iters,
+            cfg.sinkhorn_chunk, inner_tol, cfg.sinkhorn_mode, f, g,
+            unroll=unroll)
+        return (gamma, f, g), err, used
+
+    return step
+
+
+def gw_init_state(mu, nu, gamma0=None):
+    """The standard cold start: product-coupling plan, zero-mass-aware
+    potentials."""
+    f, g = sk.zero_mass_potentials(mu, nu)
+    return (mu[:, None] * nu[None, :] if gamma0 is None else gamma0, f, g)
+
+
 def gw_plan_solve(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
                   controls: SolveControls | None = None, state0=None):
     """Convergence-controlled GW mirror descent on a prepared operator.
@@ -115,19 +153,22 @@ def gw_plan_solve(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
     """
     ctl, unroll = resolve_controls(cfg, controls)
     if state0 is None:
-        f, g = sk.zero_mass_potentials(mu, nu)
-        state0 = (mu[:, None] * nu[None, :], f, g)
-
-    def step(state, eps):
-        gamma, f, g = state
-        gamma, f, g, err, used = sk.solve_adaptive(
-            op.grad(gamma, c1), mu, nu, eps, cfg.sinkhorn_iters,
-            cfg.sinkhorn_chunk, ctl.tol, cfg.sinkhorn_mode, f, g,
-            unroll=unroll)
-        return (gamma, f, g), err, used
-
+        state0 = gw_init_state(mu, nu)
+    step = gw_step_fn(op, c1, mu, nu, cfg, unroll=unroll)
     return mirror_descent(step, state0, plan_delta, ctl, cfg.outer_iters,
                           unroll=unroll)
+
+
+def gw_plan_segment(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
+                    controls: SolveControls, carry: MirrorCarry,
+                    segment: int | None = None) -> MirrorCarry:
+    """Advance a GW plan solve by at most ``segment`` outer steps (see
+    `repro.core.solver.mirror_descent_segment`): same step body as
+    `gw_plan_solve`, so a segmented solve is bit-identical to an
+    uninterrupted one."""
+    step = gw_step_fn(op, c1, mu, nu, cfg)
+    return mirror_descent_segment(step, plan_delta, controls,
+                                  cfg.outer_iters, carry, segment)
 
 
 def entropic_gw(grid_x, grid_y, mu, nu,
@@ -167,11 +208,58 @@ def _solve_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
     pytree structure — i.e. each side's geometry spec (class, padded size,
     static params) — plus leaf shapes and the cfg's structural fields
     (``cfg`` arrives pre-canonicalized via ``static_key()``; the value
-    knobs ride in ``controls``, shared across lanes)."""
-    def one(gx, gy, mu, nu):
-        return entropic_gw(gx, gy, mu, nu, cfg, controls=controls)
+    knobs ride in ``controls``, stacked per lane so every request may carry
+    its own ε/tol/annealing schedule)."""
+    def one(gx, gy, mu, nu, ctl):
+        return entropic_gw(gx, gy, mu, nu, cfg, controls=ctl)
 
-    return jax.vmap(one, in_axes=(0, 0, 0, 0))(geoms_x, geoms_y, mus, nus)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(geoms_x, geoms_y, mus,
+                                                  nus, controls)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _init_stacked(mus, nus, cfg: GWConfig) -> MirrorCarry:
+    """Fresh stacked carries for a slot batch: cold product-coupling start
+    per lane, trace sized to the cfg's outer cap."""
+    def one(mu, nu):
+        return init_carry(gw_init_state(mu, nu), cfg.outer_iters)
+
+    return jax.vmap(one)(mus, nus)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _init_lane(mu, nu, cfg: GWConfig) -> MirrorCarry:
+    """One UNstacked fresh carry — what the continuous-batching engine
+    writes into a freed slot when it admits the next queued request."""
+    return init_carry(gw_init_state(mu, nu), cfg.outer_iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "segment"))
+def _segment_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
+                     carry: MirrorCarry, cfg: GWConfig, segment: int | None):
+    """Advance every lane of a stacked carry by ≤ ``segment`` outer steps
+    and return (carry, values) — ``values`` is each lane's GW energy at its
+    current plan (stable once the lane converges, since its state freezes).
+
+    This is the continuous-batching engine's dispatch unit: the jit cache
+    keys on (geometry specs, padded shapes, batch width, segment, structural
+    cfg), so a serving stream compiles one executable per bucket × batch
+    width and reuses it for every dispatch."""
+    def one(gx, gy, mu, nu, ctl, c):
+        op = GradientOperator(gx, gy, cfg.backend)
+        # constant_term is recomputed per dispatch ON PURPOSE: it is
+        # deterministic in (geometry, mu, nu), and evaluating it inside the
+        # same vmapped subgraph the uninterrupted _solve_stacked uses is
+        # what keeps segmented iterates bit-identical to one-shot solves
+        # across separately-compiled programs.  Hoisting it into the init
+        # executable would save ~1/(segment·sinkhorn_iters) of a dispatch
+        # but let XLA fuse it differently there and break exactness.
+        c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
+        c = gw_plan_segment(op, c1, mu, nu, cfg, ctl, c, segment)
+        value = op.energy(c.state[0], dx2_mu, dy2_nu)
+        return c, value
+
+    return jax.vmap(one)(geoms_x, geoms_y, mus, nus, controls, carry)
 
 
 def _pad_to(vec, size: int):
@@ -211,9 +299,63 @@ def _stack_side(geoms: Sequence[Geometry], measures, pad: int | None):
     return stacked_g, stacked_m
 
 
+def stack_controls(controls, cfg: GWConfig, n: int) -> SolveControls:
+    """Per-lane SolveControls for a batch of ``n`` problems, stacked
+    leaf-wise.  ``controls`` may be None (every lane gets the cfg's knobs),
+    a single SolveControls (shared), or a sequence of exactly ``n``
+    per-problem SolveControls — a short list is an error, not a silent
+    replication (callers that pad problems, like the serving path's
+    duplicate-chunk padding, must pad their controls to match)."""
+    if controls is None:
+        ctls = [SolveControls.from_config(cfg)] * n
+    elif isinstance(controls, SolveControls):
+        ctls = [controls] * n
+    else:
+        ctls = list(controls)
+        if len(ctls) != n:
+            raise ValueError(
+                f"{len(ctls)} controls for {n} problems — per-problem "
+                "controls must match the (padded) problem list exactly")
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ctls)
+
+
+def _unpack_results(stacked_info, plans, values, fs, gs, errs, gxs, gys,
+                    k: int) -> list[GWResult]:
+    """Slice per-lane results back to their true (unpadded) sizes."""
+    return [
+        GWResult(plan=plans[i, :gxs[i].size, :gys[i].size],
+                 value=values[i],
+                 marginal_err=stacked_info.marginal_err[i],
+                 f=fs[i, :gxs[i].size], g=gs[i, :gys[i].size],
+                 errs=errs[i],
+                 info=jax.tree_util.tree_map(lambda l, i=i: l[i],
+                                             stacked_info))
+        for i in range(k)
+    ]
+
+
+def stack_problems(problems: Sequence[tuple], cfg: GWConfig,
+                   pad_to: tuple[int, int] | None = None, controls=None):
+    """Pad + stack a problem list into the vmapped solver's operands:
+    ``(geoms_x, geoms_y, mus, nus, controls)`` plus the adapted per-problem
+    geometries (for slicing results back).  The continuous-batching engine
+    uses this to build a slot batch it then mutates lane-wise."""
+    gxs = [as_geometry(p[0], cfg.backend) for p in problems]
+    gys = [as_geometry(p[1], cfg.backend) for p in problems]
+    geoms_x, mus_p = _stack_side(gxs, [p[2] for p in problems],
+                                 pad_to and pad_to[0])
+    geoms_y, nus_p = _stack_side(gys, [p[3] for p in problems],
+                                 pad_to and pad_to[1])
+    ctls = stack_controls(controls, cfg, len(problems))
+    return (geoms_x, geoms_y, mus_p, nus_p, ctls), gxs, gys
+
+
 def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
                       pad_to: tuple[int, int] | None = None,
-                      num_results: int | None = None) -> list[GWResult]:
+                      num_results: int | None = None,
+                      controls=None,
+                      resume_state: MirrorCarry | None = None,
+                      max_outer_segment: int | None = None):
     """Solve a batch of GW problems ``[(geom_x, geom_y, mu, nu), ...]`` with
     ONE vmapped solver call.  Geometries may be raw Grids (adapted with
     ``cfg.backend``) or any Geometry — low-rank, point-cloud, dense.
@@ -237,25 +379,35 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
     ``num_results`` limits unpacking to the first so-many problems — the
     serving path pads chunks with duplicate problems to hit power-of-two
     batch shapes, and skips slicing/transferring the duplicates.
-    """
-    if not problems:
-        return []
-    gxs = [as_geometry(p[0], cfg.backend) for p in problems]
-    gys = [as_geometry(p[1], cfg.backend) for p in problems]
-    mus = [p[2] for p in problems]
-    nus = [p[3] for p in problems]
 
-    geoms_x, mus_p = _stack_side(gxs, mus, pad_to and pad_to[0])
-    geoms_y, nus_p = _stack_side(gys, nus, pad_to and pad_to[1])
-    stacked = _solve_stacked(geoms_x, geoms_y, mus_p, nus_p,
-                             SolveControls.from_config(cfg), cfg.static_key())
+    ``controls`` optionally gives every problem its own traced solve knobs
+    (see :func:`stack_controls`) — a mixed-difficulty stream runs per-lane
+    ε/tol/annealing schedules through ONE executable.
+
+    Segmented mode: with ``max_outer_segment=k`` the batch advances at most
+    ``k`` outer steps and returns ``(results, resume_state)`` — the results
+    reflect the current (possibly unconverged; check ``result.info``)
+    state, and passing ``resume_state`` back with the SAME problems
+    continues the solve.  A solve split into segments is bit-identical to
+    an uninterrupted one (the driver's schedule depends only on the carried
+    step index).  ``resume_state`` alone (``max_outer_segment=None``) runs
+    the remaining steps to completion.
+    """
+    segmented = (resume_state is not None) or (max_outer_segment is not None)
+    if not problems:
+        return ([], None) if segmented else []
+    ops, gxs, gys = stack_problems(problems, cfg, pad_to, controls)
     k = len(problems) if num_results is None else num_results
-    return [
-        GWResult(plan=stacked.plan[i, :gxs[i].size, :gys[i].size],
-                 value=stacked.value[i], marginal_err=stacked.marginal_err[i],
-                 f=stacked.f[i, :gxs[i].size], g=stacked.g[i, :gys[i].size],
-                 errs=stacked.errs[i],
-                 info=jax.tree_util.tree_map(lambda l, i=i: l[i],
-                                             stacked.info))
-        for i in range(k)
-    ]
+    if not segmented:
+        stacked = _solve_stacked(*ops, cfg.static_key())
+        return _unpack_results(stacked.info, stacked.plan, stacked.value,
+                               stacked.f, stacked.g, stacked.errs, gxs, gys,
+                               k)
+    carry = (resume_state if resume_state is not None
+             else _init_stacked(ops[2], ops[3], cfg.static_key()))
+    carry, values = _segment_stacked(*ops, carry, cfg.static_key(),
+                                     max_outer_segment)
+    gamma, f, g = carry.state
+    results = _unpack_results(info_of(carry), gamma, values, f, g,
+                              carry.trace, gxs, gys, k)
+    return results, carry

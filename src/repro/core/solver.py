@@ -28,11 +28,29 @@ supports ε-annealing, which is what makes the paper's ε=0.002 regime cheap:
     final residual, a converged flag, and the full per-outer-step residual
     trace (NaN past the stopping point), threaded into ``GWResult`` and
     per-request through ``GWEngine.flush``.
+  * **Resumability** — the loop's whole carry (solver state, step counter,
+    inner-iteration tally, residual, converged flag, error trace) is an
+    explicit ``MirrorCarry`` pytree.  ``mirror_descent_segment`` runs at
+    most ``segment`` more outer steps on a carry and returns the advanced
+    carry, so a solve can be split into bounded segments and resumed —
+    bit-identically, because the segment body is the same step sequence the
+    uninterrupted loop runs and every schedule quantity (ε_t, inner
+    tolerance) is a function of the carried global step index, not of
+    wall-clock position in any one dispatch.  This is what lets
+    ``GWEngine`` harvest converged lanes between segments and refill their
+    slots (continuous batching) without changing any lane's result.
+  * **Stage-dependent inner tolerance** — each outer step's inner Sinkhorn
+    solve targets ``controls.inner_tol_at(t)``: proportional to the current
+    annealed ε while the schedule ramps (classic ε-scaling — there is no
+    point polishing duals that the next, sharper ε will invalidate) and
+    exactly ``tol`` once the target ε is reached.  ``inner_loosen`` (traced,
+    default 1) interpolates back to the flat schedule at 0.
 
-All knobs that are *values* (eps, tol, eps_init, anneal_decay) live in
-``SolveControls``, a pytree of traced scalars: jitted callers take them as
-operands, so retuning the tolerance or the schedule NEVER recompiles.
-Structural knobs (iteration caps, chunk sizes, backends) stay static.
+All knobs that are *values* (eps, tol, eps_init, anneal_decay,
+inner_loosen) live in ``SolveControls``, a pytree of traced scalars: jitted
+callers take them as operands, so retuning the tolerance or the schedule
+NEVER recompiles.  Structural knobs (iteration caps, chunk sizes, backends)
+stay static.
 
 ``unroll=True`` swaps the while_loop for a ``lax.scan`` over the full outer
 cap (no early stopping) — the reverse-mode-differentiable path.  Solvers
@@ -63,19 +81,25 @@ class SolveControls:
     tol: jax.Array          # convergence tolerance (0 → fixed-iteration)
     eps_init: jax.Array     # annealing start (≤ eps → no annealing)
     anneal_decay: jax.Array  # geometric decay factor per outer step
+    inner_loosen: jax.Array  # inner-tol ε-scaling strength (0 → flat tol)
 
     @classmethod
-    def make(cls, eps, tol=0.0, eps_init=None, anneal_decay=0.5):
+    def make(cls, eps, tol=0.0, eps_init=None, anneal_decay=0.5,
+             inner_loosen=1.0):
         ft = jnp.result_type(float)
         return cls(eps=jnp.asarray(eps, ft), tol=jnp.asarray(tol, ft),
                    eps_init=jnp.asarray(eps if eps_init is None else eps_init,
                                         ft),
-                   anneal_decay=jnp.asarray(anneal_decay, ft))
+                   anneal_decay=jnp.asarray(anneal_decay, ft),
+                   inner_loosen=jnp.asarray(inner_loosen, ft))
 
     @classmethod
     def from_config(cls, cfg):
-        """From any config carrying eps/tol/eps_init/anneal_decay fields."""
-        return cls.make(cfg.eps, cfg.tol, cfg.eps_init, cfg.anneal_decay)
+        """From any config carrying eps/tol/eps_init/anneal_decay fields
+        (``inner_loosen`` is optional — configs without it get the default
+        ε-scaled inner-tolerance schedule)."""
+        return cls.make(cfg.eps, cfg.tol, cfg.eps_init, cfg.anneal_decay,
+                        getattr(cfg, "inner_loosen", 1.0))
 
     def eps_at(self, t):
         """Annealed ε for outer step ``t``: max(eps, eps_init · decay^t)."""
@@ -88,8 +112,21 @@ class SolveControls:
         ramp = self.eps_init * self.anneal_decay ** t.astype(self.eps.dtype)
         return ramp <= self.eps
 
+    def inner_tol_at(self, t):
+        """Inner-solver tolerance for outer step ``t`` (ε-scaling): the
+        inner Sinkhorn solve at an annealed eps_t > eps targets
+        ``tol · (eps_t/eps)`` — duals solved under a provisional ε get
+        invalidated by the next decay stage, so polishing them past the
+        stage's own scale is wasted work — and exactly ``tol`` once the
+        schedule reaches the target ε.  ``inner_loosen`` interpolates:
+        0 restores the flat schedule, 1 (default) is full ε-scaling.
+        ``tol=0`` (fixed mode) stays 0 everywhere."""
+        ratio = self.eps_at(t) / self.eps
+        return self.tol * (1.0 + self.inner_loosen * (ratio - 1.0))
+
     def tree_flatten(self):
-        return (self.eps, self.tol, self.eps_init, self.anneal_decay), None
+        return (self.eps, self.tol, self.eps_init, self.anneal_decay,
+                self.inner_loosen), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -116,6 +153,50 @@ class ConvergenceInfo:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MirrorCarry:
+    """The driver's complete resumable state: everything one outer solve
+    needs to continue exactly where it left off.  ``state`` is the solver's
+    own pytree (for GW: plan + warm duals); the rest are the driver's
+    counters.  A carry advanced ``segment`` steps at a time through
+    ``mirror_descent_segment`` visits the same iterates, bit for bit, as one
+    uninterrupted run — ε-annealing and the inner-tolerance schedule depend
+    only on the carried ``t``."""
+
+    state: object            # solver state pytree (plan, duals, ...)
+    t: jax.Array             # int32: outer steps executed so far
+    inner: jax.Array         # int32: total inner iterations so far
+    err: jax.Array           # residual after the last executed step
+    done: jax.Array          # bool: converged (never set under tol=0)
+    trace: jax.Array         # (outer_cap,) per-step residual; NaN past t
+
+    def tree_flatten(self):
+        return (self.state, self.t, self.inner, self.err, self.done,
+                self.trace), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_carry(state0, outer_cap: int) -> MirrorCarry:
+    """A fresh carry: no steps taken, trace all-NaN, not converged."""
+    ft = jnp.result_type(float)
+    zero = jnp.zeros((), jnp.int32)
+    return MirrorCarry(state=state0, t=zero, inner=zero,
+                       err=jnp.asarray(jnp.inf, ft),
+                       done=jnp.zeros((), bool),
+                       trace=jnp.full((outer_cap,), jnp.nan, ft))
+
+
+def info_of(carry: MirrorCarry) -> ConvergenceInfo:
+    """The carry's driver counters as the public convergence signal."""
+    return ConvergenceInfo(outer_iters=carry.t, inner_iters=carry.inner,
+                           marginal_err=carry.err, converged=carry.done,
+                           err_trace=carry.trace)
+
+
 def resolve_controls(cfg, controls: SolveControls | None = None):
     """The one home of each solver's mode-selection preamble.
 
@@ -139,28 +220,78 @@ def plan_delta(new_state, old_state):
     return jnp.abs(new_state[0] - old_state[0]).sum()
 
 
-def mirror_descent(step_fn, state0, delta_fn, controls: SolveControls,
-                   outer_cap: int, unroll: bool = False):
-    """Run ``step_fn`` to convergence (or to ``outer_cap``).
+def mirror_descent_segment(step_fn, delta_fn, controls: SolveControls,
+                           outer_cap: int, carry: MirrorCarry,
+                           segment: int | None = None) -> MirrorCarry:
+    """Advance a solve by at most ``segment`` outer steps (all remaining
+    steps when ``segment`` is None) and return the new carry.
 
-    ``step_fn(state, eps_t) -> (new_state, err, inner_iters)`` performs one
-    mirror-descent step at the annealed ``eps_t``: build the linearized
-    cost, solve the entropic-OT subproblem, return the inner solver's
-    residual and the number of inner iterations it used.
-    ``delta_fn(new_state, old_state)`` measures the plan's L1 movement.
+    ``step_fn(state, eps_t, inner_tol) -> (new_state, err, inner_iters)``
+    performs one mirror-descent step at the annealed ``eps_t``: build the
+    linearized cost, solve the entropic-OT subproblem to the stage's
+    ``inner_tol``, return the inner solver's residual and the number of
+    inner iterations it used.  ``delta_fn(new_state, old_state)`` measures
+    the plan's L1 movement.
 
     Convergence (per problem): annealing finished AND plan movement ≤ tol
     AND inner residual ≤ tol — strict ``tol > 0`` gating means ``tol=0``
     runs exactly ``outer_cap`` steps (the paper-faithful fixed mode).
 
+    Segmenting changes nothing but the dispatch granularity: every schedule
+    quantity is a function of the carried global ``t``, and the body is the
+    identical step sequence, so N segments of k steps reproduce one run of
+    N·k steps bit-for-bit.  That exactness is what the continuous-batching
+    engine's harvest-and-refill loop relies on.
+    """
+    t_end = (jnp.asarray(outer_cap, jnp.int32) if segment is None
+             else jnp.minimum(jnp.asarray(outer_cap, jnp.int32),
+                              carry.t + segment))
+
+    def cond(c):
+        return (c.t < t_end) & jnp.logical_not(c.done)
+
+    def body(c):
+        # per-problem masking: under vmap a converged (or segment-finished)
+        # lane keeps entering the body while siblings run, but commits NO
+        # update — its plan, duals, counters, and trace all freeze.  JAX's
+        # while_loop batching rule already select-masks the carry by each
+        # lane's own cond (the inner _chunked_loop relies on exactly that);
+        # the explicit mask here states the invariant in code rather than
+        # leaning on the batching rule alone.
+        active = jnp.logical_not(c.done) & (c.t < t_end)
+        new_state, step_err, used = step_fn(c.state, controls.eps_at(c.t),
+                                            controls.inner_tol_at(c.t))
+        conv = ((controls.tol > 0.0) & controls.anneal_done(c.t)
+                & (delta_fn(new_state, c.state) <= controls.tol)
+                & (step_err <= controls.tol))
+        state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(active, n, o), new_state, c.state)
+        return MirrorCarry(
+            state=state,
+            t=jnp.where(active, c.t + 1, c.t),
+            inner=jnp.where(active, c.inner + used, c.inner),
+            err=jnp.where(active, step_err.astype(c.err.dtype), c.err),
+            done=c.done | (active & conv),
+            trace=jnp.where(active, c.trace.at[c.t].set(step_err), c.trace))
+
+    return jax.lax.while_loop(cond, body, carry)
+
+
+def mirror_descent(step_fn, state0, delta_fn, controls: SolveControls,
+                   outer_cap: int, unroll: bool = False):
+    """Run ``step_fn`` to convergence (or to ``outer_cap``).
+
+    One-shot front end over :func:`mirror_descent_segment` — see its
+    docstring for the step contract and the convergence criterion.
+
     Returns ``(final_state, ConvergenceInfo)``.
     """
-    ft = jnp.result_type(float)
     if unroll:
         # differentiable fixed-length path: scan, no early stop
         def body(carry, t):
             state, inner = carry
-            state, err, used = step_fn(state, controls.eps_at(t))
+            state, err, used = step_fn(state, controls.eps_at(t),
+                                       controls.inner_tol_at(t))
             return (state, inner + used), err
 
         (state, inner), errs = jax.lax.scan(
@@ -171,36 +302,6 @@ def mirror_descent(step_fn, state0, delta_fn, controls: SolveControls,
             inner_iters=inner, marginal_err=errs[-1],
             converged=jnp.zeros((), bool), err_trace=errs)
 
-    def cond(carry):
-        _, t, _, _, done, _ = carry
-        return (t < outer_cap) & jnp.logical_not(done)
-
-    def body(carry):
-        state, t, inner, err, done, trace = carry
-        # per-problem masking: under vmap a converged lane keeps entering
-        # the body while siblings run, but commits NO update — its plan,
-        # duals, counters, and trace all freeze.  JAX's while_loop batching
-        # rule already select-masks the carry by each lane's own cond (the
-        # inner _chunked_loop relies on exactly that); the explicit mask
-        # here states the invariant in code rather than leaning on the
-        # batching rule alone.
-        active = jnp.logical_not(done) & (t < outer_cap)
-        new_state, step_err, used = step_fn(state, controls.eps_at(t))
-        conv = ((controls.tol > 0.0) & controls.anneal_done(t)
-                & (delta_fn(new_state, state) <= controls.tol)
-                & (step_err <= controls.tol))
-        state = jax.tree_util.tree_map(
-            lambda n, o: jnp.where(active, n, o), new_state, state)
-        trace = jnp.where(active, trace.at[t].set(step_err), trace)
-        err = jnp.where(active, step_err.astype(err.dtype), err)
-        inner = jnp.where(active, inner + used, inner)
-        t = jnp.where(active, t + 1, t)
-        return state, t, inner, err, done | (active & conv), trace
-
-    zero = jnp.zeros((), jnp.int32)
-    carry = (state0, zero, zero, jnp.asarray(jnp.inf, ft),
-             jnp.zeros((), bool), jnp.full((outer_cap,), jnp.nan, ft))
-    state, t, inner, err, done, trace = jax.lax.while_loop(cond, body, carry)
-    return state, ConvergenceInfo(outer_iters=t, inner_iters=inner,
-                                  marginal_err=err, converged=done,
-                                  err_trace=trace)
+    carry = mirror_descent_segment(step_fn, delta_fn, controls, outer_cap,
+                                   init_carry(state0, outer_cap))
+    return carry.state, info_of(carry)

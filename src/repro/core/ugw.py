@@ -72,7 +72,7 @@ def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
     f = jnp.zeros_like(mu)
     g = jnp.zeros_like(nu)
 
-    def step(state, eps):
+    def step(state, eps, inner_tol):
         gamma, f, g = state
         mass = gamma.sum()
         cost = local_cost(op, gamma, mu, nu, eps, cfg.rho)
@@ -87,7 +87,7 @@ def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
         else:
             new, f, g, drift, used = sk.sinkhorn_unbalanced_log_chunked(
                 cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters,
-                cfg.sinkhorn_chunk, ctl.tol, f, g)
+                cfg.sinkhorn_chunk, inner_tol, f, g)
         new = new * jnp.sqrt(mass / jnp.maximum(new.sum(), 1e-300))
         return (new, f, g), drift, used
 

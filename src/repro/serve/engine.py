@@ -8,14 +8,34 @@ bursts; the decode step itself is a fixed-shape jit — no recompilation).
 `GWEngine` (GW solves): admission queue for Gromov-Wasserstein requests over
 ANY geometry — uniform grids (FGC), low-rank factored costs, raw point
 clouds, explicit dense matrices.  Requests are bucketed by geometry spec
-(class + static params + padded sizes rounded up to ``size_bucket``) and
-flushed through `entropic_gw_batch` — one vmapped, jit-cached executable per
-bucket, so a stream of ragged-size requests pays compilation once per bucket
-instead of once per shape.
+(class + static params + padded sizes rounded up to ``size_bucket``); each
+bucket runs through ONE vmapped, jit-cached executable, so a stream of
+ragged-size requests pays compilation once per bucket instead of once per
+shape.
+
+`GWEngine.flush` is a *continuous-batching* scheduler (the GW analogue of
+the LM engine's decode-slot refill): a bucket's requests occupy a
+fixed-width slot batch; the adaptive driver advances all lanes by a bounded
+SEGMENT of outer steps per dispatch; after each segment, converged lanes
+are harvested and their slots refilled from the queue.  Because the
+driver's whole state is an explicit resumable carry and its ε/tolerance
+schedules are functions of each lane's own step index, a lane that shares
+its slot batch with five generations of neighbours computes exactly the
+iterates — bit for bit — it would have computed alone.  Admission is
+difficulty-aware: queue entries are ordered by predicted hardness (ε
+target + annealing stages, problem size, and the error-trace slope of any
+previously interrupted run) so co-scheduled lanes tend to converge
+together and slots turn over in clusters instead of dribbling.  The
+pre-segment flush-barrier path (one `entropic_gw_batch` per chunk, every
+chunk running until its slowest lane finishes) is kept as
+``scheduler="barrier"`` — the baseline `benchmarks/serve_bench.py` measures
+against.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 from typing import Callable, Optional
 
 import jax
@@ -23,7 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.geometry import as_geometry
-from repro.core.gw import GWConfig, GWResult, entropic_gw_batch
+from repro.core.gw import (GWConfig, GWResult, _init_lane, _init_stacked,
+                           _segment_stacked, entropic_gw_batch,
+                           stack_problems)
+from repro.core.solver import MirrorCarry, SolveControls, info_of
 from repro.models import lm
 from repro.models.common import ModelConfig
 
@@ -81,12 +104,26 @@ class Engine:
 @dataclasses.dataclass
 class GWServeConfig:
     solver: GWConfig = dataclasses.field(default_factory=GWConfig)
-    max_batch: int = 16        # cap problems per vmapped solve
+    max_batch: int = 16        # cap problems per vmapped solve / slot batch
     size_bucket: int = 64      # pad 1D sizes up to multiples of this
     #: serving-time convergence tolerance; overrides ``solver.tol`` when set.
     #: A traced operand of the jitted solver, so retuning it between flushes
     #: (or running mixed-tol engines against one bucket) never recompiles.
     tol: float | None = None
+    #: "continuous" — slot-based scheduler: bounded segments of outer steps
+    #: per dispatch, converged lanes harvested and refilled between segments.
+    #: "barrier" — the pre-segment path: chunked `entropic_gw_batch` calls,
+    #: each chunk running until its slowest lane finishes.
+    scheduler: str = "continuous"
+    #: outer mirror-descent steps per continuous dispatch.  Finer = quicker
+    #: harvest/refill turnaround but more host↔device round-trips, and the
+    #: executed-work accounting windows shrink (lockstep cost is width ×
+    #: the window's slowest lane).  ~6 was the sweet spot on the mixed
+    #: stream of benchmarks/serve_bench.py.
+    segment_iters: int = 6
+    #: order each bucket's queue by predicted hardness (hardest first) so
+    #: co-scheduled lanes tend to converge together.
+    order_by_hardness: bool = True
 
     def solver_cfg(self) -> GWConfig:
         if self.tol is None:
@@ -94,51 +131,129 @@ class GWServeConfig:
         return dataclasses.replace(self.solver, tol=self.tol)
 
 
+@dataclasses.dataclass
+class _Request:
+    """A queued GW solve: normalized problem + the knobs submit() was given
+    explicitly.  Effective controls are resolved against the engine config
+    at FLUSH time (``GWEngine._resolve``), so retuning engine-level knobs
+    (``cfg.tol`` etc.) still applies to already-queued requests — only the
+    explicitly-overridden fields stick."""
+
+    rid: int
+    prob: tuple                      # (geom_x, geom_y, mu, nu)
+    overrides: dict                  # explicit per-request knobs (or
+    #                                  {"controls": SolveControls})
+    #: err trace observed before a bucket failure interrupted this request —
+    #: feeds the hardness predictor's slope term when it is re-admitted
+    errs: np.ndarray | None = None
+    #: resolved at flush time by _resolve(); never set directly
+    ctl: SolveControls | None = None
+    knobs: tuple | None = None       # (eps, tol, eps_init, anneal_decay)
+
+
+def _new_stats() -> dict:
+    """Per-flush scheduler accounting.  ``executed_*`` count lane-iterations
+    physically burned (vmap lanes run in lockstep: every dispatch costs
+    batch-width × the slowest lane's advance); ``useful_*`` count the
+    iterations requests actually needed.  executed − useful is the
+    barrier/segment waste the continuous scheduler exists to shrink."""
+    return {"dispatches": 0, "executed_outer": 0, "useful_outer": 0,
+            "executed_inner": 0, "useful_inner": 0, "refills": 0,
+            "repacks": 0}
+
+
+@jax.jit
+def _write_lanes(stacked, lanes, idx):
+    """Scatter a batch of refilled requests (operands+carry, stacked over
+    the refill axis) into slots ``idx`` — ONE whole-batch copy per segment
+    boundary instead of one per admitted request.  ``idx`` is a traced
+    operand; callers pad the refill batch to the slot width (duplicate
+    writes of the same lane are idempotent), so there is exactly one
+    compiled writer per bucket shape."""
+    return jax.tree_util.tree_map(lambda s, l: s.at[idx].set(l), stacked,
+                                  lanes)
+
+
+@jax.jit
+def _retire_lanes(carry: MirrorCarry, mask) -> MirrorCarry:
+    """Mark masked lanes done so idle slots never burn a step."""
+    return dataclasses.replace(carry, done=carry.done | mask)
+
+
+@jax.jit
+def _gather_lanes(stacked, idx):
+    """Repack a slot batch: keep only the lanes in ``idx`` (traced), i.e.
+    shrink the batch width once the queue drains — stragglers stop paying
+    lockstep flops for harvested neighbours' empty slots."""
+    return jax.tree_util.tree_map(lambda l: l[idx], stacked)
+
+
 class GWEngine:
     """Admission-queue front end for batched GW solving.
 
     submit() enqueues a (geom_x, geom_y, mu, nu) problem — geometries may be
     raw Grids (adapted with the solver backend) or any
-    `repro.core.geometry.Geometry` — and returns a request id; flush()
-    groups the queue into geometry-spec buckets, runs one
-    `entropic_gw_batch` per bucket chunk (≤ max_batch problems, chunk length
-    rounded up to a power of two with duplicate problems — the duplicates
-    are solved for shape reuse but never sliced or transferred), and returns
-    {request_id: GWResult}.  Because bucketed padded sizes AND chunk lengths
-    repeat, the underlying jitted solver compiles at most log2(max_batch)
-    executables per bucket, reused for every later flush — the serving
-    path's compilation amortization, now shared by ragged point-cloud and
-    low-rank request streams, not just grids.
+    `repro.core.geometry.Geometry` — and returns a request id.  Each request
+    may carry its OWN solve knobs (``eps``/``tol``/``eps_init``/
+    ``anneal_decay``, or a full `SolveControls`): the knobs are traced
+    per-lane operands, so a mixed-difficulty stream shares one compiled
+    executable per bucket.
 
-    Convergence control: ``GWServeConfig.tol`` switches the whole serving
-    path to the adaptive driver — each lane of a vmapped chunk early-stops
-    on its own schedule (converged lanes commit no further dual updates;
-    the chunk's compute runs until its slowest lane finishes), and
-    every returned `GWResult` carries its own `ConvergenceInfo`
-    (``result.info``: outer/inner iterations used, final marginal error,
-    converged flag) plus the per-outer-step error trace (``result.errs``).
-    Tolerance and ε-annealing knobs are traced operands, so retuning them
-    between flushes never recompiles a bucket executable.
+    flush() groups the queue into geometry-spec buckets and schedules each
+    bucket through the continuous-batching loop (``scheduler=
+    "continuous"``, the default):
+
+      1. order the bucket's requests by predicted hardness (hardest first),
+      2. admit the first ``B`` into a slot batch (``B`` = the queue length
+         rounded up to a power of two, capped at ``max_batch``),
+      3. dispatch ONE jitted segment — every lane advances by at most
+         ``segment_iters`` outer steps of the shared adaptive driver,
+      4. harvest lanes whose `ConvergenceInfo` says converged (or capped),
+         return their `GWResult`s, and refill the freed slots from the
+         queue — new lanes start cold in the same stacked carry while their
+         neighbours resume mid-solve,
+      5. repeat until the bucket's queue and slots drain.
+
+    Because the driver's schedule depends only on each lane's carried step
+    index, a request solved across many segments alongside changing
+    slot-mates returns exactly the plan, potentials, and iteration counts
+    of an uninterrupted solve.  ``scheduler="barrier"`` keeps the previous
+    behaviour — power-of-two chunks through `entropic_gw_batch`, each chunk
+    burning flops until its slowest lane converges — as the measurable
+    baseline.  Either way the jit cache stays bounded: at most
+    log2(max_batch)+1 slot widths per bucket, reused for every later flush;
+    retuning any request-level knob never recompiles.
+
+    ``stats`` (reset each flush) counts dispatches and executed vs useful
+    lane-iterations — the benchmark's waste metric.
 
     Failure isolation: each bucket is solved independently.  When a bucket
-    raises, its UNSOLVED requests stay queued for retry (chunks solved
-    before the failure are returned and dequeued) and the error is recorded
-    in ``last_errors``; other buckets' results are still returned.  If every
-    bucket failed (and something was queued), the first error is re-raised —
-    a fully-failing flush should not look like an empty queue.
+    raises, its UNSOLVED requests stay queued for retry (requests harvested
+    before the failure are returned and dequeued; interrupted requests are
+    re-admitted cold but keep their observed error trace as a hardness
+    hint) and the error is recorded in ``last_errors``; other buckets'
+    results are still returned.  If every bucket failed (and something was
+    queued), the first error is re-raised — a fully-failing flush should
+    not look like an empty queue.
     """
 
     def __init__(self, cfg: GWServeConfig | None = None):
         self.cfg = cfg or GWServeConfig()
-        self._queue: list[tuple[int, tuple]] = []
+        self._queue: list[_Request] = []
         self._next_id = 0
         self.last_errors: list[tuple[tuple, Exception]] = []
+        self.stats = _new_stats()
 
     def _bucket_size(self, size: int) -> int:
         b = self.cfg.size_bucket
         return -(-size // b) * b
 
-    def submit(self, geom_x, geom_y, mu, nu) -> int:
+    def submit(self, geom_x, geom_y, mu, nu, *, eps=None, tol=None,
+               eps_init=None, anneal_decay=None,
+               controls: SolveControls | None = None) -> int:
+        """Enqueue a problem; returns its request id.  Keyword knobs (or a
+        full ``controls``) override the engine's solver defaults for THIS
+        request only — they ride as traced per-lane operands."""
         backend = self.cfg.solver.backend
         gx = as_geometry(geom_x, backend)
         gy = as_geometry(geom_y, backend)
@@ -151,10 +266,38 @@ class GWEngine:
             raise ValueError(
                 f"measure shapes {mu.shape}/{nu.shape} do not match "
                 f"geometry sizes {gx.size}/{gy.size}")
+        overrides = {k: v for k, v in [("eps", eps), ("tol", tol),
+                                       ("eps_init", eps_init),
+                                       ("anneal_decay", anneal_decay),
+                                       ("controls", controls)]
+                     if v is not None}
         rid = self._next_id
         self._next_id += 1
-        self._queue.append((rid, (gx, gy, mu, nu)))
+        self._queue.append(_Request(rid, (gx, gy, mu, nu), overrides))
         return rid
+
+    def _resolve(self, req: _Request) -> None:
+        """Materialize a request's effective SolveControls: the engine's
+        CURRENT solver config (so knob retunes reach queued requests — all
+        values are traced operands, never recompiling), overridden by
+        whatever submit() was given explicitly."""
+        o = req.overrides
+        if "controls" in o:
+            c = o["controls"]
+            req.ctl = c
+            req.knobs = (float(c.eps), float(c.tol), float(c.eps_init),
+                         float(c.anneal_decay))
+            return
+        s = self.cfg.solver_cfg()
+        eps_v = float(o.get("eps", s.eps))
+        tol_v = float(o.get("tol", s.tol))
+        e0 = o.get("eps_init", s.eps_init)
+        e0 = eps_v if e0 is None else float(e0)
+        e0 = max(e0, eps_v)        # eps_init ≤ eps means "no annealing"
+        decay_v = float(o.get("anneal_decay", s.anneal_decay))
+        req.ctl = SolveControls.make(eps_v, tol_v, e0, decay_v,
+                                     s.inner_loosen)
+        req.knobs = (eps_v, tol_v, e0, decay_v)
 
     def _bucket_key(self, prob):
         gx, gy, _, _ = prob
@@ -162,48 +305,227 @@ class GWEngine:
         pad_y = self._bucket_size(gy.size) if gy.paddable else gy.size
         return (gx.batch_key(), pad_x, gy.batch_key(), pad_y)
 
+    # -- difficulty-aware admission --------------------------------------
+
+    def predicted_hardness(self, req: _Request) -> float:
+        """Rank a request by how much outer-loop work it should need.
+
+        Static signals: the number of ε-annealing stages to reach the
+        target ε (each stage is ≥1 outer step before convergence may even
+        be declared), the sharpness of the target ε itself (entropic
+        Sinkhorn mixes slower as ε→0), and log-problem-size (a weak tie
+        breaker).  Dynamic signal: when a previous run of THIS request was
+        interrupted (bucket failure), the log-slope of its observed error
+        trace — a slowly-decaying trace predicts many remaining steps.
+        """
+        if req.knobs is None:
+            self._resolve(req)
+        eps, _tol, eps_init, decay = req.knobs
+        h = 0.0
+        if eps_init > eps and 0.0 < decay < 1.0:
+            h += math.log(eps_init / eps) / math.log(1.0 / decay)
+        h += math.log10(1.0 / max(eps, 1e-30))
+        gx, gy = req.prob[0], req.prob[1]
+        h += math.log2(max(gx.size * gy.size, 2)) / 16.0
+        if req.errs is not None:
+            e = np.asarray(req.errs)
+            e = e[np.isfinite(e) & (e > 0)]
+            if len(e) >= 2:
+                slope = (math.log(e[0]) - math.log(e[-1])) / (len(e) - 1)
+                h += 1.0 / max(slope, 0.05)   # slow decay ⇒ hard
+        return h
+
+    # -- schedulers -------------------------------------------------------
+
     def flush(self) -> dict[int, GWResult]:
-        buckets: dict[tuple, list[tuple[int, tuple]]] = {}
-        for rid, prob in self._queue:
-            buckets.setdefault(self._bucket_key(prob), []).append((rid, prob))
+        if self.cfg.scheduler not in ("continuous", "barrier"):
+            raise ValueError(
+                f"unknown scheduler {self.cfg.scheduler!r}: expected "
+                "'continuous' or 'barrier'")
+        buckets: dict[tuple, list[_Request]] = {}
+        for req in self._queue:
+            self._resolve(req)
+            buckets.setdefault(self._bucket_key(req.prob), []).append(req)
         results: dict[int, GWResult] = {}
         done: set[int] = set()
         self.last_errors = []
+        self.stats = _new_stats()
+        drive = (self._drive_bucket if self.cfg.scheduler == "continuous"
+                 else self._barrier_bucket)
         try:
             for key, entries in buckets.items():
-                pad_to = (key[1], key[3])
                 try:
-                    for i in range(0, len(entries), self.cfg.max_batch):
-                        chunk = entries[i:i + self.cfg.max_batch]
-                        # pad the chunk to the next power of two
-                        # (≤ max_batch) with copies of its last problem: the
-                        # jit cache keys on the batch dim, so this bounds
-                        # compiles to log2(max_batch) variants per bucket
-                        # instead of one per flush size.  num_results stops
-                        # the duplicates from being re-sliced/transferred.
-                        b = 1
-                        while b < len(chunk):
-                            b *= 2
-                        b = min(b, self.cfg.max_batch)
-                        probs = ([p for _, p in chunk]
-                                 + [chunk[-1][1]] * (b - len(chunk)))
-                        solved = entropic_gw_batch(probs,
-                                                   self.cfg.solver_cfg(),
-                                                   pad_to=pad_to,
-                                                   num_results=len(chunk))
-                        for (rid, _), res in zip(chunk, solved):
-                            results[rid] = res
-                            done.add(rid)
+                    drive(key, entries, results, done)
                 except Exception as exc:   # noqa: BLE001 — bucket isolation
                     self.last_errors.append((key, exc))
         finally:
             # only drop what actually solved — a bad request must not
             # destroy the rest of the queue
-            self._queue = [(rid, p) for rid, p in self._queue
-                           if rid not in done]
+            self._queue = [r for r in self._queue if r.rid not in done]
         if self.last_errors and not results:
             raise self.last_errors[0][1]
         return results
+
+    def _slot_width(self, n: int) -> int:
+        """Queue length rounded up to a power of two, capped at max_batch —
+        widths repeat, so the jit cache stays at ≤ log2(max_batch)+1
+        executables per bucket."""
+        b = 1
+        while b < min(n, self.cfg.max_batch):
+            b *= 2
+        return min(b, self.cfg.max_batch)
+
+    def _barrier_bucket(self, key, entries, results, done):
+        """PR-3 behaviour: chunked one-shot solves; every chunk runs until
+        its slowest lane converges."""
+        pad_to = (key[1], key[3])
+        for i in range(0, len(entries), self.cfg.max_batch):
+            chunk = entries[i:i + self.cfg.max_batch]
+            # pad the chunk to the next power of two (≤ max_batch) with
+            # copies of its last problem: duplicates are solved for shape
+            # reuse but never sliced or transferred (num_results)
+            b = self._slot_width(len(chunk))
+            probs = ([r.prob for r in chunk]
+                     + [chunk[-1].prob] * (b - len(chunk)))
+            ctls = ([r.ctl for r in chunk]
+                    + [chunk[-1].ctl] * (b - len(chunk)))
+            solved = entropic_gw_batch(probs, self.cfg.solver_cfg(),
+                                       pad_to=pad_to,
+                                       num_results=len(chunk),
+                                       controls=ctls)
+            outers = [int(r.info.outer_iters) for r in solved]
+            inners = [int(r.info.inner_iters) for r in solved]
+            self.stats["dispatches"] += 1
+            self.stats["executed_outer"] += b * max(outers)
+            self.stats["useful_outer"] += sum(outers)
+            self.stats["executed_inner"] += b * max(inners)
+            self.stats["useful_inner"] += sum(inners)
+            for req, res in zip(chunk, solved):
+                results[req.rid] = res
+                done.add(req.rid)
+
+    def _drive_bucket(self, key, entries, results, done):
+        """Continuous batching for one bucket: slot batch + bounded
+        segments + harvest-and-refill."""
+        cfg = self.cfg.solver_cfg()
+        cfgk = cfg.static_key()
+        pad_to = (key[1], key[3])
+        if self.cfg.order_by_hardness:
+            entries = sorted(entries, key=self.predicted_hardness,
+                             reverse=True)
+        pending = collections.deque(entries)
+        b = self._slot_width(len(entries))
+        segment = max(1, int(self.cfg.segment_iters))
+
+        # initial slot batch: first B requests; short queues replicate the
+        # first problem into the unused slots, which are retired (done=True)
+        # before the first dispatch so they never execute a step
+        first = [pending.popleft() for _ in range(min(b, len(pending)))]
+        slots: list[Optional[_Request]] = list(first) + [None] * (b - len(first))
+        filler = [(s or first[0]) for s in slots]
+        ops, _, _ = stack_problems([r.prob for r in filler], cfg, pad_to,
+                                   [r.ctl for r in filler])
+        carry = _init_stacked(ops[2], ops[3], cfgk)
+        if len(first) < b:
+            carry = _retire_lanes(
+                carry, jnp.asarray([s is None for s in slots]))
+        t_prev = np.zeros(b, np.int64)
+        inner_prev = np.zeros(b, np.int64)
+
+        try:
+            while any(s is not None for s in slots) or pending:
+                # refill freed slots before dispatching the next segment —
+                # all admissions of this boundary go through ONE scatter
+                refills: list[tuple[int, tuple]] = []
+                for i in range(b):
+                    if slots[i] is None and pending:
+                        req = pending.popleft()
+                        refills.append(
+                            (i, self._lane_operands(req, pad_to, cfg, cfgk)))
+                        slots[i] = req
+                        t_prev[i] = inner_prev[i] = 0
+                        self.stats["refills"] += 1
+                if refills:
+                    # pad to the slot width with copies of the first refill
+                    # (idempotent duplicate writes) so the writer keeps one
+                    # executable per bucket shape
+                    idx = [i for i, _ in refills]
+                    lanes = [l for _, l in refills]
+                    idx += [idx[0]] * (b - len(idx))
+                    lanes += [lanes[0]] * (b - len(lanes))
+                    ops, carry = _write_lanes(
+                        (ops, carry),
+                        jax.tree_util.tree_map(
+                            lambda *ls: jnp.stack(ls), *lanes),
+                        jnp.asarray(idx, jnp.int32))
+                carry, values = _segment_stacked(*ops, carry, cfgk, segment)
+                t = np.asarray(carry.t, np.int64)
+                inner = np.asarray(carry.inner, np.int64)
+                finished = (np.asarray(carry.done)
+                            | (t >= cfg.outer_iters))
+                self.stats["dispatches"] += 1
+                adv_t, adv_i = t - t_prev, inner - inner_prev
+                self.stats["executed_outer"] += int(b * adv_t.max())
+                self.stats["executed_inner"] += int(b * adv_i.max())
+                live = np.asarray([s is not None for s in slots])
+                self.stats["useful_outer"] += int(adv_t[live].sum())
+                self.stats["useful_inner"] += int(adv_i[live].sum())
+                t_prev, inner_prev = t, inner
+                for i in range(b):
+                    if slots[i] is not None and finished[i]:
+                        req = slots[i]
+                        results[req.rid] = self._harvest(carry, values, i,
+                                                         req)
+                        done.add(req.rid)
+                        slots[i] = None
+                # drained queue + mostly-empty batch: repack the live
+                # stragglers into a narrower slot batch (widths stay in the
+                # same power-of-two menu, so no new executables beyond the
+                # bucket bound) — lane data is only gathered, never
+                # recomputed, so results stay bit-identical
+                live_ct = sum(s is not None for s in slots)
+                if (not pending and b > 1 and 0 < live_ct <= b // 2):
+                    nb = self._slot_width(live_ct)
+                    idx = [i for i in range(b) if slots[i] is not None]
+                    pad_idx = idx + [idx[-1]] * (nb - live_ct)
+                    gidx = jnp.asarray(pad_idx, jnp.int32)
+                    ops, carry = _gather_lanes((ops, carry), gidx)
+                    slots = [slots[i] for i in idx] + [None] * (nb - live_ct)
+                    if live_ct < nb:   # duplicated pad lanes never run
+                        carry = _retire_lanes(
+                            carry, jnp.arange(nb) >= live_ct)
+                    t_prev = t_prev[pad_idx]
+                    inner_prev = inner_prev[pad_idx]
+                    b = nb
+                    self.stats["repacks"] += 1
+        except Exception:
+            # re-admit interrupted in-flight requests cold, but keep what
+            # their error traces revealed for the hardness predictor
+            trace = np.asarray(carry.trace)
+            for i, req in enumerate(slots):
+                if req is not None:
+                    req.errs = trace[i]
+            raise
+
+    def _lane_operands(self, req: _Request, pad_to, cfg, cfgk):
+        """One request's padded operands + fresh carry, shaped to drop into
+        a slot of the stacked batch."""
+        gx, gy, mu, nu = req.prob
+        mu_p = jnp.pad(mu, (0, pad_to[0] - mu.shape[0]))
+        nu_p = jnp.pad(nu, (0, pad_to[1] - nu.shape[0]))
+        lane_ops = (gx.pad_to(pad_to[0]), gy.pad_to(pad_to[1]), mu_p, nu_p,
+                    req.ctl)
+        return lane_ops, _init_lane(mu_p, nu_p, cfgk)
+
+    def _harvest(self, carry, values, i, req: _Request) -> GWResult:
+        """Slice lane ``i`` of the stacked carry back into this request's
+        true-size GWResult."""
+        lane, value = jax.tree_util.tree_map(lambda l: l[i], (carry, values))
+        gamma, f, g = lane.state
+        m, n = req.prob[0].size, req.prob[1].size
+        return GWResult(plan=gamma[:m, :n], value=value,
+                        marginal_err=lane.err, f=f[:m], g=g[:n],
+                        errs=lane.trace, info=info_of(lane))
 
     def solve(self, problems, pad_to=None) -> list[GWResult]:
         """Direct batched solve (no queue) — thin passthrough."""

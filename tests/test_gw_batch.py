@@ -122,10 +122,13 @@ def test_engine_rejects_malformed_request_at_submit():
 
 def test_engine_partial_failure_isolates_bucket(monkeypatch):
     """A bucket that raises at flush time leaves its requests queued for
-    retry and records the error; other buckets still return their results."""
+    retry and records the error; other buckets still return their results.
+    (Barrier scheduler — the continuous scheduler's failure isolation is
+    covered in test_serve_continuous.py.)"""
     from repro.serve import engine as engine_mod
 
-    eng = GWEngine(GWServeConfig(solver=CFG, size_bucket=16))
+    eng = GWEngine(GWServeConfig(solver=CFG, size_bucket=16,
+                                 scheduler="barrier"))
     good = _problems_1d([(10, 12), (14, 9)])
     good_rids = [eng.submit(*p) for p in good]
     bad_grid = Grid1D(40, 0.1, 1)        # lands in a different size bucket
@@ -134,10 +137,10 @@ def test_engine_partial_failure_isolates_bucket(monkeypatch):
 
     real_batch = engine_mod.entropic_gw_batch
 
-    def failing_batch(probs, cfg, pad_to=None, num_results=None):
+    def failing_batch(probs, cfg, pad_to=None, **kw):
         if pad_to and pad_to[0] >= 48:   # only the bad-request bucket
             raise RuntimeError("injected bucket failure")
-        return real_batch(probs, cfg, pad_to=pad_to, num_results=num_results)
+        return real_batch(probs, cfg, pad_to=pad_to, **kw)
 
     monkeypatch.setattr(engine_mod, "entropic_gw_batch", failing_batch)
     out = eng.flush()                     # must NOT raise: good bucket solved
@@ -147,13 +150,13 @@ def test_engine_partial_failure_isolates_bucket(monkeypatch):
         np.testing.assert_allclose(np.asarray(out[rid].plan),
                                    np.asarray(ref.plan), atol=1e-8)
     # failed bucket: request still queued, error recorded
-    assert [r for r, _ in eng._queue] == [bad_rid]
+    assert [r.rid for r in eng._queue] == [bad_rid]
     assert len(eng.last_errors) == 1
     assert isinstance(eng.last_errors[0][1], RuntimeError)
     # a retry with nothing else queued surfaces the error
     with pytest.raises(RuntimeError):
         eng.flush()
-    assert [r for r, _ in eng._queue] == [bad_rid]
+    assert [r.rid for r in eng._queue] == [bad_rid]
     # once the fault clears, the queued request finally solves
     monkeypatch.setattr(engine_mod, "entropic_gw_batch", real_batch)
     out2 = eng.flush()
@@ -177,7 +180,7 @@ def test_engine_mixed_grid_pointcloud_queue():
         p = (pc, pc, _measures(n, 50 + i), _measures(n, 60 + i))
         probs[eng.submit(*p)] = p
     # two distinct geometry buckets
-    keys = {eng._bucket_key(p) for _, p in eng._queue}
+    keys = {eng._bucket_key(r.prob) for r in eng._queue}
     assert len(keys) == 2
     out = eng.flush()
     assert set(out) == set(probs)
