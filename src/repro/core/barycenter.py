@@ -40,6 +40,9 @@ class BarycenterConfig:
     eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
     anneal_decay: float = 0.5
     sinkhorn_chunk: int = 25
+    #: log-mode Sinkhorn dual-update backend ("auto"|"pallas"|"xla") for
+    #: the inner plan solves; see `repro.core.sinkhorn.solve_adaptive`
+    sinkhorn_backend: str = "auto"
 
     def gw_config(self) -> GWConfig:
         """The inner plan-solve config this barycenter cfg induces."""
@@ -48,7 +51,8 @@ class BarycenterConfig:
                         backend=self.backend, tol=self.tol,
                         eps_init=self.eps_init,
                         anneal_decay=self.anneal_decay,
-                        sinkhorn_chunk=self.sinkhorn_chunk)
+                        sinkhorn_chunk=self.sinkhorn_chunk,
+                        sinkhorn_backend=self.sinkhorn_backend)
 
 
 def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],

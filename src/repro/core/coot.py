@@ -48,6 +48,9 @@ class COOTConfig:
     #                                eps_features ramps by the same ratio
     anneal_decay: float = 0.5
     sinkhorn_chunk: int = 25
+    #: log-mode Sinkhorn dual-update backend ("auto"|"pallas"|"xla"); see
+    #: `repro.core.sinkhorn.solve_adaptive`
+    sinkhorn_backend: str = "auto"
 
     @property
     def eps(self) -> float:
@@ -88,7 +91,8 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                                         cfg.backend))
         pi_s, f_s, g_s, err_s, used_s = sk.solve_adaptive(
             m_s, mu_s, nu_s, eps_s, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, "log", f_s, g_s, unroll=unroll)
+            inner_tol, "log", f_s, g_s, unroll=unroll,
+            backend=cfg.sinkhorn_backend)
         # features half-step
         c = x2.T @ pi_s.sum(axis=1)
         d = y2.T @ pi_s.sum(axis=0)
@@ -96,7 +100,8 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                - 2.0 * (x.T @ pi_s @ y))
         pi_v, f_v, g_v, err_v, used_v = sk.solve_adaptive(
             m_v, mu_v, nu_v, eps_v, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, "log", f_v, g_v, unroll=unroll)
+            inner_tol, "log", f_v, g_v, unroll=unroll,
+            backend=cfg.sinkhorn_backend)
         # gate on the worse of the two residuals: each half-step drives its
         # OWN residual to ≤ tol, so summing would demand 2× what the inner
         # solves deliver and could wedge convergence just above tol

@@ -55,7 +55,8 @@ def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
         grad = c2 - 4.0 * theta * op.product(gamma)
         gamma, f, g, err, used = sk.solve_adaptive(
             grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.sinkhorn_mode, f, g, unroll=unroll)
+            inner_tol, cfg.sinkhorn_mode, f, g, unroll=unroll,
+            backend=cfg.sinkhorn_backend)
         return (gamma, f, g), err, used
 
     (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,

@@ -64,8 +64,14 @@ class GWConfig:
     eps: float = 2e-3          # paper §4.1 uses 0.002 (1D) / 0.004 (2D)
     outer_iters: int = 10      # cap; exact count when tol=0 (paper §4.1: 10)
     sinkhorn_iters: int = 200  # inner cap per outer step
-    backend: str = "cumsum"    # "scan" (paper-faithful) | "cumsum" | "dense" | "pallas"
+    backend: str = "cumsum"    # FGC gradient backend: "scan" (paper-faithful)
+    #                            | "cumsum" | "dense" | "pallas"
     sinkhorn_mode: str = "log"
+    #: log-mode Sinkhorn dual-update backend: "auto" (fused Pallas kernels
+    #: on TPU, XLA scans elsewhere) | "pallas" | "xla".  Structural (part of
+    #: the jit cache key, kept by `static_key`); the unroll/reverse-AD path
+    #: always runs XLA (see `sinkhorn.solve_adaptive`).
+    sinkhorn_backend: str = "auto"
     tol: float = 0.0           # early-stop tolerance (0 → fixed-iteration)
     eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
     anneal_decay: float = 0.5  # geometric ε decay per outer step
@@ -130,7 +136,7 @@ def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
         gamma, f, g, err, used = sk.solve_adaptive(
             op.grad(gamma, c1), mu, nu, eps, cfg.sinkhorn_iters,
             cfg.sinkhorn_chunk, inner_tol, cfg.sinkhorn_mode, f, g,
-            unroll=unroll)
+            unroll=unroll, backend=cfg.sinkhorn_backend)
         return (gamma, f, g), err, used
 
     return step

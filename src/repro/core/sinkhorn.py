@@ -21,6 +21,17 @@ actually used, which the driver aggregates into ``ConvergenceInfo``.
 Each mode's dual update and plan assembly live in ONE ``_*_pieces`` builder
 shared by the fixed scan and the chunked loop, so the bit-identity contract
 cannot drift.
+
+Log-mode dual updates have a pluggable backend (``backend="auto"|"pallas"|
+"xla"``, POT/ott-jax-style dispatch): "pallas" routes each half-step
+through the fused flash-style kernels of `repro.kernels.sinkhorn_step` —
+one streaming pass over C per half-step, no (M,N) temporaries, ε a traced
+SMEM operand so ε-annealing never recompiles — and "auto" picks Pallas on
+TPU (compiled) and the XLA logsumexp scans elsewhere.  Off-TPU, an explicit
+"pallas" runs the interpreter (the test suite's parity path: ≤1 ulp per
+half-step vs the XLA expressions, with EXACT within-backend scheduling
+invariances — see tests/test_sinkhorn_backend.py).  The reverse-mode
+``unroll`` path always runs XLA.
 """
 from __future__ import annotations
 
@@ -36,6 +47,21 @@ class SinkhornConfig:
     eps: float = 1e-2
     iters: int = 100
     mode: str = "log"  # "log" | "kernel"
+    #: dual-update backend for log mode: "auto" (fused Pallas kernels on
+    #: TPU, XLA logsumexp scans elsewhere), "pallas", or "xla".  Structural
+    #: (a jit cache key), unlike the traced value knobs.
+    backend: str = "auto"
+
+
+def _use_pallas(backend: str) -> bool:
+    """Resolve the log-mode backend knob; see
+    `repro.kernels.ops.resolve_sinkhorn_backend`.  Imported lazily so the
+    core solver stack does not pull the kernels package (and its Pallas
+    imports) until a caller actually opts in."""
+    if backend == "xla":
+        return False
+    from repro.kernels import ops
+    return ops.resolve_sinkhorn_backend(backend) == "pallas"
 
 
 def zero_mass_potentials(mu, nu):
@@ -57,16 +83,43 @@ def zero_mass_potentials(mu, nu):
 # both the fixed scans and the chunked early-stopping loops
 # ---------------------------------------------------------------------------
 
-def _log_pieces(cost, mu, nu, eps):
-    """step((f,g))->(f,g) and plan_err((f,g))->(plan, L1 row-marginal gap)."""
+def _log_pieces(cost, mu, nu, eps, backend: str = "xla"):
+    """step((f,g))->(f,g) and plan_err((f,g))->(plan, L1 row-marginal gap).
+
+    ``backend`` selects the dual-update implementation: the XLA logsumexp
+    expressions below, or the fused Pallas half-step kernels (one streaming
+    pass over C per half-step, no (M,N) temporaries — see
+    `repro.kernels.sinkhorn_step`).  ε is a traced operand of the kernels,
+    so ε-annealing across outer stages never recompiles them.  Plan
+    assembly and the residual stay in XLA either way (they run once per
+    chunk, not once per iteration).
+    """
+    # one ε dtype for every entry point: the fixed scan historically passed
+    # a weak Python float where the chunked loop passes a strong scalar —
+    # bit-identical through the XLA expressions, but the kernels embed a
+    # weak ε as a compile-time constant and fold it differently than a
+    # runtime operand, which would break the tol=0 "chunked == fixed"
+    # bit-identity contract under backend="pallas"
+    eps = jnp.asarray(eps, mu.dtype)
     log_mu = jnp.log(mu)
     log_nu = jnp.log(nu)
 
-    def step(carry):
-        f, g = carry
-        fn = eps * (log_mu - logsumexp((g[None, :] - cost) / eps, axis=1))
-        gn = eps * (log_nu - logsumexp((fn[:, None] - cost) / eps, axis=0))
-        return fn, gn
+    if _use_pallas(backend):
+        from repro.kernels import ops as kops
+
+        def step(carry):
+            _f, g = carry
+            fn = kops.sinkhorn_row_update(cost, g, log_mu, eps)
+            gn = kops.sinkhorn_col_update(cost, fn, log_nu, eps)
+            return fn, gn
+    else:
+        def step(carry):
+            f, g = carry
+            fn = eps * (log_mu
+                        - logsumexp((g[None, :] - cost) / eps, axis=1))
+            gn = eps * (log_nu
+                        - logsumexp((fn[:, None] - cost) / eps, axis=0))
+            return fn, gn
 
     def plan_err(carry):
         f, g = carry
@@ -160,9 +213,10 @@ def _chunked_loop(carry0, step_fn, residual_fn, iters, chunk, tol, err_dtype):
 # solvers
 # ---------------------------------------------------------------------------
 
-def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None):
+def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None,
+                 backend: str = "xla"):
     """Log-domain Sinkhorn. Returns (plan, f, g, err) — err = L1 row-marginal gap."""
-    step, plan_err = _log_pieces(cost, mu, nu, eps)
+    step, plan_err = _log_pieces(cost, mu, nu, eps, backend)
     f = jnp.zeros_like(mu) if f0 is None else f0
     g = jnp.zeros_like(nu) if g0 is None else g0
     (f, g), _ = jax.lax.scan(lambda c, _: (step(c), ()), (f, g), None,
@@ -172,7 +226,7 @@ def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None):
 
 
 def sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
-                         f0=None, g0=None):
+                         f0=None, g0=None, backend: str = "xla"):
     """Log-domain Sinkhorn with chunked early stopping.
 
     Returns (plan, f, g, err, iters_used).  ``tol=0`` runs exactly ``iters``
@@ -184,7 +238,7 @@ def sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
     # under x64); pin it to the measures' dtype so the scan carry keeps the
     # caller's precision instead of being promoted
     eps = jnp.asarray(eps, mu.dtype)
-    step, plan_err = _log_pieces(cost, mu, nu, eps)
+    step, plan_err = _log_pieces(cost, mu, nu, eps, backend)
     f = jnp.zeros_like(mu) if f0 is None else f0
     g = jnp.zeros_like(nu) if g0 is None else g0
     (f, g), it, _ = _chunked_loop((f, g), step,
@@ -277,7 +331,8 @@ def _warm_scalings(f0, eps):
 
 def solve(cost, mu, nu, cfg: SinkhornConfig, f0=None, g0=None):
     if cfg.mode == "log":
-        return sinkhorn_log(cost, mu, nu, cfg.eps, cfg.iters, f0, g0)
+        return sinkhorn_log(cost, mu, nu, cfg.eps, cfg.iters, f0, g0,
+                            cfg.backend)
     plan, a, b, err = sinkhorn_kernel(cost, mu, nu, cfg.eps, cfg.iters,
                                       _warm_scalings(f0, cfg.eps))
     # convert scalings to potentials so warm-start is mode-agnostic
@@ -285,12 +340,17 @@ def solve(cost, mu, nu, cfg: SinkhornConfig, f0=None, g0=None):
 
 
 def solve_adaptive(cost, mu, nu, eps, iters, chunk, tol, mode="log",
-                   f0=None, g0=None, unroll=False):
+                   f0=None, g0=None, unroll=False, backend: str = "xla"):
     """Mode dispatch for the convergence-controlled driver.
 
     Returns (plan, f, g, err, iters_used) with warm-startable potentials in
     either mode.  ``unroll=True`` uses the fixed-length scans (reverse-mode
     differentiable; ``tol`` ignored, ``iters_used == iters``).
+
+    ``backend`` routes log-mode dual updates through the fused Pallas
+    kernels ("pallas"/"auto"-on-TPU) or the XLA scans ("xla").  The unroll
+    path always runs XLA — it exists for reverse-mode AD, and
+    ``pallas_call`` has no VJP.  Kernel/unbalanced modes are XLA-only.
     """
     eps = jnp.asarray(eps, mu.dtype)
     if mode == "log":
@@ -298,7 +358,7 @@ def solve_adaptive(cost, mu, nu, eps, iters, chunk, tol, mode="log",
             plan, f, g, err = sinkhorn_log(cost, mu, nu, eps, iters, f0, g0)
             return plan, f, g, err, jnp.asarray(iters, jnp.int32)
         return sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
-                                    f0, g0)
+                                    f0, g0, backend)
     a0 = _warm_scalings(f0, eps)
     if unroll:
         plan, a, b, err = sinkhorn_kernel(cost, mu, nu, eps, iters, a0)

@@ -49,8 +49,11 @@ supports ε-annealing, which is what makes the paper's ε=0.002 regime cheap:
 All knobs that are *values* (eps, tol, eps_init, anneal_decay,
 inner_loosen) live in ``SolveControls``, a pytree of traced scalars: jitted
 callers take them as operands, so retuning the tolerance or the schedule
-NEVER recompiles.  Structural knobs (iteration caps, chunk sizes, backends)
-stay static.
+NEVER recompiles.  Structural knobs (iteration caps, chunk sizes, backends
+— including the inner Sinkhorn dual-update backend, which may route each
+step's sweeps through the fused Pallas kernels) stay static on the configs;
+because ε reaches the Pallas kernels as a traced operand too, ε-annealing
+across stages reuses one executable under either backend.
 
 ``unroll=True`` swaps the while_loop for a ``lax.scan`` over the full outer
 cap (no early stopping) — the reverse-mode-differentiable path.  Solvers

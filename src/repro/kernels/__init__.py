@@ -1,8 +1,10 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
   fgc_scan      — blocked-DP FGC L-apply (the paper's §3 recursion on the MXU)
-  sinkhorn_step — fused flash-style log-domain Sinkhorn half-step
-  ops           — jit'd wrappers (interpret mode off-TPU)
+  sinkhorn_step — fused flash-style log-domain Sinkhorn half-steps (row +
+                  true-column kernels, traced ε, vmap/grid-extended batching)
+  ops           — jit'd wrappers (interpret mode off-TPU) + the
+                  "auto"|"pallas"|"xla" sinkhorn backend resolution
   ref           — pure-jnp oracles
 """
 from repro.kernels import ops, ref  # noqa: F401

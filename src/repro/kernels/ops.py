@@ -28,7 +28,7 @@ def _tpu_f32_inputs(x):
     orig = x.dtype
     if _on_tpu() and orig == jnp.float64:
         warnings.warn(
-            "Pallas TPU kernels have no float64: computing the FGC apply in "
+            "Pallas TPU kernels have no float64: computing the kernel in "
             "float32 and casting the result back to float64 (precision is "
             "f32-limited). Pass float32 inputs to silence this.",
             stacklevel=3)
@@ -57,13 +57,45 @@ def fgc_apply_dtilde(x, p: int = 1, block_rows: int | None = None):
     return y.astype(orig)
 
 
-def sinkhorn_row_update(cost, g, log_mu, eps: float):
-    """Fused log-domain Sinkhorn row half-step (see sinkhorn_step.py)."""
-    return sinkhorn_step.sinkhorn_row_update_pallas(
-        cost, g, log_mu, eps, interpret=not _on_tpu())
+def resolve_sinkhorn_backend(backend: str = "auto") -> str:
+    """The serving/solver backend knob: ``"auto"`` picks the fused Pallas
+    kernels on TPU (compiled) and the XLA logsumexp scans elsewhere;
+    ``"pallas"`` forces the kernels (interpret mode off-TPU — the test
+    suite's bit-parity path); ``"xla"`` forces the scans."""
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(
+            f"unknown sinkhorn backend {backend!r}: expected 'auto', "
+            "'pallas', or 'xla'")
+    return backend
 
 
-def sinkhorn_col_update(cost, f, log_nu, eps: float):
-    """Column half-step = row half-step on Cᵀ."""
-    return sinkhorn_step.sinkhorn_row_update_pallas(
-        cost.T, f, log_nu, eps, interpret=not _on_tpu())
+def _sinkhorn_f32(cost, vec, logm):
+    """TPU-f64 guard for the Sinkhorn kernels (cf. `_tpu_f32_inputs`): all
+    three operands must move together or the kernel would mix dtypes."""
+    cost, orig = _tpu_f32_inputs(cost)
+    if cost.dtype != orig:
+        vec, logm = vec.astype(cost.dtype), logm.astype(cost.dtype)
+    return cost, vec, logm, orig
+
+
+def sinkhorn_row_update(cost, g, log_mu, eps, interpret: bool | None = None):
+    """Fused log-domain Sinkhorn row half-step (see sinkhorn_step.py).
+
+    ``eps`` is a traced scalar — ε-annealing reuses one executable.
+    ``interpret=None`` auto-selects compiled-on-TPU / interpreter elsewhere.
+    """
+    cost, g, log_mu, orig = _sinkhorn_f32(cost, g, log_mu)
+    f = sinkhorn_step.sinkhorn_row_update_pallas(cost, g, log_mu, eps,
+                                                 interpret=interpret)
+    return f.astype(orig)
+
+
+def sinkhorn_col_update(cost, f, log_nu, eps, interpret: bool | None = None):
+    """Column half-step — a true Cᵀ-twin kernel (row axis innermost over the
+    same row-major C tiles), so no transposed (M,N) copy is materialized."""
+    cost, f, log_nu, orig = _sinkhorn_f32(cost, f, log_nu)
+    g = sinkhorn_step.sinkhorn_col_update_pallas(cost, f, log_nu, eps,
+                                                 interpret=interpret)
+    return g.astype(orig)

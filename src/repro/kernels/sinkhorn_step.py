@@ -1,15 +1,46 @@
-"""Pallas TPU kernel: fused log-domain Sinkhorn half-step (flash-style).
+"""Pallas TPU kernels: fused log-domain Sinkhorn half-steps (flash-style).
 
-One mirror-descent inner iteration needs
+One mirror-descent inner iteration needs the row update
     f_i = ε·(log μ_i − logsumexp_p (g_p − C_ip)/ε)
-which, done naively, materializes (g − C)/ε and two more (M,N) temporaries.
-This kernel streams C through VMEM in (BM×BN) tiles with an online
-(max, sumexp) reduction — one pass over C, no (M,N) temporaries, numerically
-identical to jax.scipy logsumexp (max-shifted).
+and its column twin
+    g_p = ε·(log ν_p − logsumexp_i (f_i − C_ip)/ε)
+which, done naively, materialize (g − C)/ε and two more (M,N) temporaries
+per half-step.  These kernels stream C through VMEM in (BM×BN) tiles with an
+online (max, sumexp) reduction — one pass over C per half-step, no (M,N)
+temporaries.  The column kernel walks the SAME row-major C with the row axis
+innermost, so neither half-step ever materializes Cᵀ.
 
-Grid: (row-blocks × col-blocks), columns innermost/sequential; running
-per-row max m and sum s live in VMEM scratch; f is written on the last
-column step.  The column update is the same kernel applied to Cᵀ.
+Grid: (parallel-blocks × reduction-blocks), reduction innermost/sequential;
+running per-output max m and sum s live in VMEM scratch; the output is
+written on the last reduction step.
+
+ε is a TRACED scalar operand delivered through SMEM — ε-annealing (a new ε
+every outer stage) and `SolveControls` retuning reuse one compiled
+executable instead of recompiling per stage.  The kernel divides by ε
+exactly as the XLA path does (`(g − C)/ε`, not a reciprocal multiply).
+Parity vs `jax.scipy` logsumexp is ≤1 ulp per half-step, not bitwise: the
++inf-padded 128-wide tile sums (and, across tiles, the online
+renormalization) associate the reduction differently than XLA's unpadded
+tree — and the XLA expressions themselves round differently between eager
+and scan-fused contexts.  What IS exact is every within-backend
+invariance: chunked tol=0 == fixed scan, warm starts, segmented ==
+one-shot, continuous serving == barrier (tests/test_sinkhorn_backend.py).
+
+Zero-mass atoms (the `zero_mass_potentials` convention of
+`repro.core.sinkhorn`: batch-padded support points carry −inf potentials
+and −inf log-mass) flow through without NaN: a tile whose running max is
+still −inf contributes 0 to the sum (`exp(−inf − (−inf))` would be NaN),
+and an all-masked output row yields lse = −inf, matching
+`logsumexp(all −inf) = −inf` exactly.
+
+`interpret=None` auto-selects: compiled on TPU, interpreter elsewhere (the
+CPU-container correctness path used by the test-suite parity pins).
+
+vmap-compatibility: `pl.pallas_call` has a batching rule that prepends the
+mapped axis as an outermost grid dimension, so these kernels work per-lane
+under `entropic_gw_batch`'s vmap — including per-lane traced ε.  The
+`*_batched` wrappers expose that grid-extended form eagerly for (B, M, N)
+stacks.
 """
 from __future__ import annotations
 
@@ -24,50 +55,104 @@ BM = 128
 BN = 128
 
 
-def _sinkhorn_kernel(cost_ref, g_ref, logmu_ref, f_ref, m_ref, s_ref, *,
-                     eps: float, n_col_blocks: int):
+def default_interpret() -> bool:
+    """Interpret off-TPU (Pallas' CPU correctness path), compiled on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _online_lse_update(z, m_ref, s_ref, axis: int):
+    """One tile of the online (max, sumexp) reduction over ``axis``.
+
+    The two `where` guards keep zero-mass regions exact: while every tile
+    seen so far is fully masked (z = −inf everywhere, so the running max is
+    −inf) both the rescale of the old sum and the new tile's contribution
+    must be literally 0 — the unguarded forms are exp(−inf − (−inf)) = NaN,
+    and one NaN would otherwise poison the running sum for good.  Once the
+    max is finite the guards select the untouched fast path bit-for-bit.
+    """
+    keep = (slice(None), 0) if axis == 1 else (0, slice(None))
+    m_old = m_ref[...][keep]
+    m_new = jnp.maximum(m_old, jnp.max(z, axis=axis))
+    scale = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
+    m_b = m_new[:, None] if axis == 1 else m_new[None, :]
+    contrib = jnp.where(jnp.isfinite(m_b), jnp.exp(z - m_b), 0.0)
+    s_new = s_ref[...][keep] * scale + jnp.sum(contrib, axis=axis)
+    m_ref[...] = m_new[:, None] if axis == 1 else m_new[None, :]
+    s_ref[...] = s_new[:, None] if axis == 1 else s_new[None, :]
+
+
+def _finish_lse(m, s):
+    """lse = m + log s, with all-masked outputs pinned to −inf (matching
+    `logsumexp` of an all-−inf row) instead of −inf + log 0 = NaN."""
+    return jnp.where(jnp.isfinite(m), m + jnp.log(s), -jnp.inf)
+
+
+def _row_kernel(eps_ref, cost_ref, g_ref, logmu_ref, f_ref, m_ref, s_ref, *,
+                n_col_blocks: int):
     col = pl.program_id(1)
+    eps = eps_ref[0]
 
     @pl.when(col == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    z = (g_ref[...][None, :] - cost_ref[...]) * (1.0 / eps)   # (BM, BN)
-    m_old = m_ref[...][:, 0]                                   # (BM,)
-    m_blk = jnp.max(z, axis=1)
-    m_new = jnp.maximum(m_old, m_blk)
-    # guard exp(-inf - -inf): where m_new is -inf the sum stays 0
-    scale = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
-    s_new = (s_ref[...][:, 0] * scale
-             + jnp.sum(jnp.exp(z - m_new[:, None]), axis=1))
-    m_ref[...] = m_new[:, None]
-    s_ref[...] = s_new[:, None]
+    # divide (not reciprocal-multiply) so interpret mode matches the XLA
+    # path's (g − C)/ε rounding bit-for-bit
+    z = (g_ref[...][None, :] - cost_ref[...]) / eps        # (BM, BN)
+    _online_lse_update(z, m_ref, s_ref, axis=1)
 
     @pl.when(col == n_col_blocks - 1)
     def _finish():
-        lse = m_ref[...][:, 0] + jnp.log(s_ref[...][:, 0])
+        lse = _finish_lse(m_ref[...][:, 0], s_ref[...][:, 0])
         f_ref[...] = eps * (logmu_ref[...] - lse)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def sinkhorn_row_update_pallas(cost, g, log_mu, eps: float,
-                               interpret: bool = True):
-    """f = ε(log μ − LSE_p((g_p − C_ip)/ε)) for (M,N) cost; fused single pass."""
+def _col_kernel(eps_ref, cost_ref, f_ref, lognu_ref, g_ref, m_ref, s_ref, *,
+                n_row_blocks: int):
+    row = pl.program_id(1)
+    eps = eps_ref[0]
+
+    @pl.when(row == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    z = (f_ref[...][:, None] - cost_ref[...]) / eps        # (BM, BN)
+    _online_lse_update(z, m_ref, s_ref, axis=0)
+
+    @pl.when(row == n_row_blocks - 1)
+    def _finish():
+        lse = _finish_lse(m_ref[...][0, :], s_ref[...][0, :])
+        g_ref[...] = eps * (lognu_ref[...] - lse)
+
+
+def _pad_operands(cost, v, w, bm: int, bn: int):
+    """Pad C to (⌈M/BM⌉·BM, ⌈N/BN⌉·BN) with +inf — exp((· − inf)/ε) = 0, so
+    padded cells never contribute — and the vectors with zeros."""
     m, n = cost.shape
-    dtype = cost.dtype
-    mp, np_ = -m % BM, -n % BN
-    # pad columns with +inf cost => exp((g - inf)/eps) = 0: no contribution
+    mp, np_ = -m % bm, -n % bn
     costp = jnp.pad(cost, ((0, mp), (0, np_)), constant_values=jnp.inf)
-    gp = jnp.pad(g, (0, np_))
-    logmup = jnp.pad(log_mu, (0, mp))
+    return costp, jnp.pad(v, (0, np_)), jnp.pad(w, (0, mp))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sinkhorn_row_update_pallas(cost, g, log_mu, eps,
+                               interpret: bool | None = None):
+    """f = ε(log μ − LSE_p((g_p − C_ip)/ε)) for (M,N) cost; fused single
+    pass.  ``eps`` is traced (SMEM scalar): annealing never recompiles."""
+    m, _ = cost.shape
+    dtype = cost.dtype
+    costp, gp, logmup = _pad_operands(cost, g, log_mu, BM, BN)
     grid = (costp.shape[0] // BM, costp.shape[1] // BN)
+    eps_arr = jnp.asarray(eps, dtype).reshape((1,))
 
     f = pl.pallas_call(
-        functools.partial(_sinkhorn_kernel, eps=eps, n_col_blocks=grid[1]),
+        functools.partial(_row_kernel, n_col_blocks=grid[1]),
         out_shape=jax.ShapeDtypeStruct((costp.shape[0],), dtype),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1,), lambda r, c: (0,), memory_space=pltpu.SMEM),
             pl.BlockSpec((BM, BN), lambda r, c: (r, c)),
             pl.BlockSpec((BN,), lambda r, c: (c,)),
             pl.BlockSpec((BM,), lambda r, c: (r,)),
@@ -75,6 +160,59 @@ def sinkhorn_row_update_pallas(cost, g, log_mu, eps: float,
         out_specs=pl.BlockSpec((BM,), lambda r, c: (r,)),
         scratch_shapes=[pltpu.VMEM((BM, 1), dtype),
                         pltpu.VMEM((BM, 1), dtype)],
-        interpret=interpret,
-    )(costp, gp, logmup)
+        interpret=default_interpret() if interpret is None else interpret,
+    )(eps_arr, costp, gp, logmup)
     return f[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sinkhorn_col_update_pallas(cost, f, log_nu, eps,
+                               interpret: bool | None = None):
+    """g = ε(log ν − LSE_i((f_i − C_ip)/ε)): the Cᵀ twin as a true column
+    kernel — the SAME row-major C tiles stream through VMEM with the row
+    axis innermost, so no transposed copy of C is ever materialized."""
+    _, n = cost.shape
+    dtype = cost.dtype
+    costp, lognup, fp = _pad_operands(cost, log_nu, f, BM, BN)
+    grid = (costp.shape[1] // BN, costp.shape[0] // BM)
+    eps_arr = jnp.asarray(eps, dtype).reshape((1,))
+
+    g = pl.pallas_call(
+        functools.partial(_col_kernel, n_row_blocks=grid[1]),
+        out_shape=jax.ShapeDtypeStruct((costp.shape[1],), dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda c, r: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((BM, BN), lambda c, r: (r, c)),
+            pl.BlockSpec((BM,), lambda c, r: (r,)),
+            pl.BlockSpec((BN,), lambda c, r: (c,)),
+        ],
+        out_specs=pl.BlockSpec((BN,), lambda c, r: (c,)),
+        scratch_shapes=[pltpu.VMEM((1, BN), dtype),
+                        pltpu.VMEM((1, BN), dtype)],
+        interpret=default_interpret() if interpret is None else interpret,
+    )(eps_arr, costp, fp, lognup)
+    return g[:n]
+
+
+def _batched(fn, cost, v, w, eps, interpret):
+    eps = jnp.broadcast_to(jnp.asarray(eps, cost.dtype), cost.shape[:1])
+    return jax.vmap(functools.partial(fn, interpret=interpret))(cost, v, w,
+                                                                eps)
+
+
+def sinkhorn_row_update_pallas_batched(cost, g, log_mu, eps,
+                                       interpret: bool | None = None):
+    """Row half-step over (B, M, N) lanes in ONE grid-extended launch —
+    Pallas' vmap batching rule prepends the lane axis as the outermost grid
+    dimension.  ``eps`` may be scalar (shared) or (B,) (per-lane, as the
+    serving path's stacked `SolveControls` deliver it)."""
+    return _batched(sinkhorn_row_update_pallas, cost, g, log_mu, eps,
+                    interpret)
+
+
+def sinkhorn_col_update_pallas_batched(cost, f, log_nu, eps,
+                                       interpret: bool | None = None):
+    """Column half-step over (B, M, N) lanes; see the row twin."""
+    return _batched(sinkhorn_col_update_pallas, cost, f, log_nu, eps,
+                    interpret)

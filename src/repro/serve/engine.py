@@ -17,7 +17,14 @@ shape.
 the LM engine's decode-slot refill): a bucket's requests occupy a
 fixed-width slot batch; the adaptive driver advances all lanes by a bounded
 SEGMENT of outer steps per dispatch; after each segment, converged lanes
-are harvested and their slots refilled from the queue.  Because the
+are harvested and their slots refilled from the queue.  Each dispatch's
+inner Sinkhorn sweeps run through the solver's pluggable dual-update
+backend (``GWServeConfig.sinkhorn_backend``): on TPU the default "auto"
+routes them through the fused Pallas half-step kernels — one streaming
+pass over the (M,N) linearized cost per half-step, ε a traced operand.
+Within a backend every scheduling invariance stays bit-exact (continuous
+== barrier, segmented == one-shot); across backends plans agree to ≤1 ulp
+per sweep with identical iteration counts (tests/test_sinkhorn_backend.py).  Because the
 driver's whole state is an explicit resumable carry and its ε/tolerance
 schedules are functions of each lane's own step index, a lane that shares
 its slot batch with five generations of neighbours computes exactly the
@@ -124,11 +131,21 @@ class GWServeConfig:
     #: order each bucket's queue by predicted hardness (hardest first) so
     #: co-scheduled lanes tend to converge together.
     order_by_hardness: bool = True
+    #: log-mode Sinkhorn dual-update backend for every dispatch; overrides
+    #: ``solver.sinkhorn_backend`` when set.  "auto" (the solver default)
+    #: runs the fused Pallas half-step kernels on TPU and the XLA scans
+    #: elsewhere; ε/tol stay traced either way, so the continuous scheduler
+    #: keeps one executable per bucket × width with the kernel enabled.
+    sinkhorn_backend: str | None = None
 
     def solver_cfg(self) -> GWConfig:
-        if self.tol is None:
-            return self.solver
-        return dataclasses.replace(self.solver, tol=self.tol)
+        cfg = self.solver
+        if self.tol is not None:
+            cfg = dataclasses.replace(cfg, tol=self.tol)
+        if self.sinkhorn_backend is not None:
+            cfg = dataclasses.replace(cfg,
+                                      sinkhorn_backend=self.sinkhorn_backend)
+        return cfg
 
 
 @dataclasses.dataclass

@@ -1,10 +1,11 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import sinkhorn as sk
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, sinkhorn_step
 
 RNG = np.random.default_rng(11)
 
@@ -49,13 +50,170 @@ def test_sinkhorn_kernel(m, n, eps):
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
 
 
-def test_sinkhorn_kernel_col_update():
-    cost = jnp.asarray(RNG.random((40, 60)))
-    f = jnp.asarray(RNG.normal(size=(40,)))
-    log_nu = jnp.log(jnp.full((60,), 1.0 / 60))
+@pytest.mark.parametrize("m,n", [(40, 60), (137, 53), (200, 140)])
+def test_sinkhorn_kernel_col_update(m, n):
+    """The true-Cᵀ column kernel (row axis innermost, no transposed copy)
+    must match the row oracle on Cᵀ at ulp level — XLA associates an
+    axis-0 reduction differently from axis-1-of-transpose, so the pin is
+    ≤1 ulp, not bitwise (the EXACT contracts live in
+    tests/test_sinkhorn_backend.py: within-backend scheduling
+    invariances)."""
+    cost = jnp.asarray(RNG.random((m, n)))
+    f = jnp.asarray(RNG.normal(size=(m,)))
+    log_nu = jnp.log(jnp.full((n,), 1.0 / n))
     got = ops.sinkhorn_col_update(cost, f, log_nu, 0.01)
     want = ref.sinkhorn_row_update_ref(cost.T, f, log_nu, 0.01)
-    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got, want, rtol=1e-14, atol=1e-15)
+
+
+@pytest.mark.parametrize("m,n", [(37, 53), (64, 128), (100, 113)])
+@pytest.mark.parametrize("eps", [0.05, 0.002])
+def test_sinkhorn_row_kernel_ulp_parity(m, n, eps):
+    """The online single-pass LSE vs the oracle: ≤1 ulp on the potentials
+    (the kernel's +inf-padded 128-wide tile sums associate differently
+    than the oracle's unpadded reduction), including at the paper's ε and
+    odd sizes."""
+    cost = jnp.asarray(RNG.random((m, n)))
+    g = jnp.asarray(RNG.normal(size=(n,)))
+    log_mu = jnp.log(jnp.full((m,), 1.0 / m))
+    got = ops.sinkhorn_row_update(cost, g, log_mu, eps)
+    want = ref.sinkhorn_row_update_ref(cost, g, log_mu, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-14, atol=1e-15)
+
+
+def test_sinkhorn_kernel_traced_eps_no_recompile():
+    """ε is a traced SMEM operand: an ε-annealing schedule (a new ε every
+    outer stage) must reuse ONE compiled executable per kernel — mirrors
+    the no-recompile asserts in tests/test_solver.py."""
+    cost = jnp.asarray(RNG.random((40, 48)))
+    g = jnp.asarray(RNG.normal(size=(48,)))
+    f = jnp.asarray(RNG.normal(size=(40,)))
+    log_mu = jnp.log(jnp.full((40,), 1.0 / 40))
+    log_nu = jnp.log(jnp.full((48,), 1.0 / 48))
+    row, col = (sinkhorn_step.sinkhorn_row_update_pallas,
+                sinkhorn_step.sinkhorn_col_update_pallas)
+    row.clear_cache()
+    col.clear_cache()
+    for eps in (0.1, 0.05, 0.025, 0.0125, 0.002):   # geometric decay stages
+        row(cost, g, log_mu, eps)
+        col(cost, f, log_nu, eps)
+    assert row._cache_size() == 1
+    assert col._cache_size() == 1
+    # a new shape is a legitimate new entry
+    row(jnp.asarray(RNG.random((24, 48))), g, log_mu, 0.01)
+    assert row._cache_size() == 2
+
+
+@pytest.mark.parametrize("kernel", ["row", "col"])
+def test_sinkhorn_kernel_zero_mass_first_tile(kernel):
+    """Zero-mass atoms (−inf potentials / −inf log-mass, the
+    `zero_mass_potentials` convention) must flow through without NaN even
+    when an ENTIRE leading reduction tile is masked — the running max is
+    then −inf and an unguarded exp(z − max) would poison the sum with NaN
+    for good."""
+    m, n = 40, 160            # n > 128: the first column tile is all-masked
+    eps = 0.01
+    cost = jnp.asarray(RNG.random((m, n)))
+    nu = jnp.asarray(RNG.random(n) + 0.1).at[:130].set(0.0)
+    mu = jnp.asarray(RNG.random(m) + 0.1)
+    if kernel == "row":
+        g0 = jnp.where(nu > 0, jnp.asarray(RNG.normal(size=(n,))), -jnp.inf)
+        log_mu = jnp.log(mu / mu.sum())
+        got = ops.sinkhorn_row_update(cost, g0, log_mu, eps)
+        want = ref.sinkhorn_row_update_ref(cost, g0, log_mu, eps)
+    else:
+        costT = cost.T        # (160, 40): first ROW tile all-masked
+        f0 = jnp.where(nu > 0, jnp.asarray(RNG.normal(size=(n,))), -jnp.inf)
+        log_mu = jnp.log(mu / mu.sum())
+        got = ops.sinkhorn_col_update(costT, f0, log_mu, eps)
+        want = ref.sinkhorn_row_update_ref(costT.T, f0, log_mu, eps)
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_allclose(got, want, rtol=1e-13, atol=1e-15)
+
+
+def test_sinkhorn_kernel_zero_mass_rows_stay_neg_inf():
+    """Zero-mass OUTPUT atoms (log μ_i = −inf) pin to −inf — their exact
+    Sinkhorn fixed point — never NaN."""
+    m, n = 30, 40
+    cost = jnp.asarray(RNG.random((m, n)))
+    mu = jnp.asarray(RNG.random(m) + 0.1).at[jnp.asarray([0, 7, 29])].set(0.)
+    mu = mu / mu.sum()
+    nu = jnp.asarray(RNG.random(n) + 0.1)
+    _, g0 = sk.zero_mass_potentials(mu, nu / nu.sum())
+    log_mu = jnp.log(mu)
+    f = ops.sinkhorn_row_update(cost, g0, log_mu, 0.01)
+    assert not bool(jnp.isnan(f).any())
+    np.testing.assert_array_equal(np.asarray(jnp.isneginf(f)),
+                                  np.asarray(mu == 0.0))
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-6),
+                                       (jnp.float64, 1e-14)])
+def test_sinkhorn_kernel_dtypes_under_x64(dtype, tol):
+    """The kernel must preserve the caller's dtype under the x64 test
+    context (no silent promotion/downcast) with dtype-scaled parity."""
+    m, n = 56, 72
+    cost = jnp.asarray(RNG.random((m, n)), dtype)
+    g = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    log_mu = jnp.log(jnp.full((m,), 1.0 / m, dtype))
+    got = ops.sinkhorn_row_update(cost, g, log_mu, dtype(0.01))
+    want = ref.sinkhorn_row_update_ref(cost, g, log_mu, dtype(0.01))
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("explicit", [False, True])
+def test_sinkhorn_kernel_batched_parity(explicit):
+    """Batched lanes — via vmap (Pallas' batching rule grid-extends) or the
+    eager `*_batched` wrappers — must match per-lane `sinkhorn_log` sweeps,
+    including PER-LANE traced ε (how the serving path's stacked
+    SolveControls deliver it) and a non-multiple-of-128 shape."""
+    b, m, n = 3, 40, 56
+    iters = 15
+    rng = np.random.default_rng(5)
+    costs = jnp.asarray(rng.random((b, m, n)))
+    mus = jnp.asarray(rng.random((b, m)) + 0.1)
+    mus = mus / mus.sum(axis=1, keepdims=True)
+    nus = jnp.asarray(rng.random((b, n)) + 0.1)
+    nus = nus / nus.sum(axis=1, keepdims=True)
+    epss = jnp.asarray([0.05, 0.01, 0.002])
+
+    def lane_sweep(cost, log_mu, log_nu, eps, f, g):
+        for _ in range(iters):
+            if explicit:
+                f = sinkhorn_step.sinkhorn_row_update_pallas_batched(
+                    cost, g, log_mu, eps)
+                g = sinkhorn_step.sinkhorn_col_update_pallas_batched(
+                    cost, f, log_nu, eps)
+            else:
+                f = jax.vmap(ops.sinkhorn_row_update)(cost, g, log_mu, eps)
+                g = jax.vmap(ops.sinkhorn_col_update)(cost, f, log_nu, eps)
+        return f, g
+
+    f, g = lane_sweep(costs, jnp.log(mus), jnp.log(nus), epss,
+                      jnp.zeros((b, m)), jnp.zeros((b, n)))
+    for i in range(b):
+        _, f_s, g_s, _ = sk.sinkhorn_log(costs[i], mus[i], nus[i],
+                                         float(epss[i]), iters)
+        np.testing.assert_allclose(np.asarray(f[i]), np.asarray(f_s),
+                                   rtol=1e-12, atol=1e-13)
+        np.testing.assert_allclose(np.asarray(g[i]), np.asarray(g_s),
+                                   rtol=1e-12, atol=1e-13)
+
+
+def test_sinkhorn_backend_resolution_on_cpu():
+    """`backend="auto"` selects the XLA scans off-TPU (the kernels are
+    interpret-only there); explicit choices pass through; junk raises."""
+    assert jax.default_backend() != "tpu"   # the container contract
+    assert ops.resolve_sinkhorn_backend("auto") == "xla"
+    assert ops.resolve_sinkhorn_backend("pallas") == "pallas"
+    assert ops.resolve_sinkhorn_backend("xla") == "xla"
+    with pytest.raises(ValueError, match="unknown sinkhorn backend"):
+        ops.resolve_sinkhorn_backend("cuda")
+    assert sinkhorn_step.default_interpret() is True
+    assert sk._use_pallas("auto") is False
+    assert sk._use_pallas("pallas") is True
+    assert sk._use_pallas("xla") is False
 
 
 @pytest.mark.parametrize("m,n", [(37, 53), (64, 64)])  # odd sizes hit the
@@ -64,9 +222,10 @@ def test_sinkhorn_kernel_col_update():
 def test_sinkhorn_kernel_matches_solver_sweep(m, n, eps):
     """Iterating the fused Pallas halves must reproduce the SOLVER-path
     Sinkhorn — both the fixed scan and the chunked early-stopping sweep the
-    convergence-controlled driver actually calls.  `kernels/sinkhorn_step`
-    is not wired into the chunked driver yet (ROADMAP "Pallas: fuse the
-    chunked Sinkhorn sweep"); this parity pin keeps it fusion-ready."""
+    convergence-controlled driver actually calls.  The driver now routes
+    through these kernels when ``backend="pallas"`` resolves (see
+    tests/test_sinkhorn_backend.py for the solver-level contracts); this
+    pin keeps the raw halves honest against the XLA expressions."""
     iters = 40
     rng = np.random.default_rng(7)
     cost = jnp.asarray(rng.random((m, n)))

@@ -1,0 +1,282 @@
+"""Solver- and serving-level contracts for the Sinkhorn backend layer.
+
+What "bit-identical" can and cannot mean here: the XLA log-domain
+expressions themselves round differently between eager and scan-fused
+trace contexts (~1 ulp on the potentials — observed 5.6e-17 after 30
+sweeps), so literal cross-backend bit equality is unattainable even in
+principle.  The contracts this suite pins are therefore:
+
+  * WITHIN the Pallas backend, every scheduling invariance is EXACT
+    (``assert_array_equal``): chunked tol=0 == fixed scan, warm starts,
+    segmented batch == one-shot batch, continuous serving == barrier
+    serving.  These are the invariances the continuous-batching engine
+    relies on, now with the fused kernels in the loop.
+  * ACROSS backends (pallas vs xla), plans/potentials agree to ≤1 ulp per
+    sweep (pinned at rtol 1e-12) and every iteration COUNT — outer, inner,
+    chunked iters_used — is exactly equal, so the adaptive driver's
+    control flow is backend-invariant.
+  * No jit recompilation with the kernel enabled: ε-annealing stages and
+    `SolveControls` retuning reuse one executable (ε reaches the kernel as
+    a traced SMEM operand).
+
+On this CPU container the Pallas path runs in interpret mode
+(`backend="pallas"` forces it; `"auto"` resolves to the XLA scans off-TPU).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sinkhorn as sk
+from repro.core.grids import Grid1D
+from repro.core.gw import (GWConfig, _solve_stacked, entropic_gw,
+                           entropic_gw_batch)
+from repro.kernels import sinkhorn_step
+from repro.serve.engine import GWEngine, GWServeConfig
+
+RNG = np.random.default_rng(23)
+
+
+def _measure(n, seed):
+    r = np.random.default_rng(seed)
+    u = r.random(n) + 0.1
+    return jnp.asarray(u / u.sum())
+
+
+def _problem(m, n, seed):
+    cost = jnp.asarray(np.random.default_rng(seed).random((m, n)))
+    return cost, _measure(m, 2 * seed), _measure(n, 2 * seed + 1)
+
+
+def _grid_problem(m, n, seed):
+    return (Grid1D(m, 1 / (m - 1), 1), Grid1D(n, 1 / (n - 1), 1),
+            _measure(m, 2 * seed), _measure(n, 2 * seed + 1))
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# sinkhorn-level: pallas vs xla, fixed + chunked + warm starts
+# ---------------------------------------------------------------------------
+
+def test_pallas_matches_xla_fixed_and_chunked():
+    cost, mu, nu = _problem(48, 64, 3)
+    for call in [
+        lambda be: sk.sinkhorn_log(cost, mu, nu, 0.01, 30, backend=be),
+        lambda be: sk.sinkhorn_log_chunked(cost, mu, nu, 0.01, 30, 8, 0.0,
+                                           backend=be),
+        lambda be: sk.sinkhorn_log_chunked(cost, mu, nu, 0.01, 300, 10,
+                                           1e-8, backend=be),
+    ]:
+        x = call("xla")
+        p = call("pallas")
+        for xa, pa in zip(x[:4], p[:4]):     # plan, f, g, err
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(xa),
+                                       rtol=1e-12, atol=1e-13)
+        if len(x) == 5:                      # chunked: identical stop step
+            assert int(x[4]) == int(p[4])
+
+
+def test_pallas_chunked_tol0_bit_identical_to_fixed():
+    """The repo's oldest Sinkhorn contract — tol=0 chunked == fixed scan,
+    bit for bit — must survive with the kernels in the loop (cold and warm
+    starts, odd sizes)."""
+    for (m, n), seed in [((37, 53), 5), ((48, 64), 6)]:
+        cost, mu, nu = _problem(m, n, seed)
+        r = np.random.default_rng(seed)
+        for f0, g0 in [(None, None),
+                       (jnp.asarray(r.normal(size=(m,)) * 0.01),
+                        jnp.asarray(r.normal(size=(n,)) * 0.01))]:
+            fixed = sk.sinkhorn_log(cost, mu, nu, 0.01, 25, f0, g0,
+                                    backend="pallas")
+            chunk = sk.sinkhorn_log_chunked(cost, mu, nu, 0.01, 25, 7, 0.0,
+                                            f0, g0, backend="pallas")
+            assert int(chunk[4]) == 25
+            _assert_trees_equal(fixed, chunk[:4])
+
+
+def test_pallas_warm_start_matches_xla():
+    cost, mu, nu = _problem(40, 48, 7)
+    r = np.random.default_rng(7)
+    f0 = jnp.asarray(r.normal(size=(40,)) * 0.01)
+    g0 = jnp.asarray(r.normal(size=(48,)) * 0.01)
+    x = sk.sinkhorn_log_chunked(cost, mu, nu, 5e-3, 20, 5, 0.0, f0, g0,
+                                backend="xla")
+    p = sk.sinkhorn_log_chunked(cost, mu, nu, 5e-3, 20, 5, 0.0, f0, g0,
+                                backend="pallas")
+    for xa, pa in zip(x[:4], p[:4]):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(xa),
+                                   rtol=1e-12, atol=1e-13)
+
+
+def test_solve_adaptive_unroll_stays_xla():
+    """The unroll path exists for reverse-mode AD and `pallas_call` has no
+    VJP — requesting pallas there must still run (on the XLA scans) AND
+    stay differentiable."""
+    cost, mu, nu = _problem(20, 24, 11)
+
+    def loss(c):
+        plan, *_ = sk.solve_adaptive(c, mu, nu, 0.05, 10, 5, 0.0,
+                                     unroll=True, backend="pallas")
+        return (plan * c).sum()
+
+    g = jax.grad(loss)(cost)
+    assert bool(jnp.isfinite(g).all())
+
+
+# ---------------------------------------------------------------------------
+# solver-level: GW mirror descent with annealing
+# ---------------------------------------------------------------------------
+
+def test_gw_pallas_matches_xla_with_annealing():
+    """End-to-end entropic GW under ε-annealing + early stopping: identical
+    control flow (outer/inner counts), ulp-level plans."""
+    gx, gy, mu, nu = _grid_problem(40, 40, 13)
+    base = GWConfig(eps=5e-3, outer_iters=12, sinkhorn_iters=80, tol=1e-6,
+                    eps_init=0.05, anneal_decay=0.5)
+    x = entropic_gw(gx, gy, mu, nu,
+                    dataclasses.replace(base, sinkhorn_backend="xla"))
+    p = entropic_gw(gx, gy, mu, nu,
+                    dataclasses.replace(base, sinkhorn_backend="pallas"))
+    assert int(x.info.outer_iters) == int(p.info.outer_iters)
+    assert int(x.info.inner_iters) == int(p.info.inner_iters)
+    assert bool(x.info.converged) == bool(p.info.converged)
+    np.testing.assert_allclose(np.asarray(p.plan), np.asarray(x.plan),
+                               rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(float(p.value), float(x.value), rtol=1e-10)
+
+
+def test_gw_batch_zero_mass_padded_lanes_pallas():
+    """Ragged problems padded with zero-mass atoms (−inf potentials — the
+    `_finish` hazard the kernel guards) must solve NaN-free through the
+    kernels and match the xla-backend batch lane for lane."""
+    probs = [_grid_problem(m, n, 17 + i)
+             for i, (m, n) in enumerate([(30, 40), (40, 30), (25, 37)])]
+    base = GWConfig(eps=1e-2, outer_iters=8, sinkhorn_iters=60, tol=1e-6)
+    out_x = entropic_gw_batch(
+        probs, dataclasses.replace(base, sinkhorn_backend="xla"),
+        pad_to=(40, 40))
+    out_p = entropic_gw_batch(
+        probs, dataclasses.replace(base, sinkhorn_backend="pallas"),
+        pad_to=(40, 40))
+    for rx, rp in zip(out_x, out_p):
+        assert not bool(jnp.isnan(rp.plan).any())
+        assert bool(jnp.isfinite(rp.f).all())   # sliced back: no pad atoms
+        assert int(rx.info.inner_iters) == int(rp.info.inner_iters)
+        np.testing.assert_allclose(np.asarray(rp.plan), np.asarray(rx.plan),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_gw_batch_segmented_bit_identical_pallas():
+    """Segmented (continuous-batching) solves with the kernel enabled visit
+    the same iterates, bit for bit, as one uninterrupted batch."""
+    probs = [_grid_problem(s, s, 29 + i) for i, s in enumerate((30, 40, 36))]
+    cfg = GWConfig(eps=1e-2, outer_iters=8, sinkhorn_iters=60, tol=1e-6,
+                   sinkhorn_backend="pallas")
+    one = entropic_gw_batch(probs, cfg, pad_to=(40, 40))
+    res, carry = entropic_gw_batch(probs, cfg, pad_to=(40, 40),
+                                   max_outer_segment=3)
+    while not bool(jnp.all(carry.done | (carry.t >= cfg.outer_iters))):
+        res, carry = entropic_gw_batch(probs, cfg, pad_to=(40, 40),
+                                       resume_state=carry,
+                                       max_outer_segment=3)
+    for o, s in zip(one, res):
+        _assert_trees_equal((o.plan, o.f, o.g), (s.plan, s.f, s.g))
+        assert int(o.info.inner_iters) == int(s.info.inner_iters)
+
+
+# ---------------------------------------------------------------------------
+# no recompilation with the kernel enabled
+# ---------------------------------------------------------------------------
+
+def test_no_recompile_annealing_and_retuning_with_pallas():
+    """Mirrors tests/test_solver.py's no-recompile asserts with the fused
+    kernel in the loop: retuning tol/ε/annealing (traced `SolveControls` +
+    traced kernel ε) must reuse the compiled bucket executable."""
+    _solve_stacked.clear_cache()
+    probs = [_grid_problem(20, 20, 41)]
+    base = GWConfig(eps=5e-2, outer_iters=8, sinkhorn_iters=60, tol=1e-5,
+                    sinkhorn_backend="pallas")
+    entropic_gw_batch(probs, base)
+    n0 = _solve_stacked._cache_size()
+    for cfg in [dataclasses.replace(base, tol=1e-7),
+                dataclasses.replace(base, eps=1e-2),
+                dataclasses.replace(base, eps_init=0.1, anneal_decay=0.7),
+                dataclasses.replace(base, eps_init=0.2, anneal_decay=0.4)]:
+        entropic_gw_batch(probs, cfg)
+    assert _solve_stacked._cache_size() == n0
+    # flipping the backend is structural: exactly one new executable
+    entropic_gw_batch(probs,
+                      dataclasses.replace(base, sinkhorn_backend="xla"))
+    assert _solve_stacked._cache_size() == n0 + 1
+
+
+# ---------------------------------------------------------------------------
+# serving: the continuous-batching scheduler on fused sweeps
+# ---------------------------------------------------------------------------
+
+def test_serving_continuous_equals_barrier_on_pallas():
+    """The engine's strongest invariance — continuous slot scheduling
+    returns bit-identical results to the flush-barrier baseline — must hold
+    with the kernels doing every inner sweep; vs the unbatched solver the
+    lanes match at ulp level with EXACT iteration counts."""
+    solver = GWConfig(eps=1e-2, outer_iters=10, sinkhorn_iters=60, tol=1e-6,
+                      sinkhorn_backend="pallas")
+    probs = [_grid_problem(s, s, 47 + i)
+             for i, s in enumerate((30, 40, 36, 25))]
+    outs = {}
+    for sched in ("continuous", "barrier"):
+        eng = GWEngine(GWServeConfig(solver=solver, max_batch=4,
+                                     size_bucket=64, scheduler=sched,
+                                     segment_iters=3))
+        rids = [eng.submit(*p) for p in probs]
+        res = eng.flush()
+        assert sorted(res) == sorted(rids)
+        outs[sched] = [res[r] for r in rids]
+    for c, b in zip(outs["continuous"], outs["barrier"]):
+        _assert_trees_equal((c.plan, c.f, c.g), (b.plan, b.f, b.g))
+        assert int(c.info.inner_iters) == int(b.info.inner_iters)
+    for c, p in zip(outs["continuous"], probs):
+        one = entropic_gw(*p, solver)
+        assert int(c.info.outer_iters) == int(one.info.outer_iters)
+        assert int(c.info.inner_iters) == int(one.info.inner_iters)
+        np.testing.assert_allclose(np.asarray(c.plan), np.asarray(one.plan),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_serve_config_backend_override():
+    """`GWServeConfig.sinkhorn_backend` overrides the solver cfg at flush
+    resolution — and only then (None keeps the solver's own knob)."""
+    solver = GWConfig(sinkhorn_backend="xla")
+    assert GWServeConfig(solver=solver).solver_cfg().sinkhorn_backend == "xla"
+    assert (GWServeConfig(solver=solver, sinkhorn_backend="pallas")
+            .solver_cfg().sinkhorn_backend == "pallas")
+    # the default solver cfg advertises auto-resolution
+    assert GWConfig().sinkhorn_backend == "auto"
+
+
+def test_kernel_cache_bounded_across_serving_stream():
+    """A mixed-ε serving stream through the pallas backend compiles each
+    kernel once per (shape, batch-width) — ε and tolerances ride as traced
+    operands (the kernel-level twin of the engine's bounded-jit-cache
+    guarantee)."""
+    row = sinkhorn_step.sinkhorn_row_update_pallas
+    col = sinkhorn_step.sinkhorn_col_update_pallas
+    row.clear_cache()
+    col.clear_cache()
+    solver = GWConfig(eps=1e-2, outer_iters=6, sinkhorn_iters=40, tol=1e-5,
+                      sinkhorn_backend="pallas")
+    eng = GWEngine(GWServeConfig(solver=solver, max_batch=4, size_bucket=32,
+                                 segment_iters=3))
+    for i, (s, eps) in enumerate([(20, 1e-2), (25, 5e-2), (30, 2e-2),
+                                  (28, 1e-2)]):
+        eng.submit(*_grid_problem(s, s, 61 + i), eps=eps)
+    res = eng.flush()
+    assert len(res) == 4
+    # one padded shape bucket (32×32) × ≤ log2(4)+1 batch widths
+    assert row._cache_size() <= 3
+    assert col._cache_size() <= 3
