@@ -1,0 +1,138 @@
+"""Full-plan vs factored-plan GW: where does O(N(r+d)) beat O(MN)?
+
+Run:  PYTHONPATH=src python benchmarks/lowrank_bench.py [--out BENCH_lowrank.json]
+      (--smoke: tiny sizes so CI merely executes both representations)
+
+Setup: squared-Euclidean point clouds, BOTH plans given the identical
+factored cost (`PointCloudGeometry.to_low_rank()`, exact rank d+2) so the
+plan representation is the ONLY axis — the full path still builds (M,N)
+gradients and runs (M,N) Sinkhorn; the factored path never materializes an
+(M,N) array.  Iteration counts are matched exactly (fixed mode, same outer
+and inner caps), so wall-clock compares the same number of mirror steps.
+
+Each case runs in a SUBPROCESS (``--case plan:n``) so peak memory is a real
+per-case ``ru_maxrss``, not an accumulation across cases, and so the
+100k-point full-plan case can be declared impossible (an (M,N) f64 plan
+alone is ~80 GB) without trying to allocate it.
+
+Emits BENCH_lowrank.json with per-case wall-clock + peak RSS and the
+acceptance flags: the factored plan must win BOTH wall-clock and peak
+memory at N ≥ 10k (crossover: at 1k the dense path's fused (M,N) kernels
+are fine; the factored path's win is asymptotic, not universal).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+
+FULL_SIZES = [1_000, 10_000]        # both plans, matched iterations
+LR_ONLY_SIZES = [100_000]           # factored only: dense plan cannot fit
+SMOKE_SIZES = [256, 1_024]
+OUTER, INNER, CHUNK, RANK = 2, 10, 5, 8
+
+
+def _run_case(plan: str, n: int) -> dict:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import GWConfig, entropic_gw
+    from repro.core.geometry import PointCloudGeometry
+
+    r = np.random.default_rng(0)
+    gx = PointCloudGeometry(jnp.asarray(r.normal(size=(n, 3)))).to_low_rank()
+    gy = PointCloudGeometry(jnp.asarray(r.normal(size=(n, 3)))).to_low_rank()
+    mu = jnp.ones(n) / n
+    nu = jnp.ones(n) / n
+    cfg = GWConfig(eps=5e-2, outer_iters=OUTER, sinkhorn_iters=INNER,
+                   sinkhorn_chunk=CHUNK, plan=plan, plan_rank=RANK)
+
+    fn = jax.jit(lambda mu, nu: entropic_gw(gx, gy, mu, nu, cfg))
+    res = fn(mu, nu)                      # compile + first run
+    jax.block_until_ready(res.value)
+    t0 = time.perf_counter()
+    res = fn(mu, nu)
+    jax.block_until_ready(res.value)
+    wall = time.perf_counter() - t0
+    return {
+        "plan": plan, "n": n, "wall_s": wall,
+        "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        / 1024.0,
+        "value": float(res.value),
+        "marginal_err": float(res.marginal_err),
+    }
+
+
+def _spawn_case(plan: str, n: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, __file__, "--case", f"{plan}:{n}"],
+        capture_output=True, text=True, check=True, cwd=_REPO, env=env)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_lowrank.json")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--case", default=None, help="internal: run one case "
+                    "in-process and print its JSON (plan:n)")
+    args = ap.parse_args()
+
+    if args.case:
+        plan, n = args.case.split(":")
+        print(json.dumps(_run_case(plan, int(n))))
+        return
+
+    sizes = SMOKE_SIZES if args.smoke else FULL_SIZES
+    cases = []
+    for n in sizes:
+        for plan in ("full", "lowrank"):
+            print(f"[lowrank_bench] {plan:8s} n={n} ...", flush=True)
+            cases.append(_spawn_case(plan, n))
+            print(f"    {cases[-1]['wall_s']:.3f}s "
+                  f"{cases[-1]['peak_rss_mb']:.0f} MB", flush=True)
+    if not args.smoke:
+        for n in LR_ONLY_SIZES:
+            cases.append({"plan": "full", "n": n, "skipped":
+                          "dense (M,N) f64 plan alone is ~80 GB at N=100k"})
+            print(f"[lowrank_bench] lowrank  n={n} ...", flush=True)
+            cases.append(_spawn_case("lowrank", n))
+            print(f"    {cases[-1]['wall_s']:.3f}s "
+                  f"{cases[-1]['peak_rss_mb']:.0f} MB", flush=True)
+
+    def _pick(plan, n):
+        for c in cases:
+            if c["plan"] == plan and c["n"] == n and "wall_s" in c:
+                return c
+        return None
+
+    crossover_n = max(sizes)
+    f, l = _pick("full", crossover_n), _pick("lowrank", crossover_n)
+    acceptance = {
+        "crossover_n": crossover_n,
+        "lowrank_wins_wall": bool(f and l and l["wall_s"] < f["wall_s"]),
+        "lowrank_wins_mem": bool(
+            f and l and l["peak_rss_mb"] < f["peak_rss_mb"]),
+    }
+    report = {"mode": "smoke" if args.smoke else "full",
+              "iters": {"outer": OUTER, "sinkhorn": INNER, "rank": RANK},
+              "cases": cases, "acceptance": acceptance}
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(json.dumps(acceptance, indent=2))
+
+
+if __name__ == "__main__":
+    main()

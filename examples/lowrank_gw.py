@@ -1,0 +1,71 @@
+"""Factored-plan GW at scales where the dense plan cannot exist.
+
+Solves entropic GW between two 50k-point clouds with ``plan="lowrank"``:
+the coupling is carried as P = Q diag(1/g) Rᵀ with (N,r) factors, the cost
+matrices as exact rank-(d+2) factorizations, so no step ever materializes
+an (M,N) array.  Then shows the serving engine routing a mixed stream —
+small requests to the dense path, large ones to the factored path — through
+the same continuous-batching stack.
+
+Run:  PYTHONPATH=src python examples/lowrank_gw.py
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GWConfig, PointCloudGeometry, entropic_gw
+from repro.serve.engine import GWEngine, GWServeConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # --- 50k points, direct solve, factored everything ------------------
+    n = 50_000
+    gx = PointCloudGeometry(jnp.asarray(rng.normal(size=(n, 3))))
+    gy = PointCloudGeometry(jnp.asarray(rng.normal(size=(n, 3))))
+    mu = jnp.ones(n) / n
+    nu = jnp.ones(n) / n
+    cfg = GWConfig(eps=5e-2, outer_iters=40, sinkhorn_iters=50, tol=1e-6,
+                   eps_init=0.5, anneal_decay=0.7,
+                   plan="lowrank", plan_rank=16)
+    t0 = time.perf_counter()
+    res = entropic_gw(gx.to_low_rank(), gy.to_low_rank(), mu, nu, cfg)
+    jax.block_until_ready(res.value)
+    print(f"N={n:,} factored-plan GW: value={float(res.value):.6f}  "
+          f"marginal_err={float(res.marginal_err):.2e}  "
+          f"iters={int(res.info.outer_iters)}  "
+          f"({time.perf_counter() - t0:.1f}s, no (M,N) array built)")
+    q, r, g = res.coupling.q, res.coupling.r, res.coupling.g
+    print(f"coupling factors: Q{tuple(q.shape)} R{tuple(r.shape)} "
+          f"g{tuple(g.shape)} — {q.size + r.size + g.size:,} floats "
+          f"vs {n * n:,} for the dense plan\n")
+
+    # --- mixed stream through the engine --------------------------------
+    # requests below the threshold run dense; at/above it they are
+    # auto-upgraded to the factored plan inside the same bucket loop.
+    eng = GWEngine(GWServeConfig(
+        solver=GWConfig(eps=5e-2, outer_iters=30, sinkhorn_iters=60,
+                        tol=1e-6, plan_rank=8),
+        max_batch=4, lowrank_above=512))
+    labels = {}
+    for m in [96, 128, 2_000, 96, 4_000]:
+        pts = rng.normal(size=(m, 2))
+        g2 = PointCloudGeometry(jnp.asarray(pts))
+        w = jnp.ones(m) / m
+        labels[eng.submit(g2, g2, w, w)] = f"n={m}"
+    print("engine routing (lowrank_above=512):")
+    for rid, out in sorted(eng.flush().items()):
+        kind = "factored" if out.plan is None else "dense"
+        print(f"  request {rid} ({labels[rid]:7s}) -> {kind:8s} "
+              f"value={float(out.value):.6f}  "
+              f"merr={float(out.marginal_err):.2e}")
+
+
+if __name__ == "__main__":
+    main()

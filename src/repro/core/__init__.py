@@ -8,8 +8,13 @@ Public API:
                    LowRankGeometry (O(N·r) factored costs),
                    PointCloudGeometry (dense fallback + to_low_rank),
                    DenseGeometry (explicit matrices)
+  coupling       — the Coupling plan-representation layer: FullCoupling
+                   (dense plan + log potentials) and LowRankCoupling
+                   (Q, R, g factors; P = Q diag(1/g) Rᵀ never materialized)
   gradient       — GradientOperator: the gradient pieces shared by all
-                   solvers, dispatched through the Geometry interface
+                   solvers, dispatched through the Geometry interface;
+                   LowRankGradientOperator: the same pieces on factored
+                   plans in O((M+N)·r·c) with no (M, N) array
   solver         — the convergence-controlled mirror-descent driver
                    (SolveControls, ConvergenceInfo, mirror_descent) behind
                    every solver: tol-based early stopping, ε-annealing,
@@ -22,14 +27,16 @@ Public API:
   losses         — FGW sequence/patch alignment losses for LM training
 """
 from repro.core import (fgc, geometry, gradient, grids, sinkhorn, solver, gw,
-                        fgw, ugw, barycenter, losses, coot)
+                        fgw, ugw, barycenter, losses, coot, coupling)
 from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
                                info_of, init_carry, mirror_descent,
                                mirror_descent_segment, resolve_controls)
+from repro.core.coupling import (Coupling, FullCoupling, LowRankCoupling,
+                                 coupling_delta, full_init, lowrank_init)
 from repro.core.geometry import (DenseGeometry, Geometry, GridGeometry,
                                  LowRankGeometry, PointCloudGeometry,
                                  as_geometry)
-from repro.core.gradient import GradientOperator
+from repro.core.gradient import GradientOperator, LowRankGradientOperator
 from repro.core.grids import Grid1D, Grid2D, gw_product, gw_product_dense
 from repro.core.gw import (GWConfig, GWResult, entropic_gw,
                            entropic_gw_batch, gw_energy, gw_plan_segment,
@@ -41,7 +48,10 @@ from repro.core.losses import AlignConfig, fgw_alignment_loss
 
 __all__ = [
     "fgc", "geometry", "gradient", "grids", "sinkhorn", "solver", "gw",
-    "fgw", "ugw", "barycenter", "losses", "GradientOperator",
+    "fgw", "ugw", "barycenter", "losses", "coupling", "GradientOperator",
+    "LowRankGradientOperator",
+    "Coupling", "FullCoupling", "LowRankCoupling", "coupling_delta",
+    "full_init", "lowrank_init",
     "ConvergenceInfo", "MirrorCarry", "SolveControls", "info_of",
     "init_carry", "mirror_descent", "mirror_descent_segment",
     "resolve_controls",

@@ -24,6 +24,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.coupling import full_init
 from repro.core.geometry import DenseGeometry, as_geometry
 from repro.core.gradient import GradientOperator
 from repro.core.gw import GWConfig, gw_plan_solve
@@ -80,8 +81,7 @@ def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],
     # away from the fixed point (and the convergence gate waits for the
     # ramp, which may never finish inside gw_iters)
     warm_cfg = dataclasses.replace(gw_cfg, eps_init=None)
-    states = [(mu_bar[:, None] * nu[None, :], jnp.zeros_like(mu_bar),
-               jnp.zeros_like(nu)) for nu in measures]
+    states = [full_init(mu_bar, nu) for nu in measures]
 
     for sweep in range(cfg.outer_iters):
         solve_cfg = gw_cfg if sweep == 0 else warm_cfg
@@ -90,13 +90,13 @@ def gw_barycenter(grids: Sequence, measures: Sequence[jax.Array],
         for (geom_s, nu_s, lam_s, state) in zip(geoms, measures, lam, states):
             op = GradientOperator(DenseGeometry(dbar), geom_s, cfg.backend)
             c1, _, _ = op.constant_term(mu_bar, nu_s)
-            (gamma, f, g), _ = gw_plan_solve(op, c1, mu_bar, nu_s, solve_cfg,
-                                             state0=state)
-            new_states.append((gamma, f, g))
+            coup, _ = gw_plan_solve(op, c1, mu_bar, nu_s, solve_cfg,
+                                    state0=state)
+            new_states.append(coup)
             # Γ_s D_s via the structured apply, then dense Γ_s D_s Γ_sᵀ
-            gds = geom_s.apply_dist(gamma, axis=1)
-            acc = acc + lam_s * (gds @ gamma.T)
+            gds = geom_s.apply_dist(coup.plan, axis=1)
+            acc = acc + lam_s * (gds @ coup.plan.T)
         dbar = acc / (mu_bar[:, None] * mu_bar[None, :])
         states = new_states
 
-    return dbar, [s[0] for s in states]
+    return dbar, [s.plan for s in states]

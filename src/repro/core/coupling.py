@@ -1,0 +1,189 @@
+"""Plan representations: the `Coupling` interface behind every GW solve.
+
+The mirror-descent driver (repro.core.solver) is representation-agnostic —
+it advances an opaque solver-state pytree and measures its movement.  What
+that state IS differs by plan representation:
+
+``FullCoupling``     the classic dense plan Γ (M,N) plus the log-domain
+                     Sinkhorn potentials (f, g) warm-started across outer
+                     steps — the paper's setting, O(MN) memory per problem.
+``LowRankCoupling``  the factored plan of Scetbon–Peyré–Cuturi (2021,
+                     *Linear-Time Gromov-Wasserstein Distances using Low
+                     Rank Couplings and Costs*):
+
+                         P = Q diag(1/g) Rᵀ,   Q ∈ Π(μ, g), R ∈ Π(ν, g),
+                         g ∈ Δ_r (g ≥ some floor > 0),
+
+                     i.e. (M,r) + (N,r) + (r,) factors — O((M+N)r) memory.
+                     Combined with factored costs (`LowRankGeometry`,
+                     `PointCloudGeometry.to_low_rank()`) no (M,N) array
+                     exists anywhere in the solve.
+
+Both are pytrees, so they stack leaf-wise for the batched/serving paths
+exactly like measures and geometries do: `entropic_gw_batch` pads each
+lane's factors to the bucket size (padded atoms carry zero mass and zero
+factor rows — exact, like the full path's −inf potentials) and vmaps over
+the stacked coupling.  ``slice_to`` is the inverse — a lane's result sliced
+back to its true problem size.
+
+``coupling_delta`` is the driver's movement metric (`delta_fn`): the L1
+plan change for full plans, and the summed L1 factor change for low-rank
+plans (the plan itself is never materialized, so its exact L1 movement is
+not available in O((M+N)r); the factor movement is the standard surrogate —
+zero iff the iterate is stationary).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class Coupling:
+    """Interface: what the solver stack needs from a plan representation."""
+
+    def delta(self, other: "Coupling"):
+        """L1-style movement between two iterates (driver's delta_fn)."""
+        raise NotImplementedError
+
+    def slice_to(self, m: int, n: int) -> "Coupling":
+        """This coupling restricted to the first (m, n) support points —
+        the inverse of zero-mass bucket padding."""
+        raise NotImplementedError
+
+    def dense(self):
+        """The explicit (M,N) plan.  O(MN) — small-problem diagnostics and
+        cross-representation tests only; never called by the solvers."""
+        raise NotImplementedError
+
+    def marginals(self):
+        """(P 1_N, Pᵀ 1_M) without materializing P."""
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FullCoupling(Coupling):
+    """Dense plan + warm-started log-domain Sinkhorn potentials."""
+
+    plan: jax.Array          # (M, N)
+    f: jax.Array             # (M,) row potential (−inf on zero-mass atoms)
+    g: jax.Array             # (N,) column potential
+
+    def delta(self, other: "FullCoupling"):
+        return jnp.abs(self.plan - other.plan).sum()
+
+    def slice_to(self, m: int, n: int) -> "FullCoupling":
+        return FullCoupling(self.plan[:m, :n], self.f[:m], self.g[:n])
+
+    def dense(self):
+        return self.plan
+
+    def marginals(self):
+        return self.plan.sum(axis=1), self.plan.sum(axis=0)
+
+    def tree_flatten(self):
+        return (self.plan, self.f, self.g), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LowRankCoupling(Coupling):
+    """Factored plan P = Q diag(1/g) Rᵀ (Scetbon et al. 2021).
+
+    ``q``: (M, r) with Q 1_r = μ, Qᵀ 1_M = g;  ``r``: (N, r) with
+    R 1_r = ν, Rᵀ 1_N = g;  ``g``: (r,) inner weights, kept ≥ the solver's
+    floor.  Zero-mass (padding) atoms have exactly-zero factor rows.
+    """
+
+    q: jax.Array
+    r: jax.Array
+    g: jax.Array
+
+    @property
+    def rank(self) -> int:
+        return self.g.shape[-1]
+
+    def delta(self, other: "LowRankCoupling"):
+        return (jnp.abs(self.q - other.q).sum()
+                + jnp.abs(self.r - other.r).sum()
+                + jnp.abs(self.g - other.g).sum())
+
+    def slice_to(self, m: int, n: int) -> "LowRankCoupling":
+        return LowRankCoupling(self.q[:m], self.r[:n], self.g)
+
+    def dense(self):
+        return (self.q / self.g[None, :]) @ self.r.T
+
+    def marginals(self):
+        iq = 1.0 / self.g
+        row = self.q @ (iq * self.r.sum(axis=0))
+        col = self.r @ (iq * self.q.sum(axis=0))
+        return row, col
+
+    def tree_flatten(self):
+        return (self.q, self.r, self.g), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def coupling_delta(new: Coupling, old: Coupling):
+    """The driver's delta_fn for coupling-valued solver states."""
+    return new.delta(old)
+
+
+def full_init(mu, nu, gamma0=None, f0=None, g0=None) -> FullCoupling:
+    """Cold start for the dense representation: product-coupling plan,
+    zero-mass-aware potentials."""
+    from repro.core import sinkhorn as sk
+    f, g = sk.zero_mass_potentials(mu, nu)
+    return FullCoupling(mu[:, None] * nu[None, :] if gamma0 is None
+                        else gamma0,
+                        f if f0 is None else f0, g if g0 is None else g0)
+
+
+def _rank2_factor(w, rank: int, lam):
+    """One side of the deterministic rank-2-style init (the LOT/ott
+    ``init="rank2"`` construction, made zero-mass aware): a coupling
+    between ``w`` and the uniform inner measure g0 = 1/r built from two
+    outer products,
+
+        F = λ·a₁ ĝᵀ + (w − λ·a₁)(g₀ − λ·ĝ)ᵀ / (1 − λ),
+
+    with a₁ ∝ arange·(w>0) (normalized) and ĝ ∝ arange (normalized).  By
+    construction F 1_r = w and Fᵀ 1 = g₀ exactly, every entry is ≥ 0 for
+    λ ≤ min(min₊ w, 1/r)/2, and zero-mass rows are exactly 0 — padding a
+    problem adds all-zero factor rows and changes nothing else.
+    """
+    n = w.shape[0]
+    ft = w.dtype
+    a1 = jnp.arange(1, n + 1, dtype=ft) * (w > 0)
+    a1 = a1 / a1.sum()
+    g1 = jnp.arange(1, rank + 1, dtype=ft)
+    g1 = g1 / g1.sum()
+    g0 = jnp.full((rank,), 1.0 / rank, ft)
+    return (lam * a1[:, None] * g1[None, :]
+            + (w - lam * a1)[:, None] * (g0 - lam * g1)[None, :] / (1.0 - lam))
+
+
+def lowrank_init(mu, nu, rank: int) -> LowRankCoupling:
+    """Deterministic feasible cold start: Q ∈ Π(μ, g₀), R ∈ Π(ν, g₀) with
+    uniform inner weights g₀ = 1/r — strictly positive on every
+    mass-carrying atom (mirror steps multiply log-factors, so a zero inside
+    the support would be absorbing) and exactly zero on zero-mass atoms."""
+    ft = mu.dtype
+    inf = jnp.asarray(jnp.inf, ft)
+    min_mu = jnp.min(jnp.where(mu > 0, mu, inf))
+    min_nu = jnp.min(jnp.where(nu > 0, nu, inf))
+    lam = jnp.minimum(jnp.minimum(min_mu, min_nu),
+                      jnp.asarray(1.0 / rank, ft)) / 2.0
+    return LowRankCoupling(_rank2_factor(mu, rank, lam),
+                           _rank2_factor(nu, rank, lam),
+                           jnp.full((rank,), 1.0 / rank, ft))

@@ -16,9 +16,12 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.gradient import GeometryLike, GradientOperator
-from repro.core.gw import GWConfig, GWResult
-from repro.core.solver import (SolveControls, mirror_descent, plan_delta,
+from repro.core.coupling import (FullCoupling, coupling_delta, full_init,
+                                 lowrank_init)
+from repro.core.gradient import (GeometryLike, GradientOperator,
+                                 LowRankGradientOperator)
+from repro.core.gw import GWConfig, GWResult, _result_of
+from repro.core.solver import (SolveControls, mirror_descent,
                                resolve_controls)
 
 
@@ -41,28 +44,72 @@ def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
                  controls: SolveControls | None = None) -> GWResult:
     """``feature_cost``: (M,N) linear-term cost matrix C (paper's c_ip).
     ``grid_x``/``grid_y``: Grids or any Geometry (grid/low-rank/point-cloud/
-    dense) — see repro.core.geometry."""
+    dense) — see repro.core.geometry.
+
+    ``cfg.plan="lowrank"`` runs the factored-plan mirror descent.  The
+    feature cost is a user-supplied dense (M,N) input, so FGW cannot be
+    fully (M,N)-free: its square is built ONCE per solve and each step pays
+    one O(MNr) product against the factors — but the PLAN and all solver
+    state stay factored (no new per-iteration (M,N) arrays)."""
     ctl, unroll = resolve_controls(cfg, controls)
-    op = GradientOperator(grid_x, grid_y, cfg.backend)
     theta = cfg.theta
+    if cfg.plan == "lowrank":
+        if gamma0 is not None:
+            raise ValueError("gamma0 is a dense-plan warm start; "
+                             "unavailable under plan='lowrank'")
+        return _entropic_fgw_lowrank(grid_x, grid_y, feature_cost, mu, nu,
+                                     cfg, ctl)
+    op = GradientOperator(grid_x, grid_y, cfg.backend)
     c1, _, _ = op.constant_term(mu, nu)
     c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
-    f, g = sk.zero_mass_potentials(mu, nu)
-    gamma = mu[:, None] * nu[None, :] if gamma0 is None else gamma0
+    state0 = full_init(mu, nu, gamma0)
 
     def step(state, eps, inner_tol):
-        gamma, f, g = state
-        grad = c2 - 4.0 * theta * op.product(gamma)
+        grad = c2 - 4.0 * theta * op.product(state.plan)
         gamma, f, g, err, used = sk.solve_adaptive(
             grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.sinkhorn_mode, f, g, unroll=unroll,
+            inner_tol, cfg.sinkhorn_mode, state.f, state.g, unroll=unroll,
             backend=cfg.sinkhorn_backend)
-        return (gamma, f, g), err, used
+        return FullCoupling(gamma, f, g), err, used
 
-    (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,
-                                         ctl, cfg.outer_iters,
-                                         unroll=unroll)
-    value = fgw_energy(grid_x, grid_y, feature_cost, gamma, theta,
+    coup, info = mirror_descent(step, state0, coupling_delta, ctl,
+                                cfg.outer_iters, unroll=unroll)
+    value = fgw_energy(grid_x, grid_y, feature_cost, coup.plan, theta,
                        cfg.backend)
-    return GWResult(plan=gamma, value=value, marginal_err=info.marginal_err,
-                    f=f, g=g, errs=info.err_trace, info=info)
+    return _result_of(coup, value, info.marginal_err, info.err_trace, info)
+
+
+def _entropic_fgw_lowrank(grid_x, grid_y, feature_cost, mu, nu,
+                          cfg: FGWConfig, ctl: SolveControls) -> GWResult:
+    """Factored-plan FGW: the GW gradients from `LowRankGradientOperator`
+    plus the linear feature term differentiated through P = Q diag(1/g) Rᵀ:
+
+        ∂⟨C², P⟩/∂Q = C² R diag(1/g),  ∂/∂R = C²ᵀ Q diag(1/g),
+        ∂/∂g = −(1/g²) ⊙ diag(Qᵀ C² R).
+    """
+    theta = cfg.theta
+    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank)
+    dx2, dy2 = op.constant_term(mu, nu)
+    fsq = feature_cost ** 2      # the ONE per-solve (M,N) build
+
+    def step(state, eps, inner_tol):
+        gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
+        iq = 1.0 / jnp.maximum(state.g, cfg.g_floor)
+        fr = fsq @ state.r       # (M, r)
+        fq = fsq.T @ state.q     # (N, r)
+        lin_diag = jnp.sum(state.q * fr, axis=0)        # diag(Qᵀ C² R)
+        gq = theta * gq + (1.0 - theta) * fr * iq[None, :]
+        gr = theta * gr + (1.0 - theta) * fq * iq[None, :]
+        gg = theta * gg - (1.0 - theta) * (iq ** 2) * lin_diag
+        q, r, g, err, used = sk.lr_mirror_step(
+            state.q, state.r, state.g, gq, gr, gg, mu, nu, eps,
+            ctl.lr_gamma, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            inner_tol, cfg.g_floor)
+        return type(state)(q, r, g), err, used
+
+    coup, info = mirror_descent(step, lowrank_init(mu, nu, cfg.plan_rank),
+                                coupling_delta, ctl, cfg.outer_iters)
+    iq = 1.0 / jnp.maximum(coup.g, cfg.g_floor)
+    lin = jnp.sum(coup.q * (fsq @ coup.r), axis=0) @ iq
+    value = (1.0 - theta) * lin + theta * op.energy(coup, cfg.g_floor)
+    return _result_of(coup, value, info.marginal_err, info.err_trace, info)

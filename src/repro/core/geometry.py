@@ -127,13 +127,36 @@ class Geometry:
         zero mass downstream, which log-domain Sinkhorn treats exactly."""
         raise NotImplementedError
 
+    def for_factored_plan(self, cost_rank: int | None = None) -> "Geometry":
+        """The geometry the factored-plan (low-rank coupling) path should
+        hold: one whose ``apply_dist`` is cheap on (N, r) factor batches
+        with no dense (N, N) materialization inside the iteration loop.
+        Grids (FGC applies), low-rank factors, and explicit dense matrices
+        already are that — they return themselves; point clouds convert to
+        their factored cost (see `PointCloudGeometry.for_factored_plan`).
+        ``cost_rank`` is the explicit factorization rank knob (None keeps
+        exact factorizations exact)."""
+        return self
+
+
+#: FGC apply implementations a raw Grid may be adapted with ("dense" is the
+#: explicit-matrix oracle).  Validated at adaptation time — an unknown
+#: string would otherwise surface as a KeyError deep inside the first
+#: jitted apply, far from the config that caused it.
+GRID_BACKENDS = ("scan", "cumsum", "blocked", "pallas", "dense")
+
 
 def as_geometry(obj, backend: str = "cumsum") -> Geometry:
     """Adapter: Grid1D/Grid2D become GridGeometry (with the given FGC
-    backend); Geometry instances pass through unchanged."""
+    backend); Geometry instances pass through unchanged (their own dispatch
+    ignores ``backend``)."""
     if isinstance(obj, Geometry):
         return obj
     if isinstance(obj, (Grid1D, Grid2D)):
+        if backend not in GRID_BACKENDS:
+            raise ValueError(
+                f"unknown grid backend {backend!r}: expected one of "
+                f"{GRID_BACKENDS}")
         return GridGeometry(obj, backend)
     raise TypeError(f"cannot interpret {type(obj).__name__} as a Geometry")
 
@@ -252,10 +275,15 @@ class LowRankGeometry(Geometry):
     def apply_dist(self, x, axis: int = 0, power_mult: int = 1):
         if power_mult == 0:
             return _ones_apply(x, axis % x.ndim)
-        ap = _khatri_rao_power(self.a, power_mult).astype(x.dtype)
-        bp = _khatri_rao_power(self.b, power_mult).astype(x.dtype)
+        # promote instead of casting the factors to x.dtype: f64 factors
+        # under an f32 operand must not silently downcast the factor
+        # products (the PR-2 x64-context convention — precision follows the
+        # widest participant, never the narrowest)
+        dt = jnp.promote_types(self.a.dtype, x.dtype)
+        ap = _khatri_rao_power(self.a, power_mult).astype(dt)
+        bp = _khatri_rao_power(self.b, power_mult).astype(dt)
         axis = axis % x.ndim
-        x2 = jnp.moveaxis(x, axis, 0)
+        x2 = jnp.moveaxis(x, axis, 0).astype(dt)
         y2 = jnp.tensordot(ap, jnp.tensordot(bp.T, x2, axes=1), axes=1)
         return jnp.moveaxis(y2, 0, axis)
 
@@ -337,13 +365,25 @@ class PointCloudGeometry(Geometry):
         return PointCloudGeometry(
             jnp.pad(self.points, ((0, n - self.size), (0, 0))), self.metric)
 
+    def for_factored_plan(self, cost_rank: int | None = None):
+        """Factored-plan solves must NOT `materialize()` a point cloud (the
+        dense (N, N) gram matrix is exactly what the low-rank path exists
+        to avoid): convert to the factored cost instead.  ``cost_rank``
+        is the explicit rank knob — None keeps the exact rank-(d+2)
+        squared-Euclidean factorization; the euclidean metric has no exact
+        factorization and requires an explicit rank (SVD fallback, which
+        does build the dense matrix ONCE at conversion time)."""
+        return self.to_low_rank(cost_rank)
+
     def to_low_rank(self, r: int | None = None) -> LowRankGeometry:
         """Factor D ≈ A Bᵀ.  Squared Euclidean with ``r=None`` uses the
         exact rank-(d+2) identity
             ‖x_i−x_j‖² = [‖x_i‖², 1, −2x_i] · [1, ‖x_j‖², x_j]ᵀ;
         otherwise a truncated SVD of the dense matrix (rank r required)."""
         if self.metric == "sqeuclidean" and r is None:
-            pts = self.points
+            # center first: ‖x−y‖² is translation-invariant, and small ‖x‖²
+            # minimizes the f32 cancellation in sq_i + sq_j − 2⟨x_i, x_j⟩
+            pts = self.points - jnp.mean(self.points, axis=0, keepdims=True)
             sq = jnp.sum(pts ** 2, axis=1, keepdims=True)
             one = jnp.ones_like(sq)
             a = jnp.concatenate([sq, one, -2.0 * pts], axis=1)
@@ -351,10 +391,15 @@ class PointCloudGeometry(Geometry):
             return LowRankGeometry(a, b)
         if r is None:
             raise ValueError("euclidean to_low_rank requires an explicit r")
+        # compute the SVD at the widest available precision, then round the
+        # factors to the points' own dtype: f32 clouds keep f32 factors
+        # (storage/apply dtype never silently promotes) but the
+        # factorization error stays at rounding level, not f32-SVD level
         u, s, vt = jnp.linalg.svd(self.dist_matrix(), full_matrices=False)
         root = jnp.sqrt(s[:r])
-        return LowRankGeometry(u[:, :r] * root[None, :],
-                               vt[:r].T * root[None, :])
+        return LowRankGeometry(
+            (u[:, :r] * root[None, :]).astype(self.points.dtype),
+            (vt[:r].T * root[None, :]).astype(self.points.dtype))
 
     def tree_flatten(self):
         return (self.points,), (self.metric,)

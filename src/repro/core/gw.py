@@ -19,6 +19,16 @@ matrices; raw Grid1D/Grid2D arguments are adapted with ``cfg.backend``.  All
 gradient pieces come from `repro.core.gradient.GradientOperator` (shared
 with fgw/ugw/coot).
 
+The solver state is a `repro.core.coupling.Coupling` — the plan
+REPRESENTATION is a config axis (``cfg.plan``): "full" carries the dense
+(M,N) plan + Sinkhorn potentials (the paper's setting); "lowrank" carries
+the factored plan P = Q diag(1/g) Rᵀ of Scetbon et al. (2021) and runs the
+whole mirror descent in O((M+N)·(r+cost_rank)) per step — point clouds are
+converted to their factored costs (`Geometry.for_factored_plan`) and no
+(M,N) array exists anywhere in the solve, which is what admits 10⁵–10⁶
+point problems.  Both representations ride the same driver, the same
+batched/padded/segmented surfaces below, and the same serving scheduler.
+
 `entropic_gw_batch` solves MANY problems in one vmapped program: every
 geometry is padded to a common bucket size with zero-mass support points
 (exact under log-domain Sinkhorn — padded potentials pin to −inf, the plan
@@ -51,12 +61,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
+from repro.core.coupling import (Coupling, FullCoupling, LowRankCoupling,
+                                 coupling_delta, full_init, lowrank_init)
 from repro.core.geometry import Geometry, as_geometry
-from repro.core.gradient import GradientOperator
+from repro.core.gradient import GradientOperator, LowRankGradientOperator
 from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
                                info_of, init_carry, mirror_descent,
-                               mirror_descent_segment, plan_delta,
-                               resolve_controls)
+                               mirror_descent_segment, resolve_controls)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +89,23 @@ class GWConfig:
     sinkhorn_chunk: int = 25   # inner iterations between residual checks
     unroll: bool = False       # scan-only path (reverse-mode differentiable)
     inner_loosen: float = 1.0  # inner-tol ε-scaling strength (0 → flat tol)
+    #: plan representation: "full" (dense (M,N) plan + Sinkhorn potentials)
+    #: or "lowrank" (factored P = Q diag(1/g) Rᵀ, Scetbon et al. 2021 —
+    #: O((M+N)r) state, no (M,N) array anywhere).  STRUCTURAL: part of the
+    #: jit cache key (survives `static_key`) — the two representations are
+    #: different programs, not different operand values.
+    plan: str = "full"
+    plan_rank: int = 16        # factored-plan rank r (structural)
+    #: explicit cost-factorization rank for `for_factored_plan` conversions
+    #: (None keeps exact factorizations — e.g. rank d+2 for sqeuclidean
+    #: point clouds; euclidean clouds REQUIRE it for the SVD fallback)
+    cost_rank: int | None = None
+    #: factored-plan mirror step size γ (value knob: rides in SolveControls,
+    #: canonicalized out of the cache key — retuning never recompiles)
+    lr_gamma: float = 30.0
+    #: floor on the low-rank inner weights g (Dykstra's inequality block).
+    #: Structural constant — baked into the executable like iteration caps.
+    g_floor: float = 1e-10
 
     def __post_init__(self):
         # unroll is the fixed-length differentiable path: it ignores tol by
@@ -87,35 +115,63 @@ class GWConfig:
             raise ValueError(
                 "unroll=True runs the fixed-length scan path and ignores "
                 "tol; set tol=0 (fixed mode) or unroll=False (adaptive)")
+        if self.plan not in ("full", "lowrank"):
+            raise ValueError(
+                f"unknown plan {self.plan!r}: expected 'full' or 'lowrank'")
+        if self.unroll and self.plan == "lowrank":
+            raise ValueError(
+                "unroll=True is the reverse-differentiable scan path; the "
+                "factored plan's Dykstra projection is a while_loop and "
+                "has no unrolled form — use plan='full' for unroll")
 
     def static_key(self) -> "GWConfig":
         """This cfg with the traced value-knobs canonicalized — the jit
-        cache key.  eps/tol/eps_init/anneal_decay reach the solver as
-        `SolveControls` operands instead, so retuning them reuses the
-        compiled executable."""
+        cache key.  eps/tol/eps_init/anneal_decay/lr_gamma reach the solver
+        as `SolveControls` operands instead, so retuning them reuses the
+        compiled executable.  ``plan``/``plan_rank``/``cost_rank``/
+        ``g_floor`` are structural and survive."""
         return dataclasses.replace(self, eps=0.0, tol=0.0, eps_init=None,
-                                   anneal_decay=0.0, inner_loosen=0.0)
+                                   anneal_decay=0.0, inner_loosen=0.0,
+                                   lr_gamma=0.0)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GWResult:
-    plan: jax.Array
+    #: dense plan Γ — None for factored-plan solves (use ``coupling``; its
+    #: ``.dense()`` materializes on demand for small-problem diagnostics)
+    plan: jax.Array | None
     value: jax.Array          # E(Γ): the (squared) GW discrepancy of the plan
     marginal_err: jax.Array
-    f: jax.Array
-    g: jax.Array
+    f: jax.Array | None
+    g: jax.Array | None
     #: per-outer-step marginal-error trace (outer_iters,), NaN past the stop
     errs: jax.Array | None = None
     info: ConvergenceInfo | None = None
+    #: the plan representation itself (FullCoupling mirrors plan/f/g;
+    #: LowRankCoupling carries the Q/R/g factors)
+    coupling: Coupling | None = None
 
     def tree_flatten(self):
         return (self.plan, self.value, self.marginal_err, self.f, self.g,
-                self.errs, self.info), None
+                self.errs, self.info, self.coupling), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+
+def _result_of(coupling: Coupling, value, marginal_err, errs,
+               info) -> GWResult:
+    """A GWResult from any plan representation.  Full couplings keep the
+    legacy plan/f/g fields populated (aliases of the coupling's leaves, not
+    copies); factored plans leave them None."""
+    dense = isinstance(coupling, FullCoupling)
+    return GWResult(plan=coupling.plan if dense else None, value=value,
+                    marginal_err=marginal_err,
+                    f=coupling.f if dense else None,
+                    g=coupling.g if dense else None,
+                    errs=errs, info=info, coupling=coupling)
 
 
 def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
@@ -127,53 +183,75 @@ def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
 
 def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
                unroll: bool = False):
-    """The GW mirror-descent step closure — the ONE step body behind the
-    one-shot solve, the batched solve, and the segmented (continuous
-    batching) solve, so all three walk identical iterates."""
+    """The full-plan GW mirror-descent step closure — the ONE step body
+    behind the one-shot solve, the batched solve, and the segmented
+    (continuous batching) solve, so all three walk identical iterates.
+    State: a `FullCoupling`."""
 
     def step(state, eps, inner_tol):
-        gamma, f, g = state
         gamma, f, g, err, used = sk.solve_adaptive(
-            op.grad(gamma, c1), mu, nu, eps, cfg.sinkhorn_iters,
-            cfg.sinkhorn_chunk, inner_tol, cfg.sinkhorn_mode, f, g,
-            unroll=unroll, backend=cfg.sinkhorn_backend)
-        return (gamma, f, g), err, used
+            op.grad(state.plan, c1), mu, nu, eps, cfg.sinkhorn_iters,
+            cfg.sinkhorn_chunk, inner_tol, cfg.sinkhorn_mode, state.f,
+            state.g, unroll=unroll, backend=cfg.sinkhorn_backend)
+        return FullCoupling(gamma, f, g), err, used
 
     return step
 
 
-def gw_init_state(mu, nu, gamma0=None):
-    """The standard cold start: product-coupling plan, zero-mass-aware
-    potentials."""
-    f, g = sk.zero_mass_potentials(mu, nu)
-    return (mu[:, None] * nu[None, :] if gamma0 is None else gamma0, f, g)
+def gw_lr_step_fn(op: LowRankGradientOperator, dx2, dy2, mu, nu,
+                  cfg: GWConfig, lr_gamma):
+    """The factored-plan step closure: one mirror step on (Q, R, g) — the
+    LR-GW gradients at the current factors, KL-prox kernels, and a Dykstra
+    projection back onto the coupling polytope (`sinkhorn.lr_mirror_step`).
+    The inner caps reuse ``sinkhorn_iters``/``sinkhorn_chunk`` (Dykstra
+    sweeps play the Sinkhorn iterations' role in `ConvergenceInfo`), and
+    the returned err is the plan's L1 row-marginal gap |P1 − μ|₁ — the same
+    residual the full path reports.  ``lr_gamma`` is the traced step size
+    (from `SolveControls`); ``eps`` arrives annealed from the driver, so
+    ε-schedules work identically across representations."""
+
+    def step(state, eps, inner_tol):
+        gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
+        q, r, g, err, used = sk.lr_mirror_step(
+            state.q, state.r, state.g, gq, gr, gg, mu, nu, eps, lr_gamma,
+            cfg.sinkhorn_iters, cfg.sinkhorn_chunk, inner_tol, cfg.g_floor)
+        return LowRankCoupling(q, r, g), err, used
+
+    return step
+
+
+def gw_init_state(mu, nu, gamma0=None, cfg: GWConfig | None = None):
+    """The standard cold start as a `Coupling`: product-coupling plan with
+    zero-mass-aware potentials (full), or the deterministic feasible
+    rank-r factor init (lowrank, when ``cfg.plan`` says so)."""
+    if cfg is not None and cfg.plan == "lowrank":
+        return lowrank_init(mu, nu, cfg.plan_rank)
+    return full_init(mu, nu, gamma0)
 
 
 def gw_plan_solve(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
                   controls: SolveControls | None = None, state0=None):
-    """Convergence-controlled GW mirror descent on a prepared operator.
-
-    The single plan-solve shared by `entropic_gw` and the barycenter's
-    inner solves.  ``state0``: optional (gamma, f, g) warm start.  Returns
-    ``((gamma, f, g), ConvergenceInfo)``.
-    """
+    """Convergence-controlled full-plan GW mirror descent on a prepared
+    operator — the plan-solve shared by `entropic_gw` and the barycenter's
+    inner solves.  ``state0``: optional `FullCoupling` warm start.  Returns
+    ``(FullCoupling, ConvergenceInfo)``."""
     ctl, unroll = resolve_controls(cfg, controls)
     if state0 is None:
-        state0 = gw_init_state(mu, nu)
+        state0 = full_init(mu, nu)
     step = gw_step_fn(op, c1, mu, nu, cfg, unroll=unroll)
-    return mirror_descent(step, state0, plan_delta, ctl, cfg.outer_iters,
-                          unroll=unroll)
+    return mirror_descent(step, state0, coupling_delta, ctl,
+                          cfg.outer_iters, unroll=unroll)
 
 
 def gw_plan_segment(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
                     controls: SolveControls, carry: MirrorCarry,
                     segment: int | None = None) -> MirrorCarry:
-    """Advance a GW plan solve by at most ``segment`` outer steps (see
+    """Advance a full-plan GW solve by at most ``segment`` outer steps (see
     `repro.core.solver.mirror_descent_segment`): same step body as
     `gw_plan_solve`, so a segmented solve is bit-identical to an
     uninterrupted one."""
     step = gw_step_fn(op, c1, mu, nu, cfg)
-    return mirror_descent_segment(step, plan_delta, controls,
+    return mirror_descent_segment(step, coupling_delta, controls,
                                   cfg.outer_iters, carry, segment)
 
 
@@ -187,20 +265,41 @@ def entropic_gw(grid_x, grid_y, mu, nu,
 
     ``grid_x``/``grid_y``: Geometry instances, or raw Grid1D/Grid2D (adapted
     with ``cfg.backend``).  ``controls`` overrides the cfg's traced value
-    knobs (eps/tol/eps_init/anneal_decay) — jitted callers pass it as an
-    operand so those values never enter the compilation cache key.
+    knobs (eps/tol/eps_init/anneal_decay/lr_gamma) — jitted callers pass it
+    as an operand so those values never enter the compilation cache key.
+
+    With ``cfg.plan="lowrank"`` the solve runs entirely on the factored
+    representation (result.coupling is a `LowRankCoupling`; plan/f/g are
+    None — no (M,N) array is built, so a 10⁵–10⁶-point problem fits).
+    ``gamma0`` warm starts are a dense-plan concept and are rejected there.
     """
+    if cfg.plan == "lowrank":
+        if gamma0 is not None:
+            raise ValueError(
+                "gamma0 is a dense-plan warm start; the factored path "
+                "resumes from a LowRankCoupling carry instead (see "
+                "entropic_gw_batch(resume_state=...))")
+        return _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg, controls)
     op = GradientOperator(grid_x, grid_y, cfg.backend)
     c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
-    state0 = None
-    if gamma0 is not None:
-        f, g = sk.zero_mass_potentials(mu, nu)
-        state0 = (gamma0, f, g)
-    (gamma, f, g), info = gw_plan_solve(op, c1, mu, nu, cfg, controls,
-                                        state0)
-    value = op.energy(gamma, dx2_mu, dy2_nu)
-    return GWResult(plan=gamma, value=value, marginal_err=info.marginal_err,
-                    f=f, g=g, errs=info.err_trace, info=info)
+    state0 = full_init(mu, nu, gamma0) if gamma0 is not None else None
+    coup, info = gw_plan_solve(op, c1, mu, nu, cfg, controls, state0)
+    value = op.energy(coup.plan, dx2_mu, dy2_nu)
+    return _result_of(coup, value, info.marginal_err, info.err_trace, info)
+
+
+def _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg: GWConfig,
+                         controls: SolveControls | None) -> GWResult:
+    """Factored-plan entropic GW: mirror descent on (Q, R, g) through the
+    same convergence-controlled driver, O((M+N)·(r+cost_rank)) per step."""
+    ctl, _ = resolve_controls(cfg, controls)
+    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank)
+    dx2, dy2 = op.constant_term(mu, nu)
+    step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg, ctl.lr_gamma)
+    coup, info = mirror_descent(step, lowrank_init(mu, nu, cfg.plan_rank),
+                                coupling_delta, ctl, cfg.outer_iters)
+    value = op.energy(coup, cfg.g_floor)
+    return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +324,11 @@ def _solve_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _init_stacked(mus, nus, cfg: GWConfig) -> MirrorCarry:
-    """Fresh stacked carries for a slot batch: cold product-coupling start
-    per lane, trace sized to the cfg's outer cap."""
+    """Fresh stacked carries for a slot batch: cold coupling start per lane
+    (product plan or rank-r factors, per ``cfg.plan``), trace sized to the
+    cfg's outer cap."""
     def one(mu, nu):
-        return init_carry(gw_init_state(mu, nu), cfg.outer_iters)
+        return init_carry(gw_init_state(mu, nu, cfg=cfg), cfg.outer_iters)
 
     return jax.vmap(one)(mus, nus)
 
@@ -237,7 +337,7 @@ def _init_stacked(mus, nus, cfg: GWConfig) -> MirrorCarry:
 def _init_lane(mu, nu, cfg: GWConfig) -> MirrorCarry:
     """One UNstacked fresh carry — what the continuous-batching engine
     writes into a freed slot when it admits the next queued request."""
-    return init_carry(gw_init_state(mu, nu), cfg.outer_iters)
+    return init_carry(gw_init_state(mu, nu, cfg=cfg), cfg.outer_iters)
 
 
 @partial(jax.jit, static_argnames=("cfg", "segment"))
@@ -252,7 +352,6 @@ def _segment_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
     cfg), so a serving stream compiles one executable per bucket × batch
     width and reuses it for every dispatch."""
     def one(gx, gy, mu, nu, ctl, c):
-        op = GradientOperator(gx, gy, cfg.backend)
         # constant_term is recomputed per dispatch ON PURPOSE: it is
         # deterministic in (geometry, mu, nu), and evaluating it inside the
         # same vmapped subgraph the uninterrupted _solve_stacked uses is
@@ -260,9 +359,17 @@ def _segment_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
         # across separately-compiled programs.  Hoisting it into the init
         # executable would save ~1/(segment·sinkhorn_iters) of a dispatch
         # but let XLA fuse it differently there and break exactness.
+        if cfg.plan == "lowrank":
+            op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank)
+            dx2, dy2 = op.constant_term(mu, nu)
+            step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg, ctl.lr_gamma)
+            c = mirror_descent_segment(step, coupling_delta, ctl,
+                                       cfg.outer_iters, c, segment)
+            return c, op.energy(c.state, cfg.g_floor)
+        op = GradientOperator(gx, gy, cfg.backend)
         c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
         c = gw_plan_segment(op, c1, mu, nu, cfg, ctl, c, segment)
-        value = op.energy(c.state[0], dx2_mu, dy2_nu)
+        value = op.energy(c.state.plan, dx2_mu, dy2_nu)
         return c, value
 
     return jax.vmap(one)(geoms_x, geoms_y, mus, nus, controls, carry)
@@ -325,19 +432,19 @@ def stack_controls(controls, cfg: GWConfig, n: int) -> SolveControls:
     return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ctls)
 
 
-def _unpack_results(stacked_info, plans, values, fs, gs, errs, gxs, gys,
-                    k: int) -> list[GWResult]:
-    """Slice per-lane results back to their true (unpadded) sizes."""
-    return [
-        GWResult(plan=plans[i, :gxs[i].size, :gys[i].size],
-                 value=values[i],
-                 marginal_err=stacked_info.marginal_err[i],
-                 f=fs[i, :gxs[i].size], g=gs[i, :gys[i].size],
-                 errs=errs[i],
-                 info=jax.tree_util.tree_map(lambda l, i=i: l[i],
-                                             stacked_info))
-        for i in range(k)
-    ]
+def _unpack_results(stacked_info, coupling: Coupling, values, errs, gxs,
+                    gys, k: int) -> list[GWResult]:
+    """Slice per-lane results back to their true (unpadded) sizes.
+    ``coupling`` is the stacked (lane-leading) coupling pytree of either
+    representation; each lane is indexed out and `slice_to`'d."""
+    out = []
+    for i in range(k):
+        lane = jax.tree_util.tree_map(lambda l, i=i: l[i], coupling)
+        info = jax.tree_util.tree_map(lambda l, i=i: l[i], stacked_info)
+        out.append(_result_of(lane.slice_to(gxs[i].size, gys[i].size),
+                              values[i], stacked_info.marginal_err[i],
+                              errs[i], info))
+    return out
 
 
 def stack_problems(problems: Sequence[tuple], cfg: GWConfig,
@@ -348,6 +455,13 @@ def stack_problems(problems: Sequence[tuple], cfg: GWConfig,
     uses this to build a slot batch it then mutates lane-wise."""
     gxs = [as_geometry(p[0], cfg.backend) for p in problems]
     gys = [as_geometry(p[1], cfg.backend) for p in problems]
+    if cfg.plan == "lowrank":
+        # convert BEFORE padding: a padded point cloud would factor its
+        # origin-sitting padding atoms into nonzero rows, while padding the
+        # factors appends exact zero rows — only the latter keeps padded
+        # lanes bit-identical to unpadded solves
+        gxs = [g.for_factored_plan(cfg.cost_rank) for g in gxs]
+        gys = [g.for_factored_plan(cfg.cost_rank) for g in gys]
     geoms_x, mus_p = _stack_side(gxs, [p[2] for p in problems],
                                  pad_to and pad_to[0])
     geoms_y, nus_p = _stack_side(gys, [p[3] for p in problems],
@@ -406,14 +520,12 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
     k = len(problems) if num_results is None else num_results
     if not segmented:
         stacked = _solve_stacked(*ops, cfg.static_key())
-        return _unpack_results(stacked.info, stacked.plan, stacked.value,
-                               stacked.f, stacked.g, stacked.errs, gxs, gys,
-                               k)
+        return _unpack_results(stacked.info, stacked.coupling,
+                               stacked.value, stacked.errs, gxs, gys, k)
     carry = (resume_state if resume_state is not None
              else _init_stacked(ops[2], ops[3], cfg.static_key()))
     carry, values = _segment_stacked(*ops, carry, cfg.static_key(),
                                      max_outer_segment)
-    gamma, f, g = carry.state
-    results = _unpack_results(info_of(carry), gamma, values, f, g,
+    results = _unpack_results(info_of(carry), carry.state, values,
                               carry.trace, gxs, gys, k)
     return results, carry

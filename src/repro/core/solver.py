@@ -85,24 +85,28 @@ class SolveControls:
     eps_init: jax.Array     # annealing start (≤ eps → no annealing)
     anneal_decay: jax.Array  # geometric decay factor per outer step
     inner_loosen: jax.Array  # inner-tol ε-scaling strength (0 → flat tol)
+    lr_gamma: jax.Array     # factored-plan mirror step size (plan="lowrank")
 
     @classmethod
     def make(cls, eps, tol=0.0, eps_init=None, anneal_decay=0.5,
-             inner_loosen=1.0):
+             inner_loosen=1.0, lr_gamma=30.0):
         ft = jnp.result_type(float)
         return cls(eps=jnp.asarray(eps, ft), tol=jnp.asarray(tol, ft),
                    eps_init=jnp.asarray(eps if eps_init is None else eps_init,
                                         ft),
                    anneal_decay=jnp.asarray(anneal_decay, ft),
-                   inner_loosen=jnp.asarray(inner_loosen, ft))
+                   inner_loosen=jnp.asarray(inner_loosen, ft),
+                   lr_gamma=jnp.asarray(lr_gamma, ft))
 
     @classmethod
     def from_config(cls, cfg):
         """From any config carrying eps/tol/eps_init/anneal_decay fields
-        (``inner_loosen`` is optional — configs without it get the default
-        ε-scaled inner-tolerance schedule)."""
+        (``inner_loosen``/``lr_gamma`` are optional — configs without them
+        get the default ε-scaled inner-tolerance schedule and the default
+        factored-plan step size)."""
         return cls.make(cfg.eps, cfg.tol, cfg.eps_init, cfg.anneal_decay,
-                        getattr(cfg, "inner_loosen", 1.0))
+                        getattr(cfg, "inner_loosen", 1.0),
+                        getattr(cfg, "lr_gamma", 30.0))
 
     def eps_at(self, t):
         """Annealed ε for outer step ``t``: max(eps, eps_init · decay^t)."""
@@ -129,7 +133,7 @@ class SolveControls:
 
     def tree_flatten(self):
         return (self.eps, self.tol, self.eps_init, self.anneal_decay,
-                self.inner_loosen), None
+                self.inner_loosen, self.lr_gamma), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -161,8 +165,9 @@ class ConvergenceInfo:
 class MirrorCarry:
     """The driver's complete resumable state: everything one outer solve
     needs to continue exactly where it left off.  ``state`` is the solver's
-    own pytree (for GW: plan + warm duals); the rest are the driver's
-    counters.  A carry advanced ``segment`` steps at a time through
+    own pytree — for GW a `repro.core.coupling.Coupling` (dense plan + warm
+    duals, or low-rank factors Q/R/g), for ugw/coot their tuple states; the
+    rest are the driver's counters.  A carry advanced ``segment`` steps at a time through
     ``mirror_descent_segment`` visits the same iterates, bit for bit, as one
     uninterrupted run — ε-annealing and the inner-tolerance schedule depend
     only on the carried ``t``."""
@@ -210,9 +215,15 @@ def resolve_controls(cfg, controls: SolveControls | None = None):
     reverse-mode differentiable.  Explicit ``controls`` (the batched /
     serving path) always use the while_loop driver so tolerance values stay
     traced operands.
+
+    The factored-plan mode (``cfg.plan="lowrank"``) never auto-unrolls:
+    its inner solver is Dykstra's projection loop (a bounded while_loop,
+    not reverse-differentiable), so the scan path would buy nothing —
+    configs reject ``unroll=True`` with a low-rank plan outright.
     """
-    unroll = getattr(cfg, "unroll", False) or (controls is None
-                                               and cfg.tol == 0.0)
+    unroll = getattr(cfg, "unroll", False) or (
+        controls is None and cfg.tol == 0.0
+        and getattr(cfg, "plan", "full") == "full")
     ctl = SolveControls.from_config(cfg) if controls is None else controls
     return ctl, unroll
 

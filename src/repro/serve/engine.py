@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core.geometry import as_geometry
 from repro.core.gw import (GWConfig, GWResult, _init_lane, _init_stacked,
-                           _segment_stacked, entropic_gw_batch,
+                           _result_of, _segment_stacked, entropic_gw_batch,
                            stack_problems)
 from repro.core.solver import MirrorCarry, SolveControls, info_of
 from repro.models import lm
@@ -137,6 +137,17 @@ class GWServeConfig:
     #: elsewhere; ε/tol stay traced either way, so the continuous scheduler
     #: keeps one executable per bucket × width with the kernel enabled.
     sinkhorn_backend: str | None = None
+    #: plan representation for queued requests ("full" | "lowrank"); None
+    #: inherits ``solver.plan``.  Per-request ``submit(plan=...)`` overrides
+    #: always win.  The plan is STRUCTURAL, so it is part of the bucket key:
+    #: full and factored requests never share a slot batch.
+    plan: str | None = None
+    #: size-based routing: requests whose larger side has ≥ this many points
+    #: are upgraded to the factored plan (unless submit() pinned one
+    #: explicitly).  None disables the upgrade.  This is how million-point
+    #: requests ride the same admission queue/scheduler as small ones —
+    #: they simply land in a "lowrank" bucket with O(N(r+d)) lanes.
+    lowrank_above: int | None = None
 
     def solver_cfg(self) -> GWConfig:
         cfg = self.solver
@@ -166,6 +177,7 @@ class _Request:
     #: resolved at flush time by _resolve(); never set directly
     ctl: SolveControls | None = None
     knobs: tuple | None = None       # (eps, tol, eps_init, anneal_decay)
+    plan: str | None = None          # effective plan, resolved at flush time
 
 
 def _new_stats() -> dict:
@@ -215,6 +227,16 @@ class GWEngine:
     ``anneal_decay``, or a full `SolveControls`): the knobs are traced
     per-lane operands, so a mixed-difficulty stream shares one compiled
     executable per bucket.
+
+    Plan routing: each request resolves to a plan REPRESENTATION at flush
+    time — "full" (dense (M,N) lanes) or "lowrank" (factored
+    P = Q diag(1/g) Rᵀ lanes, O((M+N)r) state).  ``submit(plan=...)`` pins
+    it; otherwise ``GWServeConfig.plan`` applies, and
+    ``GWServeConfig.lowrank_above`` upgrades big requests automatically.
+    The plan leads the bucket key, so a stream mixing 300-point and
+    300k-point problems runs the small ones through dense lanes and the
+    huge ones through factored lanes, both under this same scheduler —
+    harvest, refill, hardness ordering, and segmentation included.
 
     flush() groups the queue into geometry-spec buckets and schedules each
     bucket through the continuous-batching loop (``scheduler=
@@ -266,11 +288,14 @@ class GWEngine:
         return -(-size // b) * b
 
     def submit(self, geom_x, geom_y, mu, nu, *, eps=None, tol=None,
-               eps_init=None, anneal_decay=None,
+               eps_init=None, anneal_decay=None, plan=None,
                controls: SolveControls | None = None) -> int:
         """Enqueue a problem; returns its request id.  Keyword knobs (or a
         full ``controls``) override the engine's solver defaults for THIS
-        request only — they ride as traced per-lane operands."""
+        request only — they ride as traced per-lane operands.  ``plan``
+        ("full" | "lowrank") pins this request's representation, bypassing
+        the engine's ``lowrank_above`` routing; unlike the value knobs it
+        is structural (it picks the bucket, not an operand)."""
         backend = self.cfg.solver.backend
         gx = as_geometry(geom_x, backend)
         gy = as_geometry(geom_y, backend)
@@ -283,9 +308,13 @@ class GWEngine:
             raise ValueError(
                 f"measure shapes {mu.shape}/{nu.shape} do not match "
                 f"geometry sizes {gx.size}/{gy.size}")
+        if plan is not None and plan not in ("full", "lowrank"):
+            raise ValueError(
+                f"unknown plan {plan!r}: expected 'full' or 'lowrank'")
         overrides = {k: v for k, v in [("eps", eps), ("tol", tol),
                                        ("eps_init", eps_init),
                                        ("anneal_decay", anneal_decay),
+                                       ("plan", plan),
                                        ("controls", controls)]
                      if v is not None}
         rid = self._next_id
@@ -297,15 +326,26 @@ class GWEngine:
         """Materialize a request's effective SolveControls: the engine's
         CURRENT solver config (so knob retunes reach queued requests — all
         values are traced operands, never recompiling), overridden by
-        whatever submit() was given explicitly."""
+        whatever submit() was given explicitly.  Also resolves the
+        request's effective PLAN: submit(plan=...) pin → engine
+        ``cfg.plan``/``solver.plan`` default, upgraded to "lowrank" when
+        ``lowrank_above`` says the problem is too big for a dense (M,N)."""
         o = req.overrides
+        s = self.cfg.solver_cfg()
+        if "plan" in o:
+            req.plan = o["plan"]
+        else:
+            req.plan = self.cfg.plan if self.cfg.plan is not None else s.plan
+            gx, gy = req.prob[0], req.prob[1]
+            if (self.cfg.lowrank_above is not None
+                    and max(gx.size, gy.size) >= self.cfg.lowrank_above):
+                req.plan = "lowrank"
         if "controls" in o:
             c = o["controls"]
             req.ctl = c
             req.knobs = (float(c.eps), float(c.tol), float(c.eps_init),
                          float(c.anneal_decay))
             return
-        s = self.cfg.solver_cfg()
         eps_v = float(o.get("eps", s.eps))
         tol_v = float(o.get("tol", s.tol))
         e0 = o.get("eps_init", s.eps_init)
@@ -313,14 +353,16 @@ class GWEngine:
         e0 = max(e0, eps_v)        # eps_init ≤ eps means "no annealing"
         decay_v = float(o.get("anneal_decay", s.anneal_decay))
         req.ctl = SolveControls.make(eps_v, tol_v, e0, decay_v,
-                                     s.inner_loosen)
+                                     s.inner_loosen, s.lr_gamma)
         req.knobs = (eps_v, tol_v, e0, decay_v)
 
-    def _bucket_key(self, prob):
-        gx, gy, _, _ = prob
+    def _bucket_key(self, req: _Request):
+        gx, gy, _, _ = req.prob
         pad_x = self._bucket_size(gx.size) if gx.paddable else gx.size
         pad_y = self._bucket_size(gy.size) if gy.paddable else gy.size
-        return (gx.batch_key(), pad_x, gy.batch_key(), pad_y)
+        # the plan leads the key: representations are different programs
+        # (and different carry pytrees), so they must never share a batch
+        return (req.plan, gx.batch_key(), pad_x, gy.batch_key(), pad_y)
 
     # -- difficulty-aware admission --------------------------------------
 
@@ -343,7 +385,14 @@ class GWEngine:
             h += math.log(eps_init / eps) / math.log(1.0 / decay)
         h += math.log10(1.0 / max(eps, 1e-30))
         gx, gy = req.prob[0], req.prob[1]
-        h += math.log2(max(gx.size * gy.size, 2)) / 16.0
+        if req.plan == "lowrank":
+            # factored lanes cost O((M+N)·r) per step, not O(M·N) — the
+            # size term must match the work model or a single million-point
+            # lane would be ranked as hard as the whole rest of its bucket
+            r = self.cfg.solver.plan_rank
+            h += math.log2(max((gx.size + gy.size) * r, 2)) / 16.0
+        else:
+            h += math.log2(max(gx.size * gy.size, 2)) / 16.0
         if req.errs is not None:
             e = np.asarray(req.errs)
             e = e[np.isfinite(e) & (e > 0)]
@@ -362,7 +411,7 @@ class GWEngine:
         buckets: dict[tuple, list[_Request]] = {}
         for req in self._queue:
             self._resolve(req)
-            buckets.setdefault(self._bucket_key(req.prob), []).append(req)
+            buckets.setdefault(self._bucket_key(req), []).append(req)
         results: dict[int, GWResult] = {}
         done: set[int] = set()
         self.last_errors = []
@@ -392,10 +441,16 @@ class GWEngine:
             b *= 2
         return min(b, self.cfg.max_batch)
 
+    def _bucket_cfg(self, key) -> GWConfig:
+        """The solver cfg a bucket actually runs: the engine's current
+        config with the bucket's resolved plan swapped in."""
+        return dataclasses.replace(self.cfg.solver_cfg(), plan=key[0])
+
     def _barrier_bucket(self, key, entries, results, done):
         """PR-3 behaviour: chunked one-shot solves; every chunk runs until
         its slowest lane converges."""
-        pad_to = (key[1], key[3])
+        pad_to = (key[2], key[4])
+        cfg = self._bucket_cfg(key)
         for i in range(0, len(entries), self.cfg.max_batch):
             chunk = entries[i:i + self.cfg.max_batch]
             # pad the chunk to the next power of two (≤ max_batch) with
@@ -406,8 +461,7 @@ class GWEngine:
                      + [chunk[-1].prob] * (b - len(chunk)))
             ctls = ([r.ctl for r in chunk]
                     + [chunk[-1].ctl] * (b - len(chunk)))
-            solved = entropic_gw_batch(probs, self.cfg.solver_cfg(),
-                                       pad_to=pad_to,
+            solved = entropic_gw_batch(probs, cfg, pad_to=pad_to,
                                        num_results=len(chunk),
                                        controls=ctls)
             outers = [int(r.info.outer_iters) for r in solved]
@@ -424,9 +478,9 @@ class GWEngine:
     def _drive_bucket(self, key, entries, results, done):
         """Continuous batching for one bucket: slot batch + bounded
         segments + harvest-and-refill."""
-        cfg = self.cfg.solver_cfg()
+        cfg = self._bucket_cfg(key)
         cfgk = cfg.static_key()
-        pad_to = (key[1], key[3])
+        pad_to = (key[2], key[4])
         if self.cfg.order_by_hardness:
             entries = sorted(entries, key=self.predicted_hardness,
                              reverse=True)
@@ -528,6 +582,12 @@ class GWEngine:
         """One request's padded operands + fresh carry, shaped to drop into
         a slot of the stacked batch."""
         gx, gy, mu, nu = req.prob
+        if cfg.plan == "lowrank":
+            # convert BEFORE padding (same reason as stack_problems: padded
+            # point-cloud atoms would factor into nonzero rows; padding the
+            # factors appends exact zero rows)
+            gx = gx.for_factored_plan(cfg.cost_rank)
+            gy = gy.for_factored_plan(cfg.cost_rank)
         mu_p = jnp.pad(mu, (0, pad_to[0] - mu.shape[0]))
         nu_p = jnp.pad(nu, (0, pad_to[1] - nu.shape[0]))
         lane_ops = (gx.pad_to(pad_to[0]), gy.pad_to(pad_to[1]), mu_p, nu_p,
@@ -536,13 +596,11 @@ class GWEngine:
 
     def _harvest(self, carry, values, i, req: _Request) -> GWResult:
         """Slice lane ``i`` of the stacked carry back into this request's
-        true-size GWResult."""
+        true-size GWResult — representation-agnostic via Coupling.slice_to."""
         lane, value = jax.tree_util.tree_map(lambda l: l[i], (carry, values))
-        gamma, f, g = lane.state
         m, n = req.prob[0].size, req.prob[1].size
-        return GWResult(plan=gamma[:m, :n], value=value,
-                        marginal_err=lane.err, f=f[:m], g=g[:n],
-                        errs=lane.trace, info=info_of(lane))
+        coup = lane.state.slice_to(m, n)
+        return _result_of(coup, value, lane.err, lane.trace, info_of(lane))
 
     def solve(self, problems, pad_to=None) -> list[GWResult]:
         """Direct batched solve (no queue) — thin passthrough."""

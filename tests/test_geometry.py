@@ -345,3 +345,77 @@ def test_engine_pointcloud_stream_bucketed_no_recompile():
     out2 = eng.flush()
     assert len(out2) == 6
     assert _solve_stacked._cache_size() == compiles_first
+
+
+# ---------------------------------------------------------------------------
+# to_low_rank hardening: rank bounds, truncation, f32 parity, dtype rules
+# ---------------------------------------------------------------------------
+
+def test_to_low_rank_truncation_rank_bound():
+    """The explicit rank knob truncates on BOTH metrics: the returned
+    factors are exactly (N, r) and the reconstruction error decreases
+    monotonically in r (truncated SVD optimality)."""
+    for metric in ("sqeuclidean", "euclidean"):
+        pc = PointCloudGeometry(_points(18, 3, 7), metric)
+        d = np.asarray(pc.dist_matrix())
+        errs = []
+        for r in (2, 4, 8, 18):
+            lr = pc.to_low_rank(r)
+            assert lr.a.shape == (18, r) and lr.b.shape == (18, r)
+            assert lr.rank == r
+            errs.append(np.abs(np.asarray(lr.dist_matrix()) - d).max())
+        assert errs == sorted(errs, reverse=True)
+        assert errs[-1] < 1e-8      # full rank: exact
+
+
+def test_to_low_rank_f32_apply_parity():
+    """f32 factored applies track the dense apply to 1e-5 (relative to the
+    cost scale) — the acceptance bar for serving f32 point clouds through
+    the factored path."""
+    for metric, r in (("sqeuclidean", None), ("euclidean", 24)):
+        pc = PointCloudGeometry(_points(24, 3, 8, dtype=jnp.float32), metric)
+        lr = pc.to_low_rank(r)
+        assert lr.a.dtype == jnp.float32
+        v = _measure(24, 9, dtype=jnp.float32)
+        got = np.asarray(lr.apply_dist(v, 0))
+        want = np.asarray(pc.dist_matrix()) @ np.asarray(v)
+        scale = max(np.abs(want).max(), 1.0)
+        np.testing.assert_allclose(got / scale, want / scale, atol=1e-5)
+
+
+def test_for_factored_plan_never_materializes():
+    pc = PointCloudGeometry(_points(12, 2, 10))
+    lr = pc.for_factored_plan()
+    assert isinstance(lr, LowRankGeometry) and lr.rank == 4
+    # explicit cost_rank knob flows through
+    assert pc.for_factored_plan(3).rank == 3
+    # already-factored and grid geometries pass through unchanged
+    assert lr.for_factored_plan() is lr
+    gg = as_geometry(Grid1D(8, 1 / 7, 1))
+    assert gg.for_factored_plan() is gg
+    # euclidean clouds have no exact factorization: rank required
+    with pytest.raises(ValueError, match="explicit r"):
+        PointCloudGeometry(_points(12, 2, 10), "euclidean").for_factored_plan()
+
+
+def test_lowrank_apply_promotes_never_downcasts():
+    """f64 factors under an f32 operand promote to f64 (and vice versa) —
+    the x64-context convention: precision follows the widest participant."""
+    a64 = _points(10, 3, 11)                      # f64 under x64 tests
+    lr64 = LowRankGeometry(a64, a64)
+    assert lr64.apply_dist(_measure(10, 1, dtype=jnp.float32), 0).dtype \
+        == jnp.float64
+    lr32 = LowRankGeometry(a64.astype(jnp.float32),
+                           a64.astype(jnp.float32))
+    assert lr32.apply_dist(_measure(10, 1), 0).dtype == jnp.float64
+    assert lr32.apply_dist(_measure(10, 1, dtype=jnp.float32), 0).dtype \
+        == jnp.float32
+
+
+def test_as_geometry_rejects_unknown_grid_backend():
+    with pytest.raises(ValueError, match="unknown grid backend"):
+        as_geometry(Grid1D(8, 1 / 7, 1), "blas")
+    # Geometry instances ignore the backend string entirely (their own
+    # dispatch): no validation applies
+    pc = PointCloudGeometry(_points(6, 2, 12))
+    assert as_geometry(pc, "blas") is pc

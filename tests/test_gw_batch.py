@@ -180,7 +180,7 @@ def test_engine_mixed_grid_pointcloud_queue():
         p = (pc, pc, _measures(n, 50 + i), _measures(n, 60 + i))
         probs[eng.submit(*p)] = p
     # two distinct geometry buckets
-    keys = {eng._bucket_key(r.prob) for r in eng._queue}
+    keys = {eng._bucket_key(r) for r in eng._queue}
     assert len(keys) == 2
     out = eng.flush()
     assert set(out) == set(probs)

@@ -116,6 +116,62 @@ def test_resume_bit_identical_to_uninterrupted(kind, segment):
         assert int(a.info.inner_iters) == int(b.info.inner_iters)
 
 
+@pytest.mark.parametrize("kind", [0, 1, 2])
+@pytest.mark.parametrize("segment", [1, 4])
+def test_resume_bit_identical_lowrank(kind, segment):
+    """The exactness keystone holds for the FACTORED plan too: a low-rank
+    solve split into segments walks bit-for-bit the iterates of an
+    uninterrupted solve (the carry is the (Q, R, g) coupling; ε/tol
+    schedules are functions of the carried step index, representation
+    notwithstanding)."""
+    cfg = dataclasses.replace(SOLVER, tol=TOL, eps_init=5e-2,
+                              plan="lowrank", plan_rank=6)
+    probs = [_problem(kind, 40 + 10 * kind + i) for i in range(3)]
+    ctls = [_controls(200 + i) for i in range(3)]
+    full = entropic_gw_batch(probs, cfg, controls=ctls)
+
+    res, st_ = entropic_gw_batch(probs, cfg, controls=ctls,
+                                 max_outer_segment=segment)
+    while not all(bool(r.info.converged)
+                  or int(r.info.outer_iters) >= cfg.outer_iters for r in res):
+        res, st_ = entropic_gw_batch(probs, cfg, controls=ctls,
+                                     max_outer_segment=segment,
+                                     resume_state=st_)
+    for a, b in zip(full, res):
+        for la, lb in zip(jax.tree_util.tree_leaves(a.coupling),
+                          jax.tree_util.tree_leaves(b.coupling)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        assert float(a.value) == float(b.value)
+        assert int(a.info.outer_iters) == int(b.info.outer_iters)
+        assert int(a.info.inner_iters) == int(b.info.inner_iters)
+
+
+def test_lowrank_stream_continuous_equals_barrier():
+    """Continuous scheduling of factored lanes — slot sharing, segmenting,
+    harvest-and-refill — returns the same bits as the barrier baseline."""
+    lr_solver = dataclasses.replace(SOLVER, plan="lowrank", plan_rank=6)
+    mk = lambda sched: GWEngine(GWServeConfig(
+        solver=lr_solver, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler=sched, segment_iters=3))
+    cont, barr = mk("continuous"), mk("barrier")
+    reqs = {}
+    for i in range(5):
+        kind = i % 3
+        prob, ctl = _problem(kind, 500 + i), _controls(500 + i)
+        rid = cont.submit(*prob, controls=ctl)
+        assert barr.submit(*prob, controls=ctl) == rid
+        reqs[rid] = prob
+    out_c, out_b = cont.flush(), barr.flush()
+    assert set(out_c) == set(out_b) == set(reqs)
+    for rid in reqs:
+        assert out_c[rid].plan is None          # factored results
+        for la, lb in zip(jax.tree_util.tree_leaves(out_c[rid].coupling),
+                          jax.tree_util.tree_leaves(out_b[rid].coupling)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        assert (int(out_c[rid].info.inner_iters)
+                == int(out_b[rid].info.inner_iters))
+
+
 # ---------------------------------------------------------------------------
 # (a) + (b): random submit/flush streams over mixed geometries
 # ---------------------------------------------------------------------------
