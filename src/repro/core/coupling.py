@@ -133,6 +133,33 @@ class LowRankCoupling(Coupling):
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
+    def pad_rank(self, new_rank: int, mu, nu,
+                 blend: float = 0.05) -> "LowRankCoupling":
+        """Warm start for rank growth (``plan_rank="auto"``): widen the
+        factors to ``new_rank`` columns while staying feasible.  A ``blend``
+        fraction of every row's mass moves into the fresh columns (spread
+        uniformly, proportional to the row's marginal), the old columns keep
+        the rest:
+
+            Q' = [(1−w)·Q | μ (w/k) 1ᵀ],   g' = [(1−w)·g | (w/k) 1]
+
+        so Q'1 = μ, Q'ᵀ1 = g' exactly (same for R'/ν), zero-mass rows stay
+        exactly zero, and with w ≪ 1 the iterate stays near the converged
+        lower-rank point — the restart resumes rather than starts over."""
+        extra = new_rank - self.rank
+        if extra <= 0:
+            return self
+        w = jnp.asarray(blend, self.g.dtype)
+        k = extra
+
+        def widen(fac, marg):
+            fresh = marg[:, None] * jnp.full((1, k), 1.0, fac.dtype) * (w / k)
+            return jnp.concatenate([(1.0 - w) * fac, fresh], axis=1)
+
+        gn = jnp.concatenate([(1.0 - w) * self.g,
+                              jnp.full((k,), 1.0, self.g.dtype) * (w / k)])
+        return LowRankCoupling(widen(self.q, mu), widen(self.r, nu), gn)
+
 
 def coupling_delta(new: Coupling, old: Coupling):
     """The driver's delta_fn for coupling-valued solver states."""
@@ -173,12 +200,93 @@ def _rank2_factor(w, rank: int, lam):
             + (w - lam * a1)[:, None] * (g0 - lam * g1)[None, :] / (1.0 - lam))
 
 
-def lowrank_init(mu, nu, rank: int) -> LowRankCoupling:
-    """Deterministic feasible cold start: Q ∈ Π(μ, g₀), R ∈ Π(ν, g₀) with
-    uniform inner weights g₀ = 1/r — strictly positive on every
-    mass-carrying atom (mirror steps multiply log-factors, so a zero inside
-    the support would be absorbing) and exactly zero on zero-mass atoms."""
+def _embedding(geom, ft):
+    """Point coordinates to cluster for the k-means factor seeding: the
+    points themselves (point clouds), the cost-factor rows (low-rank costs —
+    nearby rows ⇔ similar distance profiles), or the 1-D grid positions.
+    Geometries with no coordinate structure (dense matrices, 2-D grids'
+    Kronecker unfolding) have no embedding — rank2 is the init there."""
+    from repro.core import geometry as geo
+    if isinstance(geom, geo.PointCloudGeometry):
+        return geom.points.astype(ft)
+    if isinstance(geom, geo.LowRankGeometry):
+        return geom.a.astype(ft)
+    if isinstance(geom, geo.GridGeometry) and geom.paddable:
+        g = geom.grid
+        return (jnp.arange(g.n, dtype=ft) * g.h)[:, None]
+    raise ValueError(
+        f"lowrank_init='kmeans' needs a coordinate embedding; "
+        f"{type(geom).__name__} has none — use lowrank_init='rank2'")
+
+
+def _kmeans_centers(x, w, k: int, iters: int = 10):
+    """Mass-weighted Lloyd iterations from mass-quantile seeds.  Fully
+    traceable (fixed iteration count, no data-dependent shapes); zero-mass
+    (padding) atoms carry zero weight everywhere, so padded and unpadded
+    problems produce identical centers."""
+    cum = jnp.cumsum(w)
+    targets = (jnp.arange(k, dtype=x.dtype) + 0.5) / k * cum[-1]
+    centers = x[jnp.searchsorted(cum, targets)]
+
+    def lloyd(c, _):
+        d2 = ((x ** 2).sum(1)[:, None] - 2.0 * x @ c.T
+              + (c ** 2).sum(1)[None, :])
+        hard = jnp.argmin(d2, axis=1)
+        onehot = (hard[:, None] == jnp.arange(k)[None, :]) * w[:, None]
+        mass = onehot.sum(0)
+        new = (onehot.T @ x) / jnp.maximum(mass, 1e-30)[:, None]
+        return jnp.where(mass[:, None] > 0, new, c), None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=iters)
+    return centers
+
+
+def _kmeans_factor(w, centers, x, mix=1e-2):
+    """One coupling factor from soft cluster assignments: rows are
+    softmax(−d²/τ) (τ = the mass-weighted mean nearest-center distance, so
+    the temperature tracks the data scale) blended with a little uniform
+    mass, scaled by ``w`` — row sums are exactly ``w`` and zero-mass rows
+    are exactly zero, like the rank2 construction."""
+    k = centers.shape[0]
+    d2 = ((x ** 2).sum(1)[:, None] - 2.0 * x @ centers.T
+          + (centers ** 2).sum(1)[None, :])
+    tau = w @ d2.min(axis=1)
+    tau = jnp.where(tau > 0, tau, 1.0)
+    soft = jax.nn.softmax(-d2 / tau, axis=1)
+    soft = (1.0 - mix) * soft + mix / k
+    return w[:, None] * soft
+
+
+def lowrank_init(mu, nu, rank: int, *, method: str = "rank2",
+                 geom_x=None, geom_y=None) -> LowRankCoupling:
+    """Feasible factored cold start.
+
+    ``method="rank2"`` (default): the deterministic rank-2 blend —
+    Q ∈ Π(μ, g₀), R ∈ Π(ν, g₀) with uniform inner weights g₀ = 1/r,
+    strictly positive on every mass-carrying atom (mirror steps multiply
+    log-factors, so a zero inside the support would be absorbing) and
+    exactly zero on zero-mass atoms.
+
+    ``method="kmeans"``: seed each side's factor from mass-weighted k-means
+    over its geometry's coordinate embedding (requires ``geom_x``/
+    ``geom_y``) — columns start as soft cluster memberships, so the mirror
+    descent begins near a spatially coherent transport structure instead of
+    the arange blend.  Row sums (= μ/ν) and zero-mass exactness match
+    rank2; the inner weights average the two sides' cluster masses."""
     ft = mu.dtype
+    if method == "kmeans":
+        if geom_x is None or geom_y is None:
+            raise ValueError(
+                "lowrank_init='kmeans' seeds from the geometries — pass "
+                "geom_x/geom_y (or use the solver entry points, which do)")
+        xx = _embedding(geom_x, ft)
+        xy = _embedding(geom_y, ft)
+        q = _kmeans_factor(mu, _kmeans_centers(xx, mu, rank), xx)
+        r = _kmeans_factor(nu, _kmeans_centers(xy, nu, rank), xy)
+        g = 0.5 * (q.sum(axis=0) + r.sum(axis=0))
+        return LowRankCoupling(q, r, g)
+    if method != "rank2":
+        raise ValueError(f"unknown lowrank_init method {method!r}")
     inf = jnp.asarray(jnp.inf, ft)
     min_mu = jnp.min(jnp.where(mu > 0, mu, inf))
     min_nu = jnp.min(jnp.where(nu > 0, nu, inf))

@@ -8,6 +8,12 @@ with gw/ugw/coot); the outer loop is the shared convergence-controlled
 driver `repro.core.solver.mirror_descent` (tol=0 → the paper's fixed
 iteration count; tol>0 → early stopping + optional ε-annealing, with a
 `ConvergenceInfo` on the result).
+
+The step closures and value assemblies live in module-level helpers
+(`fgw_step_fn` / `fgw_lr_step_fn` / `fgw_full_value` / `fgw_lr_value`) so
+the batched/segmented drivers in `repro.core.gw` run the EXACT same
+expressions as the one-shot solve here — that shared body is what makes
+padded serving lanes bit-identical to unbatched FGW solves.
 """
 from __future__ import annotations
 
@@ -16,11 +22,10 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
-from repro.core.coupling import (FullCoupling, coupling_delta, full_init,
-                                 lowrank_init)
+from repro.core.coupling import FullCoupling, coupling_delta, full_init
 from repro.core.gradient import (GeometryLike, GradientOperator,
                                  LowRankGradientOperator)
-from repro.core.gw import GWConfig, GWResult, _result_of
+from repro.core.gw import (GWConfig, GWResult, _result_of, lowrank_descent)
 from repro.core.solver import (SolveControls, mirror_descent,
                                resolve_controls)
 
@@ -36,6 +41,69 @@ def fgw_energy(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
     lin = jnp.sum((feature_cost ** 2) * gamma)
     quad = GradientOperator(grid_x, grid_y, backend).energy(gamma)
     return (1.0 - theta) * lin + theta * quad
+
+
+def fgw_full_value(op: GradientOperator, feature_cost, gamma, theta):
+    """FGW objective at a dense plan, on a prepared operator."""
+    lin = jnp.sum((feature_cost ** 2) * gamma)
+    return (1.0 - theta) * lin + theta * op.energy(gamma)
+
+
+def fgw_step_fn(op: GradientOperator, c2, theta, mu, nu, cfg: FGWConfig,
+                unroll: bool = False):
+    """The full-plan FGW mirror-descent step closure — same shape as
+    `gw.gw_step_fn` but with the blended constant term ``c2 =
+    (1−θ)·C⊙C + θ·c1`` and the quadratic gradient scaled by θ.  The ONE
+    step body behind the one-shot, batched, and segmented solves."""
+
+    def step(state, eps, inner_tol):
+        grad = c2 - 4.0 * theta * op.product(state.plan)
+        gamma, f, g, err, used = sk.solve_adaptive(
+            grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            inner_tol, cfg.sinkhorn_mode, state.f, state.g, unroll=unroll,
+            backend=cfg.sinkhorn_backend)
+        return FullCoupling(gamma, f, g), err, used
+
+    return step
+
+
+def fgw_lr_step_fn(op: LowRankGradientOperator, dx2, dy2, fsq, theta,
+                   mu, nu, cfg: FGWConfig, lr_gamma):
+    """The factored-plan FGW step closure: the LR-GW gradients from
+    `LowRankGradientOperator` plus the linear feature term differentiated
+    through P = Q diag(1/g) Rᵀ:
+
+        ∂⟨C², P⟩/∂Q = C² R diag(1/g),  ∂/∂R = C²ᵀ Q diag(1/g),
+        ∂/∂g = −(1/g²) ⊙ diag(Qᵀ C² R).
+
+    ``fsq`` is the squared feature cost (the solve's ONE (M,N) build);
+    each step pays one O(MNr) product against the factors, but the plan
+    and all solver state stay factored."""
+
+    def step(state, eps, inner_tol):
+        gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
+        iq = 1.0 / jnp.maximum(state.g, cfg.g_floor)
+        fr = fsq @ state.r       # (M, r)
+        fq = fsq.T @ state.q     # (N, r)
+        lin_diag = jnp.sum(state.q * fr, axis=0)        # diag(Qᵀ C² R)
+        gq = theta * gq + (1.0 - theta) * fr * iq[None, :]
+        gr = theta * gr + (1.0 - theta) * fq * iq[None, :]
+        gg = theta * gg - (1.0 - theta) * (iq ** 2) * lin_diag
+        q, r, g, err, used = sk.lr_mirror_step(
+            state.q, state.r, state.g, gq, gr, gg, mu, nu, eps,
+            lr_gamma, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
+            inner_tol, cfg.g_floor, cfg.lowrank_backend)
+        return type(state)(q, r, g), err, used
+
+    return step
+
+
+def fgw_lr_value(op: LowRankGradientOperator, fsq, coup, theta, g_floor):
+    """FGW objective at a factored plan: linear term contracted through the
+    factors (never materializing P) plus the factored GW energy."""
+    iq = 1.0 / jnp.maximum(coup.g, g_floor)
+    lin = jnp.sum(coup.q * (fsq @ coup.r), axis=0) @ iq
+    return (1.0 - theta) * lin + theta * op.energy(coup, g_floor)
 
 
 def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
@@ -63,53 +131,25 @@ def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
     c1, _, _ = op.constant_term(mu, nu)
     c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
     state0 = full_init(mu, nu, gamma0)
-
-    def step(state, eps, inner_tol):
-        grad = c2 - 4.0 * theta * op.product(state.plan)
-        gamma, f, g, err, used = sk.solve_adaptive(
-            grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.sinkhorn_mode, state.f, state.g, unroll=unroll,
-            backend=cfg.sinkhorn_backend)
-        return FullCoupling(gamma, f, g), err, used
-
+    step = fgw_step_fn(op, c2, theta, mu, nu, cfg, unroll=unroll)
     coup, info = mirror_descent(step, state0, coupling_delta, ctl,
                                 cfg.outer_iters, unroll=unroll)
-    value = fgw_energy(grid_x, grid_y, feature_cost, coup.plan, theta,
-                       cfg.backend)
+    value = fgw_full_value(op, feature_cost, coup.plan, theta)
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
 
 def _entropic_fgw_lowrank(grid_x, grid_y, feature_cost, mu, nu,
                           cfg: FGWConfig, ctl: SolveControls) -> GWResult:
-    """Factored-plan FGW: the GW gradients from `LowRankGradientOperator`
-    plus the linear feature term differentiated through P = Q diag(1/g) Rᵀ:
-
-        ∂⟨C², P⟩/∂Q = C² R diag(1/g),  ∂/∂R = C²ᵀ Q diag(1/g),
-        ∂/∂g = −(1/g²) ⊙ diag(Qᵀ C² R).
-    """
+    """Factored-plan FGW through the shared `lowrank_descent` driver —
+    same k-means seeding and ``plan_rank="auto"`` growth as factored GW."""
     theta = cfg.theta
-    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank)
+    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank,
+                                 cfg.lowrank_backend)
     dx2, dy2 = op.constant_term(mu, nu)
     fsq = feature_cost ** 2      # the ONE per-solve (M,N) build
-
-    def step(state, eps, inner_tol):
-        gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
-        iq = 1.0 / jnp.maximum(state.g, cfg.g_floor)
-        fr = fsq @ state.r       # (M, r)
-        fq = fsq.T @ state.q     # (N, r)
-        lin_diag = jnp.sum(state.q * fr, axis=0)        # diag(Qᵀ C² R)
-        gq = theta * gq + (1.0 - theta) * fr * iq[None, :]
-        gr = theta * gr + (1.0 - theta) * fq * iq[None, :]
-        gg = theta * gg - (1.0 - theta) * (iq ** 2) * lin_diag
-        q, r, g, err, used = sk.lr_mirror_step(
-            state.q, state.r, state.g, gq, gr, gg, mu, nu, eps,
-            ctl.lr_gamma, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.g_floor)
-        return type(state)(q, r, g), err, used
-
-    coup, info = mirror_descent(step, lowrank_init(mu, nu, cfg.plan_rank),
-                                coupling_delta, ctl, cfg.outer_iters)
-    iq = 1.0 / jnp.maximum(coup.g, cfg.g_floor)
-    lin = jnp.sum(coup.q * (fsq @ coup.r), axis=0) @ iq
-    value = (1.0 - theta) * lin + theta * op.energy(coup, cfg.g_floor)
+    step = fgw_lr_step_fn(op, dx2, dy2, fsq, theta, mu, nu, cfg,
+                          ctl.lr_gamma)
+    coup, info = lowrank_descent(step, mu, nu, cfg, ctl, op.geom_x,
+                                 op.geom_y)
+    value = fgw_lr_value(op, fsq, coup, theta, cfg.g_floor)
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)

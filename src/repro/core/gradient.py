@@ -141,12 +141,23 @@ class LowRankGradientOperator:
         ∇_Q = iq ⊙ (2(dx2 sRᵀ + 1 tRᵀ) − 4·D_X (Q diag(iq)) B)
         ∇_R = iq ⊙ (2(dy2 sQᵀ + 1 tQᵀ) − 4·D_Y (R diag(iq)) A)
         ∇_g = −iq² ⊙ (2(tQ⊙sR + sQ⊙tR) − 4·diag(A diag(iq) B))
+
+    ``lowrank_backend`` ("auto"|"pallas"|"xla", resolved by
+    `repro.kernels.ops.resolve_lowrank_backend`) selects the fused Pallas
+    Gram-chain kernels when both geometries are explicit low-rank factor
+    pairs: the whole chain (BᵀQ, QᵀD_XQ, column sums, Qᵀdx2, the gradient
+    assembly) then streams the factors with no (N, r) intermediate between
+    matmuls.  Structured non-factor geometries (grids/FGC) keep the XLA
+    applies regardless of the knob — their apply is not a factor matmul.
+    The fused path reassociates Bᵀ(Q diag(iq))·B as (BᵀQ)diag(iq)·B —
+    exact in ℝ, ulp-level in floating point.
     """
 
     geom_x: GeometryLike
     geom_y: GeometryLike
     backend: str = "cumsum"
     cost_rank: int | None = None
+    lowrank_backend: str = "xla"
 
     def __post_init__(self):
         object.__setattr__(self, "geom_x",
@@ -155,6 +166,13 @@ class LowRankGradientOperator:
         object.__setattr__(self, "geom_y",
                            as_geometry(self.geom_y, self.backend)
                            .for_factored_plan(self.cost_rank))
+
+    def _use_fused(self) -> bool:
+        from repro.core.geometry import LowRankGeometry
+        from repro.core.sinkhorn import _use_pallas_lr
+        return (_use_pallas_lr(self.lowrank_backend)
+                and isinstance(self.geom_x, LowRankGeometry)
+                and isinstance(self.geom_y, LowRankGeometry))
 
     def constant_term(self, mu, nu):
         """The factored path's constant gradient pieces: ONLY the two
@@ -169,19 +187,45 @@ class LowRankGradientOperator:
         v = self.geom_y.apply_dist(coupling.r, axis=0)     # D_Y R   (N, r)
         return coupling.q.T @ u, coupling.r.T @ v          # A, B    (r, r)
 
+    def _fused_chain(self, geom, fac, w):
+        """One fused Gram-chain kernel call: (BᵀQ, QᵀDQ, Qᵀ1, Qᵀw) with the
+        PR-2 promote-don't-downcast dtype convention of `apply_dist`."""
+        from repro.kernels import ops as kops
+        dt = jnp.promote_types(geom.a.dtype, fac.dtype)
+        return kops.lr_gram_chain(geom.a.astype(dt), geom.b.astype(dt),
+                                  fac.astype(dt), w.astype(dt))
+
     def grads(self, coupling, dx2, dy2, g_floor: float = 1e-10):
         """(∇_Q, ∇_R, ∇_g) of the GW energy at the current factors."""
         q, r, g = coupling.q, coupling.r, coupling.g
         iq = 1.0 / jnp.maximum(g, g_floor)
-        a, b = self._grams(coupling, iq)
-        sq, sr = q.sum(axis=0), r.sum(axis=0)
-        tq, tr = q.T @ dx2, r.T @ dy2
-        gq = (2.0 * (dx2[:, None] * sr[None, :] + tr[None, :])
-              - 4.0 * self.geom_x.apply_dist((q * iq[None, :]) @ b, axis=0)
-              ) * iq[None, :]
-        gr = (2.0 * (dy2[:, None] * sq[None, :] + tq[None, :])
-              - 4.0 * self.geom_y.apply_dist((r * iq[None, :]) @ a, axis=0)
-              ) * iq[None, :]
+        if self._use_fused():
+            from repro.kernels import ops as kops
+            bq_x, a, sq, tq = self._fused_chain(self.geom_x, q, dx2)
+            bq_y, b, sr, tr = self._fused_chain(self.geom_y, r, dy2)
+            # Bᵀ(Q diag(iq))·Gram = (BᵀQ)diag(iq)·Gram: the (c, r) quad-term
+            # seeds cost O(c·r²) — no extra pass over the factors
+            wq = (bq_x * iq[None, :]) @ b
+            wr = (bq_y * iq[None, :]) @ a
+            dt = wq.dtype
+            gq = kops.lr_grad_combine(self.geom_x.a.astype(dt), wq,
+                                      dx2.astype(dt), sr, tr,
+                                      iq.astype(dt))
+            gr = kops.lr_grad_combine(self.geom_y.a.astype(dt), wr,
+                                      dy2.astype(dt), sq, tq,
+                                      iq.astype(dt))
+        else:
+            a, b = self._grams(coupling, iq)
+            sq, sr = q.sum(axis=0), r.sum(axis=0)
+            tq, tr = q.T @ dx2, r.T @ dy2
+            gq = (2.0 * (dx2[:, None] * sr[None, :] + tr[None, :])
+                  - 4.0 * self.geom_x.apply_dist((q * iq[None, :]) @ b,
+                                                 axis=0)
+                  ) * iq[None, :]
+            gr = (2.0 * (dy2[:, None] * sq[None, :] + tq[None, :])
+                  - 4.0 * self.geom_y.apply_dist((r * iq[None, :]) @ a,
+                                                 axis=0)
+                  ) * iq[None, :]
         diag_ab = jnp.einsum("kl,l,lk->k", a, iq, b)
         gg = -(iq ** 2) * (2.0 * (tq * sr + sq * tr) - 4.0 * diag_ab)
         return gq, gr, gg
@@ -192,9 +236,16 @@ class LowRankGradientOperator:
         ⟨P, D_X P D_Y⟩ = Σ_{k,l} iq_k A_kl iq_l B_lk."""
         q, r, g = coupling.q, coupling.r, coupling.g
         iq = 1.0 / jnp.maximum(g, g_floor)
-        a, b = self._grams(coupling, iq)
-        m1 = q @ (iq * r.sum(axis=0))
-        m2 = r @ (iq * q.sum(axis=0))
+        if self._use_fused():
+            zx = jnp.zeros(q.shape[0], q.dtype)
+            zy = jnp.zeros(r.shape[0], r.dtype)
+            _, a, sq, _ = self._fused_chain(self.geom_x, q, zx)
+            _, b, sr, _ = self._fused_chain(self.geom_y, r, zy)
+        else:
+            a, b = self._grams(coupling, iq)
+            sq, sr = q.sum(axis=0), r.sum(axis=0)
+        m1 = q @ (iq * sr)
+        m2 = r @ (iq * sq)
         cross = jnp.einsum("kl,k,l,lk->", a, iq, iq, b)
         return (m1 @ self.geom_x.apply_dist(m1, axis=0, power_mult=2)
                 + m2 @ self.geom_y.apply_dist(m2, axis=0, power_mult=2)

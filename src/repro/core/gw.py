@@ -95,11 +95,28 @@ class GWConfig:
     #: jit cache key (survives `static_key`) — the two representations are
     #: different programs, not different operand values.
     plan: str = "full"
-    plan_rank: int = 16        # factored-plan rank r (structural)
+    #: factored-plan rank r (structural), or "auto": start small and grow
+    #: (restart with warm-started zero-blend padded factors) whenever the
+    #: Dykstra residual trace stalls without converging, up to
+    #: ``plan_rank_max``.  "auto" is a host-level restart driver — one-shot
+    #: `entropic_gw`/`entropic_fgw` only; the batched/serving paths need one
+    #: static rank per executable and reject it.
+    plan_rank: int | str = 16
+    plan_rank_max: int = 64    # rank cap for plan_rank="auto" (structural)
     #: explicit cost-factorization rank for `for_factored_plan` conversions
     #: (None keeps exact factorizations — e.g. rank d+2 for sqeuclidean
     #: point clouds; euclidean clouds REQUIRE it for the SVD fallback)
     cost_rank: int | None = None
+    #: factored-plan inner-loop backend: "auto" (fused Pallas Dykstra/Gram
+    #: kernels on TPU, XLA expressions elsewhere) | "pallas" | "xla" —
+    #: resolved by `repro.kernels.ops.resolve_lowrank_backend`, the
+    #: factored twin of ``sinkhorn_backend``.  Structural (jit cache key).
+    lowrank_backend: str = "auto"
+    #: factored-plan factor seeding: "rank2" (the deterministic feasible
+    #: rank-2 blend — the default) or "kmeans" (mass-weighted Lloyd
+    #: clustering of the support embedding; cuts outer steps on clustered
+    #: data).  Structural.
+    lowrank_init: str = "rank2"
     #: factored-plan mirror step size γ (value knob: rides in SolveControls,
     #: canonicalized out of the cache key — retuning never recompiles)
     lr_gamma: float = 30.0
@@ -123,6 +140,17 @@ class GWConfig:
                 "unroll=True is the reverse-differentiable scan path; the "
                 "factored plan's Dykstra projection is a while_loop and "
                 "has no unrolled form — use plan='full' for unroll")
+        if isinstance(self.plan_rank, str) and self.plan_rank != "auto":
+            raise ValueError(
+                f"plan_rank={self.plan_rank!r}: expected an int or 'auto'")
+        if self.lowrank_backend not in ("auto", "pallas", "xla"):
+            raise ValueError(
+                f"unknown lowrank backend {self.lowrank_backend!r}: "
+                "expected 'auto', 'pallas', or 'xla'")
+        if self.lowrank_init not in ("rank2", "kmeans"):
+            raise ValueError(
+                f"unknown lowrank init {self.lowrank_init!r}: expected "
+                "'rank2' or 'kmeans'")
 
     def static_key(self) -> "GWConfig":
         """This cfg with the traced value-knobs canonicalized — the jit
@@ -214,18 +242,35 @@ def gw_lr_step_fn(op: LowRankGradientOperator, dx2, dy2, mu, nu,
         gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
         q, r, g, err, used = sk.lr_mirror_step(
             state.q, state.r, state.g, gq, gr, gg, mu, nu, eps, lr_gamma,
-            cfg.sinkhorn_iters, cfg.sinkhorn_chunk, inner_tol, cfg.g_floor)
+            cfg.sinkhorn_iters, cfg.sinkhorn_chunk, inner_tol, cfg.g_floor,
+            cfg.lowrank_backend)
         return LowRankCoupling(q, r, g), err, used
 
     return step
 
 
-def gw_init_state(mu, nu, gamma0=None, cfg: GWConfig | None = None):
+def _static_rank(cfg: GWConfig) -> int:
+    if isinstance(cfg.plan_rank, str):
+        raise ValueError(
+            "plan_rank='auto' adapts the rank with host-level restarts in "
+            "the one-shot entropic_gw/entropic_fgw drivers only; the "
+            "batched/serving paths need one static plan_rank per compiled "
+            "executable")
+    return cfg.plan_rank
+
+
+def gw_init_state(mu, nu, gamma0=None, cfg: GWConfig | None = None,
+                  geom_x=None, geom_y=None):
     """The standard cold start as a `Coupling`: product-coupling plan with
-    zero-mass-aware potentials (full), or the deterministic feasible
-    rank-r factor init (lowrank, when ``cfg.plan`` says so)."""
+    zero-mass-aware potentials (full), or the feasible rank-r factor init
+    (lowrank, when ``cfg.plan`` says so — the deterministic rank-2 blend,
+    or mass-weighted k-means over the geometry embeddings when
+    ``cfg.lowrank_init="kmeans"``; the geometries are only consulted
+    there)."""
     if cfg is not None and cfg.plan == "lowrank":
-        return lowrank_init(mu, nu, cfg.plan_rank)
+        return lowrank_init(mu, nu, _static_rank(cfg),
+                            method=cfg.lowrank_init, geom_x=geom_x,
+                            geom_y=geom_y)
     return full_init(mu, nu, gamma0)
 
 
@@ -288,16 +333,88 @@ def entropic_gw(grid_x, grid_y, mu, nu,
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
 
+_AUTO_RANK_START = 8        # plan_rank="auto" first attempt
+_AUTO_RANK_BLEND = 0.05     # mass blended into the fresh columns on growth
+_AUTO_RANK_WINDOW = 3       # stall lookback (outer steps)
+_AUTO_RANK_RATIO = 0.9      # residual must shrink below ratio×lookback
+
+
+def _residual_stalled(info: ConvergenceInfo) -> bool:
+    """Has the Dykstra/marginal residual stopped improving?  True when the
+    last outer step's residual recovered less than (1 − ratio) relative to
+    ``window`` steps earlier — the signal that the current rank's polytope,
+    not the iteration count, is what is binding."""
+    import numpy as np
+    trace = np.asarray(info.err_trace)
+    trace = trace[np.isfinite(trace)]
+    if trace.size <= _AUTO_RANK_WINDOW:
+        return False
+    return bool(trace[-1] > _AUTO_RANK_RATIO
+                * trace[-1 - _AUTO_RANK_WINDOW])
+
+
+def lowrank_descent(step, mu, nu, cfg: GWConfig, ctl: SolveControls,
+                    geom_x=None, geom_y=None):
+    """Factored-plan mirror descent, shared by GW and FGW: the plain
+    convergence-controlled `mirror_descent` at a static ``plan_rank``, or —
+    under ``plan_rank="auto"`` — a host-level restart loop that starts at
+    rank 8 and doubles (up to ``plan_rank_max``) whenever the solve neither
+    converged nor is still making residual progress.  Each restart warm
+    starts from the previous factors padded with `LowRankCoupling.pad_rank`
+    (a 5% mass blend into the fresh columns keeps the iterate feasible and
+    strictly positive where mass lives), so earlier ranks' work is kept.
+    The returned `ConvergenceInfo` accumulates outer/inner counts across
+    restarts; its trace is the final attempt's.
+
+    "auto" needs concrete residuals between attempts, so it cannot run
+    under jit/vmap — geometry-threaded init (``lowrank_init`` k-means
+    seeding) works in either mode.
+    """
+    if not isinstance(cfg.plan_rank, str):
+        state0 = lowrank_init(mu, nu, cfg.plan_rank,
+                              method=cfg.lowrank_init, geom_x=geom_x,
+                              geom_y=geom_y)
+        return mirror_descent(step, state0, coupling_delta, ctl,
+                              cfg.outer_iters)
+    if isinstance(mu, jax.core.Tracer):
+        raise ValueError(
+            "plan_rank='auto' restarts on concrete residuals and cannot "
+            "run under jit/vmap — use a static plan_rank there")
+    rank = min(_AUTO_RANK_START, cfg.plan_rank_max)
+    state = lowrank_init(mu, nu, rank, method=cfg.lowrank_init,
+                         geom_x=geom_x, geom_y=geom_y)
+    outer = inner = 0
+    while True:
+        coup, info = mirror_descent(step, state, coupling_delta, ctl,
+                                    cfg.outer_iters)
+        outer += int(info.outer_iters)
+        inner += int(info.inner_iters)
+        if (bool(info.converged) or rank >= cfg.plan_rank_max
+                or not _residual_stalled(info)):
+            break
+        rank = min(2 * rank, cfg.plan_rank_max)
+        state = coup.pad_rank(rank, mu, nu, _AUTO_RANK_BLEND)
+    info = ConvergenceInfo(jnp.asarray(outer, info.outer_iters.dtype),
+                           jnp.asarray(inner, info.inner_iters.dtype),
+                           info.marginal_err, info.converged,
+                           info.err_trace)
+    return coup, info
+
+
 def _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg: GWConfig,
                          controls: SolveControls | None) -> GWResult:
     """Factored-plan entropic GW: mirror descent on (Q, R, g) through the
     same convergence-controlled driver, O((M+N)·(r+cost_rank)) per step."""
     ctl, _ = resolve_controls(cfg, controls)
-    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank)
+    op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank,
+                                 cfg.lowrank_backend)
     dx2, dy2 = op.constant_term(mu, nu)
     step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg, ctl.lr_gamma)
-    coup, info = mirror_descent(step, lowrank_init(mu, nu, cfg.plan_rank),
-                                coupling_delta, ctl, cfg.outer_iters)
+    # init sees the CONVERTED geometries (op's factored pair) so one-shot,
+    # batched, and padded-lane solves derive k-means seeds from identical
+    # embeddings
+    coup, info = lowrank_descent(step, mu, nu, cfg, ctl, op.geom_x,
+                                 op.geom_y)
     value = op.energy(coup, cfg.g_floor)
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
@@ -307,72 +424,103 @@ def _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg: GWConfig,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _solve_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
-                   cfg: GWConfig):
+def _solve_stacked(geoms_x, geoms_y, mus, nus, feats, controls:
+                   SolveControls, cfg: GWConfig):
     """vmap core over stacked geometry pytrees.  The jit cache keys on the
     pytree structure — i.e. each side's geometry spec (class, padded size,
     static params) — plus leaf shapes and the cfg's structural fields
     (``cfg`` arrives pre-canonicalized via ``static_key()``; the value
     knobs ride in ``controls``, stacked per lane so every request may carry
-    its own ε/tol/annealing schedule)."""
-    def one(gx, gy, mu, nu, ctl):
-        return entropic_gw(gx, gy, mu, nu, cfg, controls=ctl)
+    its own ε/tol/annealing schedule).  ``feats`` is None for GW batches or
+    a stacked (B, M, N) feature-cost for FGW ones (``cfg`` then carries
+    θ as an `FGWConfig`); None vs array changes the operand pytree, so the
+    two workloads naturally compile apart."""
+    def one(gx, gy, mu, nu, feat, ctl):
+        if feat is None:
+            return entropic_gw(gx, gy, mu, nu, cfg, controls=ctl)
+        from repro.core.fgw import entropic_fgw
+        return entropic_fgw(gx, gy, feat, mu, nu, cfg, controls=ctl)
 
-    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(geoms_x, geoms_y, mus,
-                                                  nus, controls)
+    return jax.vmap(one)(geoms_x, geoms_y, mus, nus, feats, controls)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _init_stacked(mus, nus, cfg: GWConfig) -> MirrorCarry:
+def _init_stacked(geoms_x, geoms_y, mus, nus, cfg: GWConfig) -> MirrorCarry:
     """Fresh stacked carries for a slot batch: cold coupling start per lane
-    (product plan or rank-r factors, per ``cfg.plan``), trace sized to the
-    cfg's outer cap."""
-    def one(mu, nu):
-        return init_carry(gw_init_state(mu, nu, cfg=cfg), cfg.outer_iters)
+    (product plan or rank-r factors, per ``cfg.plan``; the geometries feed
+    the k-means factor seeding when ``cfg.lowrank_init`` asks for it),
+    trace sized to the cfg's outer cap."""
+    def one(gx, gy, mu, nu):
+        return init_carry(gw_init_state(mu, nu, cfg=cfg, geom_x=gx,
+                                        geom_y=gy), cfg.outer_iters)
 
-    return jax.vmap(one)(mus, nus)
+    return jax.vmap(one)(geoms_x, geoms_y, mus, nus)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _init_lane(mu, nu, cfg: GWConfig) -> MirrorCarry:
+def _init_lane(geom_x, geom_y, mu, nu, cfg: GWConfig) -> MirrorCarry:
     """One UNstacked fresh carry — what the continuous-batching engine
     writes into a freed slot when it admits the next queued request."""
-    return init_carry(gw_init_state(mu, nu, cfg=cfg), cfg.outer_iters)
+    return init_carry(gw_init_state(mu, nu, cfg=cfg, geom_x=geom_x,
+                                    geom_y=geom_y), cfg.outer_iters)
 
 
 @partial(jax.jit, static_argnames=("cfg", "segment"))
-def _segment_stacked(geoms_x, geoms_y, mus, nus, controls: SolveControls,
-                     carry: MirrorCarry, cfg: GWConfig, segment: int | None):
+def _segment_stacked(geoms_x, geoms_y, mus, nus, feats,
+                     controls: SolveControls, carry: MirrorCarry,
+                     cfg: GWConfig, segment: int | None):
     """Advance every lane of a stacked carry by ≤ ``segment`` outer steps
-    and return (carry, values) — ``values`` is each lane's GW energy at its
-    current plan (stable once the lane converges, since its state freezes).
+    and return (carry, values) — ``values`` is each lane's GW (or FGW, when
+    ``feats`` carries a stacked feature cost) energy at its current plan
+    (stable once the lane converges, since its state freezes).
 
     This is the continuous-batching engine's dispatch unit: the jit cache
     keys on (geometry specs, padded shapes, batch width, segment, structural
     cfg), so a serving stream compiles one executable per bucket × batch
     width and reuses it for every dispatch."""
-    def one(gx, gy, mu, nu, ctl, c):
+    def one(gx, gy, mu, nu, feat, ctl, c):
         # constant_term is recomputed per dispatch ON PURPOSE: it is
         # deterministic in (geometry, mu, nu), and evaluating it inside the
         # same vmapped subgraph the uninterrupted _solve_stacked uses is
         # what keeps segmented iterates bit-identical to one-shot solves
         # across separately-compiled programs.  Hoisting it into the init
         # executable would save ~1/(segment·sinkhorn_iters) of a dispatch
-        # but let XLA fuse it differently there and break exactness.
+        # but let XLA fuse it differently there and break exactness.  The
+        # FGW branches below mirror `entropic_fgw`'s one-shot expressions
+        # (same step closures, same value assembly) for the same reason.
         if cfg.plan == "lowrank":
-            op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank)
+            op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank,
+                                         cfg.lowrank_backend)
             dx2, dy2 = op.constant_term(mu, nu)
-            step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg, ctl.lr_gamma)
+            if feat is None:
+                step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg,
+                                     ctl.lr_gamma)
+            else:
+                from repro.core import fgw as _fgw
+                step = _fgw.fgw_lr_step_fn(op, dx2, dy2, feat ** 2,
+                                           cfg.theta, mu, nu, cfg,
+                                           ctl.lr_gamma)
             c = mirror_descent_segment(step, coupling_delta, ctl,
                                        cfg.outer_iters, c, segment)
-            return c, op.energy(c.state, cfg.g_floor)
+            if feat is None:
+                return c, op.energy(c.state, cfg.g_floor)
+            from repro.core import fgw as _fgw
+            return c, _fgw.fgw_lr_value(op, feat ** 2, c.state, cfg.theta,
+                                        cfg.g_floor)
         op = GradientOperator(gx, gy, cfg.backend)
         c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
-        c = gw_plan_segment(op, c1, mu, nu, cfg, ctl, c, segment)
-        value = op.energy(c.state.plan, dx2_mu, dy2_nu)
-        return c, value
+        if feat is None:
+            c = gw_plan_segment(op, c1, mu, nu, cfg, ctl, c, segment)
+            return c, op.energy(c.state.plan, dx2_mu, dy2_nu)
+        from repro.core import fgw as _fgw
+        c2 = (1.0 - cfg.theta) * feat ** 2 + cfg.theta * c1
+        step = _fgw.fgw_step_fn(op, c2, cfg.theta, mu, nu, cfg)
+        c = mirror_descent_segment(step, coupling_delta, ctl,
+                                   cfg.outer_iters, c, segment)
+        return c, _fgw.fgw_full_value(op, feat, c.state.plan, cfg.theta)
 
-    return jax.vmap(one)(geoms_x, geoms_y, mus, nus, controls, carry)
+    return jax.vmap(one)(geoms_x, geoms_y, mus, nus, feats, controls,
+                         carry)
 
 
 def _pad_to(vec, size: int):
@@ -447,15 +595,44 @@ def _unpack_results(stacked_info, coupling: Coupling, values, errs, gxs,
     return out
 
 
+def _stack_features(features, problems, gxs, gys, m: int, n: int):
+    """Stack per-problem FGW feature costs, zero-padded to the bucket
+    shape — padded rows/columns meet zero-mass atoms, whose factor/plan
+    entries are exactly 0, so the padding never contributes.  ``None``
+    (a pure-GW batch) passes through; a mixed batch is an error."""
+    if features is None or all(f is None for f in features):
+        return None
+    if any(f is None for f in features):
+        raise ValueError(
+            "mixed GW/FGW batches are not supported: features must be all "
+            "None or all arrays (serve them as separate buckets)")
+    if len(features) != len(problems):
+        raise ValueError(
+            f"{len(features)} features for {len(problems)} problems")
+    feats = []
+    for f, gx, gy in zip(features, gxs, gys):
+        f = jnp.asarray(f)
+        if f.shape != (gx.size, gy.size):
+            raise ValueError(
+                f"feature cost shape {f.shape} != problem sizes "
+                f"({gx.size}, {gy.size})")
+        feats.append(jnp.pad(f, ((0, m - f.shape[0]), (0, n - f.shape[1]))))
+    return jnp.stack(feats)
+
+
 def stack_problems(problems: Sequence[tuple], cfg: GWConfig,
-                   pad_to: tuple[int, int] | None = None, controls=None):
+                   pad_to: tuple[int, int] | None = None, controls=None,
+                   features=None):
     """Pad + stack a problem list into the vmapped solver's operands:
-    ``(geoms_x, geoms_y, mus, nus, controls)`` plus the adapted per-problem
-    geometries (for slicing results back).  The continuous-batching engine
-    uses this to build a slot batch it then mutates lane-wise."""
+    ``(geoms_x, geoms_y, mus, nus, feats, controls)`` plus the adapted
+    per-problem geometries (for slicing results back).  The
+    continuous-batching engine uses this to build a slot batch it then
+    mutates lane-wise.  ``features``: optional per-problem FGW feature
+    costs (see `_stack_features`)."""
     gxs = [as_geometry(p[0], cfg.backend) for p in problems]
     gys = [as_geometry(p[1], cfg.backend) for p in problems]
     if cfg.plan == "lowrank":
+        _static_rank(cfg)   # "auto" cannot ride a fixed-shape lane
         # convert BEFORE padding: a padded point cloud would factor its
         # origin-sitting padding atoms into nonzero rows, while padding the
         # factors appends exact zero rows — only the latter keeps padded
@@ -466,8 +643,10 @@ def stack_problems(problems: Sequence[tuple], cfg: GWConfig,
                                  pad_to and pad_to[0])
     geoms_y, nus_p = _stack_side(gys, [p[3] for p in problems],
                                  pad_to and pad_to[1])
+    feats = _stack_features(features, problems, gxs, gys, mus_p.shape[1],
+                            nus_p.shape[1])
     ctls = stack_controls(controls, cfg, len(problems))
-    return (geoms_x, geoms_y, mus_p, nus_p, ctls), gxs, gys
+    return (geoms_x, geoms_y, mus_p, nus_p, feats, ctls), gxs, gys
 
 
 def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
@@ -475,7 +654,8 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
                       num_results: int | None = None,
                       controls=None,
                       resume_state: MirrorCarry | None = None,
-                      max_outer_segment: int | None = None):
+                      max_outer_segment: int | None = None,
+                      features=None):
     """Solve a batch of GW problems ``[(geom_x, geom_y, mu, nu), ...]`` with
     ONE vmapped solver call.  Geometries may be raw Grids (adapted with
     ``cfg.backend``) or any Geometry — low-rank, point-cloud, dense.
@@ -504,6 +684,12 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
     (see :func:`stack_controls`) — a mixed-difficulty stream runs per-lane
     ε/tol/annealing schedules through ONE executable.
 
+    ``features`` optionally gives every problem an FGW feature-cost matrix
+    of shape ``(geom_x.size, geom_y.size)``; ``cfg`` must then be an
+    :class:`~repro.core.fgw.FGWConfig` (its ``theta`` weights the feature
+    term).  All-None and all-array are the two supported shapes — a mixed
+    batch would fork the compiled executable per lane.
+
     Segmented mode: with ``max_outer_segment=k`` the batch advances at most
     ``k`` outer steps and returns ``(results, resume_state)`` — the results
     reflect the current (possibly unconverged; check ``result.info``)
@@ -516,14 +702,20 @@ def entropic_gw_batch(problems: Sequence[tuple], cfg: GWConfig = GWConfig(),
     segmented = (resume_state is not None) or (max_outer_segment is not None)
     if not problems:
         return ([], None) if segmented else []
-    ops, gxs, gys = stack_problems(problems, cfg, pad_to, controls)
+    if (features is not None and any(f is not None for f in features)
+            and not hasattr(cfg, "theta")):
+        raise ValueError(
+            "features given but cfg has no feature weight: pass an "
+            "FGWConfig (with theta) instead of a GWConfig")
+    ops, gxs, gys = stack_problems(problems, cfg, pad_to, controls, features)
     k = len(problems) if num_results is None else num_results
     if not segmented:
         stacked = _solve_stacked(*ops, cfg.static_key())
         return _unpack_results(stacked.info, stacked.coupling,
                                stacked.value, stacked.errs, gxs, gys, k)
     carry = (resume_state if resume_state is not None
-             else _init_stacked(ops[2], ops[3], cfg.static_key()))
+             else _init_stacked(ops[0], ops[1], ops[2], ops[3],
+                                cfg.static_key()))
     carry, values = _segment_stacked(*ops, carry, cfg.static_key(),
                                      max_outer_segment)
     results = _unpack_results(info_of(carry), carry.state, values,

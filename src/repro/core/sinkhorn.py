@@ -64,6 +64,15 @@ def _use_pallas(backend: str) -> bool:
     return ops.resolve_sinkhorn_backend(backend) == "pallas"
 
 
+def _use_pallas_lr(backend: str) -> bool:
+    """The factored-plan twin of `_use_pallas`; see
+    `repro.kernels.ops.resolve_lowrank_backend`."""
+    if backend == "xla":
+        return False
+    from repro.kernels import ops
+    return ops.resolve_lowrank_backend(backend) == "pallas"
+
+
 def zero_mass_potentials(mu, nu):
     """Initial (f, g) with −inf on zero-mass atoms — their exact value at
     the Sinkhorn fixed point.  Starting there keeps the FIRST iteration's
@@ -315,7 +324,75 @@ def sinkhorn_unbalanced_log_chunked(cost, mu, nu, eps, rho_x, rho_y, iters,
 # (Q, R, g) factors, solved by log-domain Dykstra iterations
 # ---------------------------------------------------------------------------
 
-def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor):
+def _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu, log_floor,
+                       backend: str = "xla"):
+    """state0, sweep, residual for the log-domain Dykstra projection.
+
+    One home for the sweep under both backends, exposed separately from
+    `lr_dykstra_log` so the jaxpr-level fusion contract can be pinned on a
+    single sweep (tests/test_lowrank_plan.py): under ``backend="pallas"``
+    each factor side is ONE fused kernel call per sweep — the row-dual
+    logsumexp and the column LSE it feeds stream the (N, r) block in a
+    single pass (`repro.kernels.lr_step`) instead of the XLA pair of
+    reductions with an HBM round trip between them.  The (r,)-sized
+    dual/geometric-mean algebra and the residual stay in XLA under either
+    backend (O(r) work, once per sweep/chunk).
+    """
+    ft = mu.dtype
+    log_mu = jnp.log(mu)
+    log_nu = jnp.log(nu)
+    rank = lk_g.shape[-1]
+    zr = jnp.zeros((rank,), ft)
+    neg_inf = jnp.asarray(-jnp.inf, ft)
+    state0 = (jnp.zeros_like(mu), jnp.zeros_like(nu), zr, zr,
+              jnp.asarray(lk_g, ft), zr, zr, zr, zr)
+    use_kernel = _use_pallas_lr(backend)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def sweep(s):
+        f1, f2, g1, g2, h, w_gi, w_gp, w_q, w_r = s
+        # block 1: exact row scalings (guarded: zero-mass rows are
+        # −inf − (−inf) and must pin to −inf, not NaN) + floored g
+        if use_kernel:
+            # fused: new row duals AND the column LSE at those duals in one
+            # streaming pass per factor side
+            f1, cq = kops.lr_dykstra_half(lk_q, g1, log_mu)
+            f2, cr = kops.lr_dykstra_half(lk_r, g2, log_nu)
+        else:
+            f1 = jnp.where(mu > 0,
+                           log_mu - logsumexp(g1[None, :] + lk_q, axis=1),
+                           neg_inf)
+            f2 = jnp.where(nu > 0,
+                           log_nu - logsumexp(g2[None, :] + lk_r, axis=1),
+                           neg_inf)
+            cq = logsumexp(f1[:, None] + lk_q, axis=0)
+            cr = logsumexp(f2[:, None] + lk_r, axis=0)
+        hp = h + w_gi
+        h = jnp.maximum(hp, log_floor)
+        w_gi = hp - h
+        # block 2: couple the column marginals of Q and R to g
+        gq = g1 + cq
+        gr = g2 + cr
+        hn = ((h + w_gp) + (gq + w_q) + (gr + w_r)) / 3.0
+        g1 = g1 + (hn - gq)
+        g2 = g2 + (hn - gr)
+        w_q = (gq + w_q) - hn
+        w_r = (gr + w_r) - hn
+        w_gp = (h + w_gp) - hn
+        return f1, f2, g1, g2, hn, w_gi, w_gp, w_q, w_r
+
+    def residual(s, _old):
+        f1, f2, g1, g2 = s[0], s[1], s[2], s[3]
+        row_q = jnp.exp(f1 + logsumexp(g1[None, :] + lk_q, axis=1))
+        row_r = jnp.exp(f2 + logsumexp(g2[None, :] + lk_r, axis=1))
+        return (jnp.abs(row_q - mu).sum() + jnp.abs(row_r - nu).sum())
+
+    return state0, sweep, residual
+
+
+def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor,
+                   backend: str = "xla"):
     """Log-domain Dykstra projection onto the low-rank coupling polytope.
 
     Finds the KL projection of the kernels (K_Q, K_R, K_g) onto
@@ -337,47 +414,13 @@ def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor):
     exactly ``iters`` sweeps; ``tol>0`` stops at the first post-chunk check
     whose summed L1 row-marginal gap (Q vs μ plus R vs ν) is ≤ tol.  All of
     (tol, log_floor, kernels) are traced operands — retuning recompiles
-    nothing.  Returns (q, r, g, err, iters_used).
+    nothing.  ``backend`` selects the sweep implementation (XLA reductions
+    or the fused Pallas half-sweep kernels; see `_lr_dykstra_pieces`).
+    Returns (q, r, g, err, iters_used).
     """
     ft = mu.dtype
-    log_mu = jnp.log(mu)
-    log_nu = jnp.log(nu)
-    rank = lk_g.shape[-1]
-    zr = jnp.zeros((rank,), ft)
-    neg_inf = jnp.asarray(-jnp.inf, ft)
-    state0 = (jnp.zeros_like(mu), jnp.zeros_like(nu), zr, zr,
-              jnp.asarray(lk_g, ft), zr, zr, zr, zr)
-
-    def sweep(s):
-        f1, f2, g1, g2, h, w_gi, w_gp, w_q, w_r = s
-        # block 1: exact row scalings (guarded: zero-mass rows are
-        # −inf − (−inf) and must pin to −inf, not NaN) + floored g
-        f1 = jnp.where(mu > 0,
-                       log_mu - logsumexp(g1[None, :] + lk_q, axis=1),
-                       neg_inf)
-        f2 = jnp.where(nu > 0,
-                       log_nu - logsumexp(g2[None, :] + lk_r, axis=1),
-                       neg_inf)
-        hp = h + w_gi
-        h = jnp.maximum(hp, log_floor)
-        w_gi = hp - h
-        # block 2: couple the column marginals of Q and R to g
-        gq = g1 + logsumexp(f1[:, None] + lk_q, axis=0)
-        gr = g2 + logsumexp(f2[:, None] + lk_r, axis=0)
-        hn = ((h + w_gp) + (gq + w_q) + (gr + w_r)) / 3.0
-        g1 = g1 + (hn - gq)
-        g2 = g2 + (hn - gr)
-        w_q = (gq + w_q) - hn
-        w_r = (gr + w_r) - hn
-        w_gp = (h + w_gp) - hn
-        return f1, f2, g1, g2, hn, w_gi, w_gp, w_q, w_r
-
-    def residual(s, _old):
-        f1, f2, g1, g2 = s[0], s[1], s[2], s[3]
-        row_q = jnp.exp(f1 + logsumexp(g1[None, :] + lk_q, axis=1))
-        row_r = jnp.exp(f2 + logsumexp(g2[None, :] + lk_r, axis=1))
-        return (jnp.abs(row_q - mu).sum() + jnp.abs(row_r - nu).sum())
-
+    state0, sweep, residual = _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu,
+                                                 log_floor, backend)
     s, it, _ = _chunked_loop(state0, sweep, residual, iters, chunk, tol, ft)
     f1, f2, g1, g2, h = s[0], s[1], s[2], s[3], s[4]
     q = jnp.exp(lk_q + f1[:, None] + g1[None, :])
@@ -386,7 +429,7 @@ def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor):
 
 
 def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
-                   iters, chunk, tol, g_floor):
+                   iters, chunk, tol, g_floor, backend: str = "xla"):
     """One mirror-descent step on the factored plan (Q, R, g).
 
     Builds the KL-prox kernels of Scetbon et al. (2021):
@@ -399,9 +442,11 @@ def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
     mass-carrying rows only, and zero-mass rows are pinned to −inf in the
     kernels, so a zero-padded problem walks the padded atoms' factors as
     exact zeros and the real atoms' factors as if unpadded.  ``eps``,
-    ``gamma``, and ``tol`` are traced operands; ``iters``/``chunk`` and the
-    factor rank are the only shape-bearing (static) quantities — the
-    factored path shares the full path's no-recompile contract.
+    ``gamma``, and ``tol`` are traced operands; ``iters``/``chunk``, the
+    factor rank, and the structural ``backend`` knob are the only static
+    quantities — the factored path shares the full path's no-recompile
+    contract under either backend (ε/γ enter the fused kernels pre-folded
+    into the traced log-kernels, never as compile-time constants).
 
     Returns (q, r, g, err, iters_used) with err the post-projection L1
     row-marginal gap.
@@ -425,7 +470,7 @@ def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
                      - gamma_eff * gr_m, neg_inf)
     lk_g = coef * jnp.log(g) - gamma_eff * grad_g
     return lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol,
-                          jnp.log(jnp.asarray(g_floor, ft)))
+                          jnp.log(jnp.asarray(g_floor, ft)), backend)
 
 
 def _warm_scalings(f0, eps):

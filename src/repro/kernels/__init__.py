@@ -3,8 +3,11 @@
   fgc_scan      — blocked-DP FGC L-apply (the paper's §3 recursion on the MXU)
   sinkhorn_step — fused flash-style log-domain Sinkhorn half-steps (row +
                   true-column kernels, traced ε, vmap/grid-extended batching)
+  lr_step       — fused factored-plan inner loop: Dykstra half-sweeps
+                  (row duals + online column LSE in one pass over the
+                  (N, r) factors) and the factor-Gram gradient chain
   ops           — jit'd wrappers (interpret mode off-TPU) + the
-                  "auto"|"pallas"|"xla" sinkhorn backend resolution
+                  "auto"|"pallas"|"xla" sinkhorn/lowrank backend resolution
   ref           — pure-jnp oracles
 """
 from repro.kernels import ops, ref  # noqa: F401

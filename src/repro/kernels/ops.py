@@ -12,7 +12,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import fgc_scan, sinkhorn_step
+from repro.kernels import fgc_scan, lr_step, sinkhorn_step
 
 
 def _on_tpu() -> bool:
@@ -99,3 +99,56 @@ def sinkhorn_col_update(cost, f, log_nu, eps, interpret: bool | None = None):
     g = sinkhorn_step.sinkhorn_col_update_pallas(cost, f, log_nu, eps,
                                                  interpret=interpret)
     return g.astype(orig)
+
+
+def resolve_lowrank_backend(backend: str = "auto") -> str:
+    """The factored-plan twin of `resolve_sinkhorn_backend`: ``"auto"`` picks
+    the fused Dykstra/Gram kernels (repro.kernels.lr_step) on TPU and the
+    XLA expressions elsewhere; ``"pallas"`` forces the kernels (interpret
+    mode off-TPU — the parity-test path); ``"xla"`` forces the XLA path."""
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(
+            f"unknown lowrank backend {backend!r}: expected 'auto', "
+            "'pallas', or 'xla'")
+    return backend
+
+
+def _lr_f32(*arrays):
+    """TPU-f64 guard for the factored-plan kernels: every operand moves to
+    f32 together (cf. `_sinkhorn_f32`); returns (*arrays, original_dtype)."""
+    lead, orig = _tpu_f32_inputs(arrays[0])
+    if lead.dtype != orig:
+        return (lead, *(a.astype(lead.dtype) for a in arrays[1:]), orig)
+    return (*arrays, orig)
+
+
+def lr_dykstra_half(lk, gcol, logw, interpret: bool | None = None):
+    """Fused factored-plan Dykstra half-sweep: new row duals f AND the
+    per-column LSE of one (N, r) log-kernel in a single streaming pass
+    (see lr_step.py).  All operands traced — retunes never recompile."""
+    lk, gcol, logw, orig = _lr_f32(lk, gcol, logw)
+    f, col = lr_step.lr_dykstra_half_pallas(lk, gcol, logw,
+                                            interpret=interpret)
+    return f.astype(orig), col.astype(orig)
+
+
+def lr_gram_chain(a_fac, b_fac, q, w, interpret: bool | None = None):
+    """Fused factor-side Gram chain (BᵀQ, QᵀDQ, Qᵀ1, Qᵀw) with no (N, r)
+    intermediate between the matmuls (see lr_step.py)."""
+    a_fac, b_fac, q, w, orig = _lr_f32(a_fac, b_fac, q, w)
+    outs = lr_step.lr_gram_chain_pallas(a_fac, b_fac, q, w,
+                                        interpret=interpret)
+    return tuple(o.astype(orig) for o in outs)
+
+
+def lr_grad_combine(a_fac, w_small, d2, s_other, t_other, iq,
+                    interpret: bool | None = None):
+    """Fused factored-plan gradient assembly — matmul + elementwise tail in
+    one output pass (see lr_step.py)."""
+    a_fac, w_small, d2, s_other, t_other, iq, orig = _lr_f32(
+        a_fac, w_small, d2, s_other, t_other, iq)
+    out = lr_step.lr_grad_combine_pallas(a_fac, w_small, d2, s_other,
+                                         t_other, iq, interpret=interpret)
+    return out.astype(orig)

@@ -137,6 +137,12 @@ class GWServeConfig:
     #: elsewhere; ε/tol stay traced either way, so the continuous scheduler
     #: keeps one executable per bucket × width with the kernel enabled.
     sinkhorn_backend: str | None = None
+    #: factored-plan (Dykstra + factor-Gram gradient) kernel backend for
+    #: every dispatch; overrides ``solver.lowrank_backend`` when set.
+    #: "auto" (the solver default) fuses the inner loop into the Pallas
+    #: lr_step kernels on TPU and keeps the XLA expressions elsewhere;
+    #: ε/tol/lr_gamma stay traced either way.
+    lowrank_backend: str | None = None
     #: plan representation for queued requests ("full" | "lowrank"); None
     #: inherits ``solver.plan``.  Per-request ``submit(plan=...)`` overrides
     #: always win.  The plan is STRUCTURAL, so it is part of the bucket key:
@@ -156,6 +162,9 @@ class GWServeConfig:
         if self.sinkhorn_backend is not None:
             cfg = dataclasses.replace(cfg,
                                       sinkhorn_backend=self.sinkhorn_backend)
+        if self.lowrank_backend is not None:
+            cfg = dataclasses.replace(cfg,
+                                      lowrank_backend=self.lowrank_backend)
         return cfg
 
 
@@ -171,6 +180,10 @@ class _Request:
     prob: tuple                      # (geom_x, geom_y, mu, nu)
     overrides: dict                  # explicit per-request knobs (or
     #                                  {"controls": SolveControls})
+    #: FGW feature-cost matrix (M,N), or None for a plain GW request.
+    #: Structural (it changes the solve's operand pytree and objective), so
+    #: GW and FGW requests land in different buckets.
+    feature: jax.Array | None = None
     #: err trace observed before a bucket failure interrupted this request —
     #: feeds the hardness predictor's slope term when it is re-admitted
     errs: np.ndarray | None = None
@@ -178,6 +191,7 @@ class _Request:
     ctl: SolveControls | None = None
     knobs: tuple | None = None       # (eps, tol, eps_init, anneal_decay)
     plan: str | None = None          # effective plan, resolved at flush time
+    theta: float | None = None       # effective FGW feature weight (None=GW)
 
 
 def _new_stats() -> dict:
@@ -289,13 +303,22 @@ class GWEngine:
 
     def submit(self, geom_x, geom_y, mu, nu, *, eps=None, tol=None,
                eps_init=None, anneal_decay=None, plan=None,
+               feature_cost=None, theta=None,
                controls: SolveControls | None = None) -> int:
         """Enqueue a problem; returns its request id.  Keyword knobs (or a
         full ``controls``) override the engine's solver defaults for THIS
         request only — they ride as traced per-lane operands.  ``plan``
         ("full" | "lowrank") pins this request's representation, bypassing
         the engine's ``lowrank_above`` routing; unlike the value knobs it
-        is structural (it picks the bucket, not an operand)."""
+        is structural (it picks the bucket, not an operand).
+
+        ``feature_cost`` (an (M,N) matrix C) makes this a FUSED GW request:
+        the bucket solves the FGW objective (1−θ)·Σ C²Γ + θ·E(Γ) instead —
+        under the factored plan the feature term contracts through the
+        (M,r)/(N,r) factors, so only the user's own C is ever (M,N).
+        ``theta`` overrides the solver config's feature weight (requires
+        ``feature_cost``); like the plan it is structural, so FGW requests
+        bucket by θ."""
         backend = self.cfg.solver.backend
         gx = as_geometry(geom_x, backend)
         gy = as_geometry(geom_y, backend)
@@ -311,15 +334,26 @@ class GWEngine:
         if plan is not None and plan not in ("full", "lowrank"):
             raise ValueError(
                 f"unknown plan {plan!r}: expected 'full' or 'lowrank'")
+        if theta is not None and feature_cost is None:
+            raise ValueError("theta is the FGW feature weight — it needs a "
+                             "feature_cost to weight")
+        feature = None
+        if feature_cost is not None:
+            feature = jnp.asarray(feature_cost)
+            if feature.shape != (gx.size, gy.size):
+                raise ValueError(
+                    f"feature cost shape {feature.shape} != problem sizes "
+                    f"({gx.size}, {gy.size})")
         overrides = {k: v for k, v in [("eps", eps), ("tol", tol),
                                        ("eps_init", eps_init),
                                        ("anneal_decay", anneal_decay),
-                                       ("plan", plan),
+                                       ("plan", plan), ("theta", theta),
                                        ("controls", controls)]
                      if v is not None}
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(_Request(rid, (gx, gy, mu, nu), overrides))
+        self._queue.append(_Request(rid, (gx, gy, mu, nu), overrides,
+                                    feature=feature))
         return rid
 
     def _resolve(self, req: _Request) -> None:
@@ -332,6 +366,8 @@ class GWEngine:
         ``lowrank_above`` says the problem is too big for a dense (M,N)."""
         o = req.overrides
         s = self.cfg.solver_cfg()
+        if req.feature is not None:
+            req.theta = float(o.get("theta", getattr(s, "theta", 0.5)))
         if "plan" in o:
             req.plan = o["plan"]
         else:
@@ -361,8 +397,11 @@ class GWEngine:
         pad_x = self._bucket_size(gx.size) if gx.paddable else gx.size
         pad_y = self._bucket_size(gy.size) if gy.paddable else gy.size
         # the plan leads the key: representations are different programs
-        # (and different carry pytrees), so they must never share a batch
-        return (req.plan, gx.batch_key(), pad_x, gy.batch_key(), pad_y)
+        # (and different carry pytrees), so they must never share a batch.
+        # The objective trails it: FGW requests carry a feature operand and
+        # a structural θ, so they bucket apart from GW and by θ.
+        mode = ("fgw", req.theta) if req.feature is not None else ("gw",)
+        return (req.plan, gx.batch_key(), pad_x, gy.batch_key(), pad_y, mode)
 
     # -- difficulty-aware admission --------------------------------------
 
@@ -390,6 +429,8 @@ class GWEngine:
             # size term must match the work model or a single million-point
             # lane would be ranked as hard as the whole rest of its bucket
             r = self.cfg.solver.plan_rank
+            if not isinstance(r, int):        # plan_rank="auto"
+                r = self.cfg.solver.plan_rank_max
             h += math.log2(max((gx.size + gy.size) * r, 2)) / 16.0
         else:
             h += math.log2(max(gx.size * gy.size, 2)) / 16.0
@@ -443,8 +484,16 @@ class GWEngine:
 
     def _bucket_cfg(self, key) -> GWConfig:
         """The solver cfg a bucket actually runs: the engine's current
-        config with the bucket's resolved plan swapped in."""
-        return dataclasses.replace(self.cfg.solver_cfg(), plan=key[0])
+        config with the bucket's resolved plan swapped in, lifted to an
+        `FGWConfig` carrying the bucket's θ for FGW buckets."""
+        cfg = dataclasses.replace(self.cfg.solver_cfg(), plan=key[0])
+        mode = key[-1]
+        if mode[0] == "fgw":
+            from repro.core.fgw import FGWConfig
+            base = {f.name: getattr(cfg, f.name)
+                    for f in dataclasses.fields(GWConfig)}
+            cfg = FGWConfig(**base, theta=mode[1])
+        return cfg
 
     def _barrier_bucket(self, key, entries, results, done):
         """PR-3 behaviour: chunked one-shot solves; every chunk runs until
@@ -461,9 +510,11 @@ class GWEngine:
                      + [chunk[-1].prob] * (b - len(chunk)))
             ctls = ([r.ctl for r in chunk]
                     + [chunk[-1].ctl] * (b - len(chunk)))
+            feats = ([r.feature for r in chunk]
+                     + [chunk[-1].feature] * (b - len(chunk)))
             solved = entropic_gw_batch(probs, cfg, pad_to=pad_to,
                                        num_results=len(chunk),
-                                       controls=ctls)
+                                       controls=ctls, features=feats)
             outers = [int(r.info.outer_iters) for r in solved]
             inners = [int(r.info.inner_iters) for r in solved]
             self.stats["dispatches"] += 1
@@ -495,8 +546,9 @@ class GWEngine:
         slots: list[Optional[_Request]] = list(first) + [None] * (b - len(first))
         filler = [(s or first[0]) for s in slots]
         ops, _, _ = stack_problems([r.prob for r in filler], cfg, pad_to,
-                                   [r.ctl for r in filler])
-        carry = _init_stacked(ops[2], ops[3], cfgk)
+                                   [r.ctl for r in filler],
+                                   [r.feature for r in filler])
+        carry = _init_stacked(ops[0], ops[1], ops[2], ops[3], cfgk)
         if len(first) < b:
             carry = _retire_lanes(
                 carry, jnp.asarray([s is None for s in slots]))
@@ -590,9 +642,14 @@ class GWEngine:
             gy = gy.for_factored_plan(cfg.cost_rank)
         mu_p = jnp.pad(mu, (0, pad_to[0] - mu.shape[0]))
         nu_p = jnp.pad(nu, (0, pad_to[1] - nu.shape[0]))
-        lane_ops = (gx.pad_to(pad_to[0]), gy.pad_to(pad_to[1]), mu_p, nu_p,
-                    req.ctl)
-        return lane_ops, _init_lane(mu_p, nu_p, cfgk)
+        gx_p, gy_p = gx.pad_to(pad_to[0]), gy.pad_to(pad_to[1])
+        feat = None
+        if req.feature is not None:
+            f = req.feature
+            feat = jnp.pad(f, ((0, pad_to[0] - f.shape[0]),
+                               (0, pad_to[1] - f.shape[1])))
+        lane_ops = (gx_p, gy_p, mu_p, nu_p, feat, req.ctl)
+        return lane_ops, _init_lane(gx_p, gy_p, mu_p, nu_p, cfgk)
 
     def _harvest(self, carry, values, i, req: _Request) -> GWResult:
         """Slice lane ``i`` of the stacked carry back into this request's

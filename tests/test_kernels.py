@@ -295,3 +295,193 @@ def test_sinkhorn_kernel_full_iteration_feasible():
     plan = jnp.exp((f[:, None] + g[None, :] - cost) / 0.05)
     np.testing.assert_allclose(np.asarray(plan.sum(1)), np.asarray(mu),
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# factored-plan (lr_step) kernels: fused Dykstra half-sweeps + gradient chain
+# ---------------------------------------------------------------------------
+
+def _lr_half_oracle(lk, gcol, logw):
+    """XLA twin of the fused half-sweep: guarded row duals, then the column
+    LSE at those duals (exactly `_lr_dykstra_pieces`' xla expressions)."""
+    f = jnp.where(jnp.isneginf(logw), -jnp.inf,
+                  logw - sk.logsumexp(gcol[None, :] + lk, axis=1))
+    col = sk.logsumexp(f[:, None] + lk, axis=0)
+    return f, col
+
+
+@pytest.mark.parametrize("n,r", [(37, 5), (64, 8), (128, 16), (200, 8),
+                                 (300, 24), (513, 3)])
+def test_lr_dykstra_half_matches_xla(n, r):
+    """The fused row-dual + online column-LSE pass vs the pair of XLA
+    logsumexps: ≤1 ulp (128-padded lanes/rows reassociate the sums)."""
+    rng = np.random.default_rng(31)
+    lk = jnp.asarray(rng.normal(size=(n, r)))
+    gcol = jnp.asarray(rng.normal(size=(r,)) * 0.1)
+    w = rng.random(n) + 0.1
+    logw = jnp.log(jnp.asarray(w / w.sum()))
+    f, col = ops.lr_dykstra_half(lk, gcol, logw)
+    f_x, col_x = _lr_half_oracle(lk, gcol, logw)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_x), rtol=1e-13,
+                               atol=1e-14)
+    np.testing.assert_allclose(np.asarray(col), np.asarray(col_x),
+                               rtol=1e-13, atol=1e-14)
+
+
+def test_lr_dykstra_half_zero_mass_whole_leading_block():
+    """Zero-mass padding: −inf log-masses AND −inf kernel rows, with the
+    ENTIRE first 128-row block masked — row duals must pin to −inf (never
+    NaN) and the column LSE must see exact zero contributions from the
+    masked rows."""
+    n, r = 160, 6           # n > BM: rows 0..129 dead spans the whole block
+    rng = np.random.default_rng(33)
+    lk = jnp.asarray(rng.normal(size=(n, r)))
+    w = (rng.random(n) + 0.1)
+    w[:130] = 0.0
+    logw = jnp.log(jnp.asarray(w / w.sum()))       # −inf on dead rows
+    lk = jnp.where(jnp.isneginf(logw)[:, None], -jnp.inf, lk)
+    gcol = jnp.asarray(rng.normal(size=(r,)) * 0.1)
+    f, col = ops.lr_dykstra_half(lk, gcol, logw)
+    assert not bool(jnp.isnan(f).any()) and not bool(jnp.isnan(col).any())
+    np.testing.assert_array_equal(np.asarray(jnp.isneginf(f)),
+                                  np.isneginf(np.asarray(logw)))
+    f_x, col_x = _lr_half_oracle(lk, gcol, logw)
+    np.testing.assert_allclose(np.asarray(f[130:]), np.asarray(f_x[130:]),
+                               rtol=1e-13, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(col), np.asarray(col_x),
+                               rtol=1e-13, atol=1e-14)
+
+
+@pytest.mark.parametrize("n,c,r", [(50, 30, 4), (130, 128, 8), (257, 64, 16)])
+def test_lr_gram_chain_matches_xla(n, c, r):
+    """The two-phase fused Gram chain vs the unfused matmul sequence: the
+    (c,r) projection BᵀQ, the (r,r) Gram Qᵀ(A(BᵀQ)), and the ride-along
+    column sums / w-projections, all from ONE streaming of the factors."""
+    rng = np.random.default_rng(35)
+    a = jnp.asarray(rng.normal(size=(n, c)))
+    b = jnp.asarray(rng.normal(size=(n, c)))
+    q = jnp.asarray(rng.random((n, r)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    bq, gram, sq, tq = ops.lr_gram_chain(a, b, q, w)
+    bq_x = b.T @ q
+    gram_x = q.T @ (a @ bq_x)
+    np.testing.assert_allclose(np.asarray(bq), np.asarray(bq_x),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gram), np.asarray(gram_x),
+                               rtol=1e-12, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(q.sum(0)),
+                               rtol=1e-13, atol=1e-13)
+    np.testing.assert_allclose(np.asarray(tq), np.asarray(w @ q),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n,c,r", [(40, 25, 4), (200, 64, 8)])
+def test_lr_grad_combine_matches_xla(n, c, r):
+    rng = np.random.default_rng(37)
+    a = jnp.asarray(rng.normal(size=(n, c)))
+    w_small = jnp.asarray(rng.normal(size=(c, r)))
+    d2 = jnp.asarray(rng.random(n))
+    s = jnp.asarray(rng.random(r))
+    t = jnp.asarray(rng.normal(size=(r,)))
+    iq = jnp.asarray(rng.random(r) + 0.5)
+    out = ops.lr_grad_combine(a, w_small, d2, s, t, iq)
+    want = (2.0 * (d2[:, None] * s[None, :] + t[None, :])
+            - 4.0 * (a @ w_small)) * iq[None, :]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.float64, 1e-12)])
+def test_lr_kernels_dtype_preservation(dtype, tol):
+    """f32 stays f32 and f64 stays f64 through every lr kernel under the
+    x64 test context (promote-don't-downcast, like the sinkhorn twins)."""
+    rng = np.random.default_rng(39)
+    n, c, r = 70, 20, 5
+    lk = jnp.asarray(rng.normal(size=(n, r)), dtype)
+    gcol = jnp.asarray(rng.normal(size=(r,)) * 0.1, dtype)
+    logw = jnp.log(jnp.full((n,), 1.0 / n, dtype))
+    f, col = ops.lr_dykstra_half(lk, gcol, logw)
+    assert f.dtype == dtype and col.dtype == dtype
+    f_x, col_x = _lr_half_oracle(lk, gcol, logw)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_x), rtol=tol,
+                               atol=tol)
+    a = jnp.asarray(rng.normal(size=(n, c)), dtype)
+    b = jnp.asarray(rng.normal(size=(n, c)), dtype)
+    q = jnp.asarray(rng.random((n, r)), dtype)
+    w = jnp.asarray(rng.normal(size=(n,)), dtype)
+    outs = ops.lr_gram_chain(a, b, q, w)
+    assert all(o.dtype == dtype for o in outs)
+    out = ops.lr_grad_combine(a, outs[0][:, :r] * 0.1, w ** 2,
+                              jnp.asarray(rng.random(r), dtype),
+                              jnp.asarray(rng.random(r), dtype),
+                              jnp.asarray(rng.random(r) + 0.5, dtype))
+    assert out.dtype == dtype
+
+
+def test_lr_kernel_cache_one_across_annealing_stages():
+    """The ISSUE's jit-cache pin: an ε-annealing schedule reaches the fused
+    half-sweep kernel only through the VALUES of the traced log-kernel
+    operands (`lr_mirror_step` pre-folds ε and γ into lk), so ≥5 stages
+    leave the kernel with EXACTLY ONE cache entry per factor shape —
+    nothing about the schedule is compile-time.  (The solver-level twin —
+    `_solve_stacked` cache across ε/tol/γ retunes with the kernel
+    enabled — lives in tests/test_lowrank_plan.py.)"""
+    from repro.core.coupling import lowrank_init
+    from repro.kernels import lr_step
+    n, r = 40, 6
+    rng = np.random.default_rng(41)
+    mu = jnp.full((n,), 1.0 / n)
+    coup = lowrank_init(mu, mu, r)
+    gq = jnp.asarray(rng.normal(size=(n, r)))
+    gcol = jnp.asarray(rng.normal(size=(r,)) * 0.1)
+    log_mu = jnp.log(mu)
+    lr_step.lr_dykstra_half_pallas.clear_cache()
+    for eps, gamma in [(0.2, 30.0), (0.1, 30.0), (0.05, 10.0),
+                       (0.025, 100.0), (0.0125, 1.0), (0.002, 30.0)]:
+        # exactly lr_mirror_step's kernel build, per annealing stage
+        lk = (1.0 - gamma * eps) * jnp.log(coup.q) - gamma * gq
+        f, col = lr_step.lr_dykstra_half_pallas(lk, gcol, log_mu)
+        assert not bool(jnp.isnan(f).any())
+    assert lr_step.lr_dykstra_half_pallas._cache_size() == 1
+    # a new factor SHAPE is a legitimate new entry
+    lr_step.lr_dykstra_half_pallas(
+        jnp.asarray(rng.normal(size=(n, r + 2))),
+        jnp.asarray(rng.normal(size=(r + 2,))), log_mu)
+    assert lr_step.lr_dykstra_half_pallas._cache_size() == 2
+
+
+def test_lowrank_backend_resolution_on_cpu():
+    """`lowrank_backend="auto"` resolves to the XLA expressions off-TPU
+    (kernels are interpret-only there); explicit choices pass through;
+    junk raises — the `resolve_sinkhorn_backend` twin."""
+    assert jax.default_backend() != "tpu"   # the container contract
+    assert ops.resolve_lowrank_backend("auto") == "xla"
+    assert ops.resolve_lowrank_backend("pallas") == "pallas"
+    assert ops.resolve_lowrank_backend("xla") == "xla"
+    with pytest.raises(ValueError, match="unknown lowrank backend"):
+        ops.resolve_lowrank_backend("cuda")
+    assert sk._use_pallas_lr("auto") is False
+    assert sk._use_pallas_lr("pallas") is True
+    assert sk._use_pallas_lr("xla") is False
+
+
+def test_lr_kernels_batched_parity():
+    """vmapped lanes (the batched/serving path's shape) must match the
+    per-lane kernels — Pallas' batching rule grid-extends the lane axis."""
+    from repro.kernels import lr_step
+    b, n, r = 3, 50, 4
+    rng = np.random.default_rng(43)
+    lks = jnp.asarray(rng.normal(size=(b, n, r)))
+    gcols = jnp.asarray(rng.normal(size=(b, r)) * 0.1)
+    logws = jnp.log(jnp.asarray(rng.random((b, n)) + 0.1))
+    fv, colv = jax.vmap(ops.lr_dykstra_half)(lks, gcols, logws)
+    fb, colb = lr_step.lr_dykstra_half_pallas_batched(lks, gcols, logws)
+    for i in range(b):
+        f_i, col_i = ops.lr_dykstra_half(lks[i], gcols[i], logws[i])
+        np.testing.assert_allclose(np.asarray(fv[i]), np.asarray(f_i),
+                                   rtol=1e-13, atol=1e-14)
+        np.testing.assert_allclose(np.asarray(fb[i]), np.asarray(f_i),
+                                   rtol=1e-13, atol=1e-14)
+        np.testing.assert_allclose(np.asarray(colb[i]), np.asarray(col_i),
+                                   rtol=1e-13, atol=1e-14)

@@ -340,3 +340,424 @@ def test_fgw_lowrank_close_to_full():
     assert isinstance(lr.coupling, LowRankCoupling)
     ref, got = float(full.value), float(lr.value)
     assert abs(got - ref) / abs(ref) <= 0.05, (got, ref)
+
+
+# ---------------------------------------------------------------------------
+# (7) fused Pallas backend for the factored inner loop (kernels/lr_step)
+# ---------------------------------------------------------------------------
+
+def _lr_problem(m, n, r, seed):
+    import repro.core.sinkhorn as sk
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.random(m) + 0.1)
+    mu = mu / mu.sum()
+    nu = jnp.asarray(rng.random(n) + 0.1)
+    nu = nu / nu.sum()
+    lk_q = jnp.asarray(rng.normal(size=(m, r)))
+    lk_r = jnp.asarray(rng.normal(size=(n, r)))
+    lk_g = jnp.asarray(rng.normal(size=(r,)))
+    return sk, lk_q, lk_r, lk_g, mu, nu
+
+
+def test_lr_dykstra_backend_parity_per_sweep():
+    """Cross-backend Dykstra: ≤1 ulp per sweep (the kernel's 128-padded
+    lane sums and online column renormalization reassociate vs XLA's
+    reductions — same contract as the sinkhorn kernels) with EXACTLY equal
+    iteration counts, for one sweep and for a full early-stopping run."""
+    sk, lk_q, lk_r, lk_g, mu, nu = _lr_problem(45, 60, 6, 51)
+    for iters, chunk, tol in [(1, 1, 0.0), (30, 10, 0.0), (400, 20, 1e-10)]:
+        x = sk.lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol,
+                              jnp.log(1e-10), backend="xla")
+        p = sk.lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol,
+                              jnp.log(1e-10), backend="pallas")
+        assert int(x[4]) == int(p[4])          # identical stop step
+        for xa, pa in zip(x[:4], p[:4]):       # q, r, g, err
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(xa),
+                                       rtol=1e-12, atol=1e-13)
+
+
+def test_lowrank_gw_pallas_matches_xla_with_annealing():
+    """End-to-end factored GW under ε-annealing + early stopping: the
+    backend changes which kernels run, never the control flow — outer AND
+    inner counts equal exactly, factors at ulp level."""
+    gx = _clustered(20, [[0.0, 0.0], [8.0, 0.0]], seed=0)
+    gy = _clustered(25, [[0.0, 0.0], [0.0, 9.0]], seed=1)
+    mu, nu = _unif(gx.size), _unif(gy.size)
+    base = GWConfig(eps=5e-2, outer_iters=20, tol=1e-6, eps_init=0.5,
+                    anneal_decay=0.7, sinkhorn_iters=100, plan="lowrank",
+                    plan_rank=8, lr_gamma=30.0)
+    x = entropic_gw(gx, gy, mu, nu,
+                    dataclasses.replace(base, lowrank_backend="xla"))
+    p = entropic_gw(gx, gy, mu, nu,
+                    dataclasses.replace(base, lowrank_backend="pallas"))
+    assert int(x.info.outer_iters) == int(p.info.outer_iters)
+    assert int(x.info.inner_iters) == int(p.info.inner_iters)
+    assert bool(x.info.converged) == bool(p.info.converged)
+    for name in ("q", "r", "g"):
+        np.testing.assert_allclose(np.asarray(getattr(p.coupling, name)),
+                                   np.asarray(getattr(x.coupling, name)),
+                                   rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(float(p.value), float(x.value), rtol=1e-10)
+
+
+def _count_pallas_calls(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for p in eqn.params.values():
+            for cand in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(cand, "jaxpr", None)
+                if inner is not None:
+                    n += _count_pallas_calls(inner)
+                elif hasattr(cand, "eqns"):
+                    n += _count_pallas_calls(cand)
+    return n
+
+
+def test_lowrank_pallas_sweep_is_one_kernel_per_factor_side():
+    """The tentpole's fusion contract, pinned on the JAXPR: under
+    ``backend="pallas"`` one Dykstra sweep lowers to EXACTLY TWO
+    pallas_call's — one fused pass per factor side — and every remaining
+    equation is (r,)-sized dual algebra.  No separate row-LSE/column-LSE
+    kernels, no XLA reduction over an (N, r) operand between them."""
+    import repro.core.sinkhorn as sk
+    _, lk_q, lk_r, lk_g, mu, nu = _lr_problem(40, 50, 5, 53)
+    state0, sweep, _ = sk._lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu,
+                                             jnp.log(1e-10), "pallas")
+    closed = jax.make_jaxpr(sweep)(state0)
+    assert _count_pallas_calls(closed.jaxpr) == 2, closed
+    # the XLA backend lowers the same sweep with NO kernel calls
+    _, sweep_x, _ = sk._lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu,
+                                          jnp.log(1e-10), "xla")[0:3]
+    assert _count_pallas_calls(jax.make_jaxpr(sweep_x)(state0).jaxpr) == 0
+
+
+def test_million_points_no_mn_array_with_kernel():
+    """The headline scale contract at N=10⁶ WITH the fused backend: the
+    traced program contains the two fused kernel calls per sweep and not
+    one (M,N)-sized intermediate anywhere (asserted on avals, no
+    execution)."""
+    n = 1_000_000
+    rng = np.random.default_rng(55)
+    from repro.core.geometry import LowRankGeometry
+    gx = LowRankGeometry(jnp.asarray(rng.random((n, 3))),
+                         jnp.asarray(rng.random((n, 3))))
+    gy = LowRankGeometry(jnp.asarray(rng.random((n, 3))),
+                         jnp.asarray(rng.random((n, 3))))
+    mu, nu = _unif(n), _unif(n)
+    cfg = GWConfig(eps=5e-2, outer_iters=2, sinkhorn_iters=10,
+                   sinkhorn_chunk=5, plan="lowrank", plan_rank=8,
+                   lowrank_backend="pallas")
+    closed = jax.make_jaxpr(
+        lambda mu, nu: entropic_gw(gx, gy, mu, nu, cfg))(mu, nu)
+    shapes = []
+    _all_aval_shapes(closed.jaxpr, shapes)
+    big = [s for s in shapes if len(s) >= 2 and int(np.prod(s)) >= n * n]
+    assert not big, f"(M,N)-sized intermediates with the kernel on: {big}"
+    assert _count_pallas_calls(closed.jaxpr) > 0
+
+
+def test_lowrank_pallas_no_recompile_across_retunes():
+    """The PR 5 contract extended to the factored kernels: with
+    ``lowrank_backend="pallas"`` every ε/tol/lr_gamma/annealing retune
+    rides SolveControls through ONE compiled executable; flipping the
+    backend knob is structural and costs exactly one more."""
+    _solve_stacked.clear_cache()
+    cfg = GWConfig(eps=5e-2, outer_iters=5, tol=1e-6, sinkhorn_iters=30,
+                   plan="lowrank", plan_rank=8, lowrank_backend="pallas")
+    probs = [(_cloud(20, seed=0), _cloud(24, seed=1), _unif(20), _unif(24))]
+    entropic_gw_batch(probs, cfg)
+    n0 = _solve_stacked._cache_size()
+    for ctl in [SolveControls.make(2e-2, 1e-6, 0.2, 0.7, lr_gamma=100.0),
+                SolveControls.make(5e-2, 1e-4, 5e-2, 0.5, lr_gamma=1.0),
+                SolveControls.make(1e-2, 0.0, 0.3, 0.9, lr_gamma=30.0),
+                SolveControls.make(3e-2, 1e-8, 0.1, 0.8, lr_gamma=10.0),
+                SolveControls.make(2e-2, 1e-7, 0.4, 0.6, lr_gamma=50.0)]:
+        entropic_gw_batch(probs, cfg, controls=ctl)
+        assert _solve_stacked._cache_size() == n0
+    entropic_gw_batch(probs, dataclasses.replace(cfg, eps=1e-2, tol=1e-5,
+                                                 lr_gamma=80.0))
+    assert _solve_stacked._cache_size() == n0
+    entropic_gw_batch(probs, dataclasses.replace(cfg,
+                                                 lowrank_backend="xla"))
+    assert _solve_stacked._cache_size() == n0 + 1
+
+
+def test_lowrank_pallas_zero_mass_padded_lanes():
+    """Ragged factored problems padded with zero-mass atoms — including a
+    side > 128 so whole kernel row-blocks are dead — must solve NaN-free
+    through the fused kernels and match BOTH the unbatched pallas solve
+    (exact iteration counts) and the xla batch lane for lane."""
+    cfg_p = GWConfig(eps=5e-2, outer_iters=6, tol=1e-6, sinkhorn_iters=60,
+                     plan="lowrank", plan_rank=8, lowrank_backend="pallas")
+    cfg_x = dataclasses.replace(cfg_p, lowrank_backend="xla")
+    probs = []
+    for i, (m, n) in enumerate([(140, 90), (100, 130), (90, 90)]):
+        probs.append((_cloud(m, seed=i), _cloud(n, seed=100 + i),
+                      _unif(m), _unif(n)))
+    out_p = entropic_gw_batch(probs, cfg_p, pad_to=(192, 192))
+    out_x = entropic_gw_batch(probs, cfg_x, pad_to=(192, 192))
+    for bp, bx, pr in zip(out_p, out_x, probs):
+        for leaf in (bp.coupling.q, bp.coupling.r, bp.coupling.g):
+            assert not bool(jnp.isnan(leaf).any())
+        assert bp.coupling.q.shape[0] == pr[2].shape[0]   # sliced back
+        ref = entropic_gw(*pr, cfg_p)
+        assert int(bp.info.outer_iters) == int(ref.info.outer_iters)
+        assert int(bp.info.inner_iters) == int(ref.info.inner_iters)
+        np.testing.assert_allclose(np.asarray(bp.coupling.q),
+                                   np.asarray(ref.coupling.q), atol=1e-10)
+        assert int(bp.info.inner_iters) == int(bx.info.inner_iters)
+        np.testing.assert_allclose(np.asarray(bp.coupling.q),
+                                   np.asarray(bx.coupling.q),
+                                   rtol=1e-10, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.float64, 1e-12)])
+def test_lr_mirror_step_dtype_preserved_both_backends(dtype, tol):
+    """f32 stays f32 / f64 stays f64 through a full mirror step under
+    either backend (the x64 test context must not promote, the kernel
+    must not downcast), with dtype-scaled cross-backend parity."""
+    import repro.core.sinkhorn as sk
+    rng = np.random.default_rng(57)
+    m, n, r = 30, 40, 4
+    mu = jnp.full((m,), 1.0 / m, dtype)
+    nu = jnp.full((n,), 1.0 / n, dtype)
+    coup = lowrank_init(mu, nu, r)
+    gq = jnp.asarray(rng.normal(size=(m, r)), dtype)
+    gr = jnp.asarray(rng.normal(size=(n, r)), dtype)
+    gg = jnp.asarray(rng.normal(size=(r,)), dtype)
+    outs = {}
+    for be in ("xla", "pallas"):
+        q, r2, g, err, used = sk.lr_mirror_step(
+            coup.q.astype(dtype), coup.r.astype(dtype),
+            coup.g.astype(dtype), gq, gr, gg, mu, nu, dtype(0.05),
+            dtype(30.0), 12, 4, 0.0, 1e-10, backend=be)
+        assert q.dtype == dtype and r2.dtype == dtype and g.dtype == dtype
+        outs[be] = (q, r2, g)
+    for a, b in zip(outs["xla"], outs["pallas"]):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=tol,
+                                   atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# (8) k-means factor seeding
+# ---------------------------------------------------------------------------
+
+def test_kmeans_init_feasible_deterministic_and_zero_mass_exact():
+    gx = _clustered(10, [[0.0, 0.0], [8.0, 0.0]], seed=7)
+    gy = _clustered(12, [[0.0, 0.0], [0.0, 9.0]], seed=8)
+    mu, nu = _unif(gx.size), _unif(gy.size)
+    c1 = lowrank_init(mu, nu, 4, method="kmeans", geom_x=gx, geom_y=gy)
+    c2 = lowrank_init(mu, nu, 4, method="kmeans", geom_x=gx, geom_y=gy)
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(c1.q.sum(1), mu, atol=1e-14)
+    np.testing.assert_allclose(c1.r.sum(1), nu, atol=1e-14)
+    assert float(c1.g.min()) > 0.0
+    np.testing.assert_allclose(float(c1.g.sum()), 1.0, atol=1e-12)
+    # zero-mass atoms: exactly-zero factor rows (padding exactness)
+    mu0 = mu.at[-3:].set(0.0)
+    c0 = lowrank_init(mu0 / mu0.sum(), nu, 4, method="kmeans", geom_x=gx,
+                      geom_y=gy)
+    assert float(jnp.abs(c0.q[-3:]).max()) == 0.0
+    # the seeding needs geometry embeddings — and says so
+    with pytest.raises(ValueError, match="kmeans"):
+        lowrank_init(mu, nu, 4, method="kmeans")
+    with pytest.raises(ValueError, match="unknown lowrank"):
+        lowrank_init(mu, nu, 4, method="pca")
+    with pytest.raises(ValueError, match="unknown lowrank"):
+        GWConfig(lowrank_init="pca")
+
+
+def test_kmeans_and_rank2_seeds_reach_same_energy_basin():
+    """S2's property: on clustered inputs (where the optimum is genuinely
+    low-rank) the k-means-seeded and rank2-seeded solves must land in the
+    SAME energy basin — seeding changes the starting point, not the
+    answer.  Swept over problem draws, not one lucky instance."""
+    for seed in (0, 1, 2):
+        gx = _clustered(15, [[0.0, 0.0], [9.0, 0.0]], seed=seed)
+        gy = _clustered(18, [[0.0, 0.0], [0.0, 8.0]], seed=100 + seed)
+        mu, nu = _unif(gx.size), _unif(gy.size)
+        base = GWConfig(eps=5e-2, outer_iters=200, tol=1e-7, eps_init=0.5,
+                        anneal_decay=0.7, sinkhorn_iters=400,
+                        plan="lowrank", plan_rank=8, lr_gamma=30.0)
+        e_r2 = float(entropic_gw(gx, gy, mu, nu, base).value)
+        e_km = float(entropic_gw(
+            gx, gy, mu, nu,
+            dataclasses.replace(base, lowrank_init="kmeans")).value)
+        assert abs(e_km - e_r2) / max(abs(e_r2), 1e-12) <= 0.02, (
+            seed, e_km, e_r2)
+
+
+def test_kmeans_seeding_matches_across_batched_and_unbatched():
+    """The batched path converts geometries BEFORE seeding, so k-means
+    seeds derive from the same embeddings either way; padded lanes then
+    match the unbatched solve."""
+    cfg = GWConfig(eps=5e-2, outer_iters=6, tol=1e-6, sinkhorn_iters=60,
+                   plan="lowrank", plan_rank=6, lowrank_init="kmeans")
+    probs = [(_clustered(12, [[0.0, 0.0], [7.0, 0.0]], seed=9),
+              _clustered(14, [[0.0, 0.0], [0.0, 7.0]], seed=10),
+              _unif(24), _unif(28))]
+    batch = entropic_gw_batch(probs, cfg, pad_to=(32, 32))[0]
+    ref = entropic_gw(*probs[0], cfg)
+    assert int(batch.info.outer_iters) == int(ref.info.outer_iters)
+    np.testing.assert_allclose(np.asarray(batch.coupling.q),
+                               np.asarray(ref.coupling.q), atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# (9) plan_rank="auto": residual-driven rank growth
+# ---------------------------------------------------------------------------
+
+def test_auto_rank_solves_and_accumulates_counts():
+    gx = _clustered(15, [[0.0, 0.0], [8.0, 0.0]], seed=11)
+    gy = _clustered(15, [[0.0, 0.0], [0.0, 9.0]], seed=12)
+    mu, nu = _unif(gx.size), _unif(gy.size)
+    cfg = GWConfig(eps=5e-2, outer_iters=60, tol=1e-6, eps_init=0.3,
+                   anneal_decay=0.7, sinkhorn_iters=200, plan="lowrank",
+                   plan_rank="auto", plan_rank_max=32, lr_gamma=30.0)
+    res = entropic_gw(gx, gy, mu, nu, cfg)
+    assert isinstance(res.coupling, LowRankCoupling)
+    assert 8 <= res.coupling.rank <= 32
+    assert int(res.info.outer_iters) >= 1
+    assert np.isfinite(float(res.value))
+    # marginals survive whatever restarts happened
+    p = res.coupling.dense()
+    assert float(jnp.abs(p.sum(1) - mu).sum()) < 1e-5
+
+
+def test_auto_rank_rejected_where_it_cannot_work():
+    cfg = GWConfig(plan="lowrank", plan_rank="auto")
+    probs = [(_cloud(10, seed=0), _cloud(10, seed=1), _unif(10), _unif(10))]
+    with pytest.raises(ValueError, match="auto"):
+        entropic_gw_batch(probs, cfg)
+    with pytest.raises(ValueError, match="auto"):
+        jax.jit(lambda mu, nu: entropic_gw(probs[0][0], probs[0][1], mu, nu,
+                                           cfg))(_unif(10), _unif(10))
+    with pytest.raises(ValueError, match="plan_rank"):
+        GWConfig(plan_rank="adaptive")
+
+
+def test_pad_rank_warm_start_is_feasible_and_near_identity():
+    mu, nu = _unif(9), _unif(11)
+    c = lowrank_init(mu, nu, 4)
+    cw = c.pad_rank(8, mu, nu, blend=0.05)
+    assert cw.rank == 8
+    np.testing.assert_allclose(cw.q.sum(1), mu, atol=1e-14)
+    np.testing.assert_allclose(cw.r.sum(1), nu, atol=1e-14)
+    np.testing.assert_allclose(cw.q.sum(0), cw.g, atol=1e-14)
+    np.testing.assert_allclose(cw.r.sum(0), cw.g, atol=1e-14)
+    # the widened plan is ≈ the old plan (blend-sized perturbation)
+    np.testing.assert_allclose(np.asarray(cw.dense()), np.asarray(c.dense()),
+                               atol=0.06 * float(c.dense().max()))
+    # zero-mass rows stay exactly zero through growth
+    mu0 = (mu.at[-2:].set(0.0))
+    mu0 = mu0 / mu0.sum()
+    c0 = lowrank_init(mu0, nu, 4).pad_rank(8, mu0, nu)
+    assert float(jnp.abs(c0.q[-2:]).max()) == 0.0
+    # no growth requested → the same object
+    assert c.pad_rank(4, mu, nu) is c
+    assert c.pad_rank(2, mu, nu) is c
+
+
+# ---------------------------------------------------------------------------
+# (10) FGW through the batched + serving paths
+# ---------------------------------------------------------------------------
+
+def _fgw_probs(sizes, seed0):
+    probs, feats = [], []
+    for i, (m, n) in enumerate(sizes):
+        rng = np.random.default_rng(seed0 + i)
+        probs.append((_cloud(m, seed=seed0 + i), _cloud(n, seed=77 + i),
+                      _unif(m), _unif(n)))
+        feats.append(jnp.asarray(rng.random((m, n))))
+    return probs, feats
+
+
+@pytest.mark.parametrize("plan", ["full", "lowrank"])
+def test_fgw_batch_padded_matches_unbatched(plan, **_):
+    cfg = FGWConfig(eps=5e-2, outer_iters=6, tol=1e-6, sinkhorn_iters=60,
+                    theta=0.4, plan=plan, plan_rank=6)
+    probs, feats = _fgw_probs([(20, 26), (26, 18), (24, 24)], 60)
+    batch = entropic_gw_batch(probs, cfg, pad_to=(32, 32), features=feats)
+    for b, p, f in zip(batch, probs, feats):
+        ref = entropic_fgw(p[0], p[1], f, p[2], p[3], cfg)
+        assert int(b.info.outer_iters) == int(ref.info.outer_iters)
+        assert int(b.info.inner_iters) == int(ref.info.inner_iters)
+        np.testing.assert_allclose(float(b.value), float(ref.value),
+                                   rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(b.coupling.dense()),
+                                   np.asarray(ref.coupling.dense()),
+                                   rtol=1e-8, atol=1e-11)
+
+
+def test_fgw_batch_feature_validation():
+    probs, feats = _fgw_probs([(10, 12), (12, 10)], 70)
+    cfg = FGWConfig(outer_iters=2, sinkhorn_iters=10)
+    with pytest.raises(ValueError, match="mixed"):
+        entropic_gw_batch(probs, cfg, features=[feats[0], None])
+    with pytest.raises(ValueError, match="shape"):
+        entropic_gw_batch(probs, cfg, features=[feats[0].T, feats[1].T])
+    with pytest.raises(ValueError, match="FGWConfig"):
+        entropic_gw_batch(probs, GWConfig(outer_iters=2, sinkhorn_iters=10),
+                          features=feats)
+
+
+@pytest.mark.parametrize("plan", ["full", "lowrank"])
+def test_fgw_serving_continuous_equals_barrier_and_unbatched(plan):
+    """S1: FGW requests ride the SAME continuous-batching scheduler —
+    ``submit(feature_cost=..., theta=...)`` buckets them apart from GW,
+    and scheduling stays invariant: continuous == barrier, both matching
+    the unbatched `entropic_fgw` with exact iteration counts.  A plain GW
+    request shares the flush to prove the buckets coexist."""
+    solver = GWConfig(eps=5e-2, outer_iters=8, tol=1e-6, sinkhorn_iters=60,
+                      plan=plan, plan_rank=6)
+    probs, feats = _fgw_probs([(20, 26), (26, 18), (24, 24)], 80)
+    theta = 0.35
+    outs = {}
+    for sched in ("continuous", "barrier"):
+        eng = GWEngine(GWServeConfig(solver=solver, max_batch=4,
+                                     size_bucket=32, scheduler=sched,
+                                     segment_iters=3))
+        rids = [eng.submit(*p, feature_cost=f, theta=theta)
+                for p, f in zip(probs, feats)]
+        rid_gw = eng.submit(*probs[0])
+        res = eng.flush()
+        assert sorted(res) == sorted(rids + [rid_gw])
+        outs[sched] = [res[r] for r in rids]
+    for c, b in zip(outs["continuous"], outs["barrier"]):
+        assert int(c.info.inner_iters) == int(b.info.inner_iters)
+        np.testing.assert_allclose(float(c.value), float(b.value),
+                                   rtol=1e-11, atol=1e-13)
+    fcfg = FGWConfig(**{f.name: getattr(solver, f.name)
+                        for f in dataclasses.fields(GWConfig)}, theta=theta)
+    for c, p, f in zip(outs["continuous"], probs, feats):
+        ref = entropic_fgw(p[0], p[1], f, p[2], p[3], fcfg)
+        assert int(c.info.outer_iters) == int(ref.info.outer_iters)
+        assert int(c.info.inner_iters) == int(ref.info.inner_iters)
+        np.testing.assert_allclose(float(c.value), float(ref.value),
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_fgw_submit_validation():
+    eng = GWEngine(GWServeConfig(solver=_SERVE_SOLVER))
+    p = (_cloud(10, seed=0), _cloud(12, seed=1), _unif(10), _unif(12))
+    with pytest.raises(ValueError, match="theta"):
+        eng.submit(*p, theta=0.5)
+    with pytest.raises(ValueError, match="feature cost shape"):
+        eng.submit(*p, feature_cost=jnp.zeros((12, 10)))
+
+
+def test_serve_config_lowrank_backend_override():
+    solver = GWConfig(lowrank_backend="xla")
+    assert (GWServeConfig(solver=solver).solver_cfg().lowrank_backend
+            == "xla")
+    assert (GWServeConfig(solver=solver, lowrank_backend="pallas")
+            .solver_cfg().lowrank_backend == "pallas")
+    # the default solver cfg advertises auto-resolution
+    assert GWConfig().lowrank_backend == "auto"
+    with pytest.raises(ValueError, match="unknown lowrank backend"):
+        GWConfig(lowrank_backend="cuda")

@@ -327,12 +327,12 @@ def test_continuous_bucket_failure_isolates_and_requeues(monkeypatch):
     real = engine_mod._segment_stacked
     calls = {"n": 0}
 
-    def failing(gx, gy, mus, nus, ctls, carry, cfg, segment):
+    def failing(gx, gy, mus, nus, feats, ctls, carry, cfg, segment):
         if mus.shape[1] >= 24:        # only the big bucket
             calls["n"] += 1
             if calls["n"] >= 2:       # fail on its SECOND segment dispatch
                 raise RuntimeError("injected mid-solve failure")
-        return real(gx, gy, mus, nus, ctls, carry, cfg, segment)
+        return real(gx, gy, mus, nus, feats, ctls, carry, cfg, segment)
 
     monkeypatch.setattr(engine_mod, "_segment_stacked", failing)
     out = eng.flush()                 # must NOT raise: good bucket solved
