@@ -77,6 +77,19 @@ class FullCoupling(Coupling):
     def slice_to(self, m: int, n: int) -> "FullCoupling":
         return FullCoupling(self.plan[:m, :n], self.f[:m], self.g[:n])
 
+    def pad_to(self, m: int, n: int) -> "FullCoupling":
+        """The inverse of ``slice_to``: this coupling embedded in an (m, n)
+        bucket.  Padded atoms carry zero plan mass and −inf potentials —
+        exactly their value at the log-domain Sinkhorn fixed point, so a
+        padded warm start resumes as if the padding were never there (the
+        plan-cache near-hit path drops cached couplings into slot batches
+        through this)."""
+        pm, pn = m - self.plan.shape[0], n - self.plan.shape[1]
+        return FullCoupling(
+            jnp.pad(self.plan, ((0, pm), (0, pn))),
+            jnp.pad(self.f, (0, pm), constant_values=-jnp.inf),
+            jnp.pad(self.g, (0, pn), constant_values=-jnp.inf))
+
     def dense(self):
         return self.plan
 
@@ -116,6 +129,14 @@ class LowRankCoupling(Coupling):
 
     def slice_to(self, m: int, n: int) -> "LowRankCoupling":
         return LowRankCoupling(self.q[:m], self.r[:n], self.g)
+
+    def pad_to(self, m: int, n: int) -> "LowRankCoupling":
+        """The inverse of ``slice_to``: zero factor rows for the padded
+        (zero-mass) atoms — the factored path's exact padding convention
+        (see module docstring), used by the plan cache's warm starts."""
+        return LowRankCoupling(
+            jnp.pad(self.q, ((0, m - self.q.shape[0]), (0, 0))),
+            jnp.pad(self.r, ((0, n - self.r.shape[0]), (0, 0))), self.g)
 
     def dense(self):
         return (self.q / self.g[None, :]) @ self.r.T

@@ -465,10 +465,9 @@ def _init_lane(geom_x, geom_y, mu, nu, cfg: GWConfig) -> MirrorCarry:
                                     geom_y=geom_y), cfg.outer_iters)
 
 
-@partial(jax.jit, static_argnames=("cfg", "segment"))
-def _segment_stacked(geoms_x, geoms_y, mus, nus, feats,
-                     controls: SolveControls, carry: MirrorCarry,
-                     cfg: GWConfig, segment: int | None):
+def _segment_stacked_impl(geoms_x, geoms_y, mus, nus, feats,
+                          controls: SolveControls, carry: MirrorCarry,
+                          cfg: GWConfig, segment: int | None):
     """Advance every lane of a stacked carry by ≤ ``segment`` outer steps
     and return (carry, values) — ``values`` is each lane's GW (or FGW, when
     ``feats`` carries a stacked feature cost) energy at its current plan
@@ -477,7 +476,12 @@ def _segment_stacked(geoms_x, geoms_y, mus, nus, feats,
     This is the continuous-batching engine's dispatch unit: the jit cache
     keys on (geometry specs, padded shapes, batch width, segment, structural
     cfg), so a serving stream compiles one executable per bucket × batch
-    width and reuses it for every dispatch."""
+    width and reuses it for every dispatch.  Jitted twice below: the plain
+    wrapper (the public segmented-batch surface, where the caller may hold
+    on to ``resume_state``) and a carry-DONATING wrapper for the pipelined
+    serving scheduler, whose dispatch loop rebinds the carry every segment
+    and never reuses the old one — donation lets XLA alias the in/out carry
+    buffers, so the harvest/refill cycle is copy-free."""
     def one(gx, gy, mu, nu, feat, ctl, c):
         # constant_term is recomputed per dispatch ON PURPOSE: it is
         # deterministic in (geometry, mu, nu), and evaluating it inside the
@@ -521,6 +525,17 @@ def _segment_stacked(geoms_x, geoms_y, mus, nus, feats,
 
     return jax.vmap(one)(geoms_x, geoms_y, mus, nus, feats, controls,
                          carry)
+
+
+_segment_stacked = jax.jit(_segment_stacked_impl,
+                           static_argnames=("cfg", "segment"))
+#: the donated twin: identical program, but the carry argument is consumed
+#: (its buffers alias the output carry's).  ONLY for callers that rebind —
+#: `entropic_gw_batch` must keep the plain wrapper, since its caller may
+#: legitimately hold the `resume_state` it passed in.
+_segment_stacked_donated = jax.jit(_segment_stacked_impl,
+                                   static_argnames=("cfg", "segment"),
+                                   donate_argnames=("carry",))
 
 
 def _pad_to(vec, size: int):

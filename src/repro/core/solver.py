@@ -170,7 +170,14 @@ class MirrorCarry:
     rest are the driver's counters.  A carry advanced ``segment`` steps at a time through
     ``mirror_descent_segment`` visits the same iterates, bit for bit, as one
     uninterrupted run — ε-annealing and the inner-tolerance schedule depend
-    only on the carried ``t``."""
+    only on the carried ``t``.
+
+    Because the whole loop state is this one pytree, a segmented dispatch
+    can DONATE it (``jax.jit(..., donate_argnames=("carry",))``): the input
+    and output carries have identical shapes/dtypes, so XLA aliases the
+    buffers and the refill-scatter/segment cycle runs copy-free.  A donated
+    carry is consumed — callers must rebind to the returned carry and never
+    touch the old reference again (its buffers are deleted)."""
 
     state: object            # solver state pytree (plan, duals, ...)
     t: jax.Array             # int32: outer steps executed so far
@@ -178,6 +185,16 @@ class MirrorCarry:
     err: jax.Array           # residual after the last executed step
     done: jax.Array          # bool: converged (never set under tol=0)
     trace: jax.Array         # (outer_cap,) per-step residual; NaN past t
+
+    def dispatch_ready(self) -> bool:
+        """True once every buffer of this carry has materialized — i.e. the
+        async dispatch that produced it has finished on the device.  The
+        pipelined serving scheduler polls this to harvest completed bucket
+        segments without blocking on the ones still computing (JAX arrays
+        are futures under async dispatch; ``is_ready`` never blocks)."""
+        return all(leaf.is_ready()
+                   for leaf in jax.tree_util.tree_leaves(self)
+                   if hasattr(leaf, "is_ready"))
 
     def tree_flatten(self):
         return (self.state, self.t, self.inner, self.err, self.done,

@@ -1,7 +1,20 @@
-"""Batched serving driver.
+"""Batched serving drivers.
+
+LM generation (the original driver):
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \\
       --batch 4 --prompt-len 8 --max-new 32
+
+GW serving — a standing event loop over a synthetic mixed-difficulty
+request stream, through `GWEngine.serve` (admission, dispatch, and harvest
+interleaved; pipelined across buckets; plan cache enabled):
+
+  PYTHONPATH=src python -m repro.launch.serve --gw --requests 24 \\
+      --repeat-frac 0.5 --cache-capacity 64
+
+``run_event_loop`` (re-exported from `repro.serve.engine`) is the library
+surface: feed any iterable of problems to an engine and collect results as
+they complete.
 """
 from __future__ import annotations
 
@@ -15,11 +28,74 @@ import numpy as np
 from repro import configs
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import lm
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import (Engine, GWEngine, GWServeConfig, ServeConfig,
+                                run_event_loop)
+
+__all__ = ["main", "run_event_loop", "gw_main"]
+
+
+def _gw_stream(n_requests: int, repeat_frac: float, seed: int):
+    """A synthetic serving stream: mixed-size point-cloud GW problems, a
+    ``repeat_frac`` fraction of them exact repeats of earlier requests —
+    the traffic shape the plan cache exists for."""
+    from repro.core.geometry import PointCloudGeometry
+
+    rng = np.random.default_rng(seed)
+    sizes = [(12, 16), (16, 12), (24, 24), (8, 20)]
+    seen: list[tuple] = []
+    for i in range(n_requests):
+        if seen and rng.random() < repeat_frac:
+            yield seen[rng.integers(len(seen))]
+            continue
+        m, n = sizes[int(rng.integers(len(sizes)))]
+        mu = rng.uniform(0.5, 1.5, m)
+        nu = rng.uniform(0.5, 1.5, n)
+        prob = (PointCloudGeometry(jax.numpy.asarray(
+                    rng.normal(size=(m, 3)), jax.numpy.float32)),
+                PointCloudGeometry(jax.numpy.asarray(
+                    rng.normal(size=(n, 3)), jax.numpy.float32)),
+                jax.numpy.asarray(mu / mu.sum()),
+                jax.numpy.asarray(nu / nu.sum()))
+        seen.append(prob)
+        yield prob
+
+
+def gw_main(args) -> None:
+    """Drive `GWEngine.serve` over the synthetic stream and report the
+    pipeline/cache telemetry the engine collected."""
+    from repro.core.gw import GWConfig
+
+    solver = GWConfig(eps=2e-1, outer_iters=60, sinkhorn_iters=200,
+                      sinkhorn_chunk=25, backend="dense", eps_init=1.0,
+                      anneal_decay=0.7)
+    engine = GWEngine(GWServeConfig(
+        solver=solver, tol=5e-4, max_batch=args.batch, size_bucket=16,
+        scheduler="pipeline", max_inflight_buckets=args.inflight,
+        cache_capacity=args.cache_capacity, cache_near_tol=args.near_tol))
+    t0 = time.time()
+    done = run_event_loop(
+        engine, _gw_stream(args.requests, args.repeat_frac, args.seed),
+        on_result=lambda rid, res: print(
+            f"request {rid}: value={float(res.value):.6f} "
+            f"outer={int(res.info.outer_iters)} "
+            f"converged={bool(res.info.converged)}"))
+    dt = time.time() - t0
+    s = engine.stats
+    print(f"{len(done)} results in {dt:.2f}s "
+          f"({len(done) / max(dt, 1e-9):.1f} req/s)")
+    print(f"dispatches={s['dispatches']} depth={s['dispatch_depth']} "
+          f"device_idle={s['device_idle_s']:.3f}s "
+          f"cache hits/warm/miss={s['cache_hits']}/"
+          f"{s['cache_warm_starts']}/{s['cache_misses']}")
+    if engine.last_errors:
+        print(f"{len(engine.last_errors)} bucket failures: "
+              f"{[k for k, _ in engine.last_errors]}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--gw", action="store_true",
+                    help="serve a synthetic GW request stream instead of LM")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -30,7 +106,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params instead of random init")
     ap.add_argument("--seed", type=int, default=0)
+    # GW event-loop knobs
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--repeat-frac", type=float, default=0.5)
+    ap.add_argument("--inflight", type=int, default=2)
+    ap.add_argument("--cache-capacity", type=int, default=64)
+    ap.add_argument("--near-tol", type=float, default=1e-6)
     args = ap.parse_args(argv)
+
+    if args.gw:
+        gw_main(args)
+        return
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))

@@ -1,0 +1,164 @@
+"""Solved-plan cache keyed by geometry fingerprints.
+
+At millions-of-users traffic, identical or near-identical geometries recur
+constantly (the same grids, the same embedding clouds, marginals that drift
+a little between requests).  The cache exploits two facts:
+
+  * A GW solve is a *pure function* of (geometry content, marginals,
+    feature cost, solve knobs, structural config) — an exact repeat can be
+    answered from the stored `GWResult` without touching the device at all.
+  * Solved plans and potentials are STABLE under small perturbations of the
+    geometry/marginals (Rioux et al., *Entropic Gromov-Wasserstein
+    Distances: Stability and Algorithms*), so warm-starting a near-repeat
+    from a cached coupling is principled, not a heuristic: the solve resumes
+    inside the basin the cached (possibly ε-annealed) solve already found,
+    and converges in a handful of outer steps instead of re-running the
+    whole annealing ramp.
+
+A :class:`Fingerprint` has three layers:
+
+``static``  structural identity — the geometry specs (class, true sizes,
+            static params), the resolved plan representation, the objective
+            (GW vs FGW and its θ), and the solver config's ``static_key()``
+            (backends, iteration caps, plan rank, ...).  Requests whose
+            static parts differ can NEVER share an entry: a ``plan`` or
+            ``*_backend`` flip is a different program, so flips cannot
+            cross-contaminate keys.
+``exact``   a blake2b digest over the raw bytes (dtype + shape + data) of
+            every content leaf — geometry pytree leaves (grid spacings,
+            cost factors, points), marginals, the feature cost — plus the
+            resolved value knobs (ε, tol, ε₀, decay, inner_loosen, γ).
+            Matching here means the solve would be identical: the cached
+            result is returned bit-for-bit, no recompute.
+``near``    the same byte stream with every float quantized to a
+            ``near_tol`` grid first (``round(x / near_tol)``).  Two
+            requests whose contents agree to within ~``near_tol`` land on
+            the same digest (boundary-straddling values may not — that is
+            fine: a cache miss is always correct, only a little slower),
+            which makes near-duplicate detection O(content size) with no
+            pairwise search.  A near hit warm-starts the solve from the
+            cached coupling through the solver's `MirrorCarry` resume
+            surface.
+
+Eviction is LRU over exact entries (``capacity`` of them); the near index
+maps quantized digests to the most recently stored exact entry for that
+neighbourhood and is pruned with its entries.  Counters (`hits`,
+`near_hits`, `misses`, `evictions`) accumulate over the cache's lifetime;
+`GWEngine.stats` additionally counts per-flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """A request's cache identity (see module docstring).  ``near`` is None
+    when the cache was built with ``near_tol=0`` (exact-only mode)."""
+
+    static: tuple
+    exact: str
+    near: str | None = None
+
+
+def _hash_leaf(h, arr, quantum: float | None = None) -> None:
+    """Feed one content leaf into a digest: dtype and shape always (an f32
+    and an f64 solve differ even on equal values), bytes raw or quantized.
+    Quantization rounds in f64 regardless of storage dtype, so an f32 leaf
+    and its f64 round-trip stay neighbours."""
+    a = np.asarray(arr)
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    if quantum is None:
+        h.update(a.tobytes())
+    else:
+        q = np.round(a.astype(np.float64) / quantum)
+        # quantized NaNs/infs keep their identity (NaN != NaN would other-
+        # wise hash unstably through astype(int))
+        h.update(np.nan_to_num(q, nan=np.inf).astype(np.float64).tobytes())
+
+
+def fingerprint(static: tuple, leaves, knobs, near_tol: float = 0.0
+                ) -> Fingerprint:
+    """Fingerprint a request: ``static`` is the structural tuple, ``leaves``
+    the content arrays (geometry leaves, marginals, feature cost), ``knobs``
+    the resolved value-knob floats.  ``near_tol > 0`` adds the quantized
+    digest that enables warm-start near hits."""
+    knobs = np.asarray(knobs, np.float64)
+    exact = hashlib.blake2b(digest_size=16)
+    for a in leaves:
+        _hash_leaf(exact, a)
+    _hash_leaf(exact, knobs)
+    near = None
+    if near_tol > 0.0:
+        nh = hashlib.blake2b(digest_size=16)
+        for a in leaves:
+            _hash_leaf(nh, a, near_tol)
+        _hash_leaf(nh, knobs, near_tol)
+        near = nh.hexdigest()
+    return Fingerprint(static, exact.hexdigest(), near)
+
+
+class PlanCache:
+    """LRU cache of solved plans, keyed by :class:`Fingerprint`.
+
+    ``lookup`` returns ``("exact", result)`` (bit-identical stored
+    `GWResult`, zero device work), ``("near", result)`` (same static
+    identity, content within ``near_tol`` — warm-start material), or
+    ``(None, None)``.  ``store`` inserts/refreshes an entry and evicts the
+    least recently used beyond ``capacity``.
+    """
+
+    def __init__(self, capacity: int, near_tol: float = 0.0):
+        if capacity <= 0:
+            raise ValueError(f"cache capacity must be positive, got "
+                             f"{capacity}")
+        if near_tol < 0.0:
+            raise ValueError(f"near_tol must be >= 0, got {near_tol}")
+        self.capacity = int(capacity)
+        self.near_tol = float(near_tol)
+        self._entries: OrderedDict[tuple, object] = OrderedDict()
+        self._near_index: dict[tuple, tuple] = {}
+        self.hits = 0
+        self.near_hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, fp: Fingerprint):
+        key = (fp.static, fp.exact)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return "exact", entry
+        if fp.near is not None:
+            ekey = self._near_index.get((fp.static, fp.near))
+            if ekey is not None:
+                entry = self._entries.get(ekey)
+                if entry is not None:
+                    self._entries.move_to_end(ekey)
+                    self.near_hits += 1
+                    return "near", entry
+        self.misses += 1
+        return None, None
+
+    def store(self, fp: Fingerprint, result) -> None:
+        key = (fp.static, fp.exact)
+        self._entries[key] = result
+        self._entries.move_to_end(key)
+        if fp.near is not None:
+            # latest-wins: the newest solve of a neighbourhood is the best
+            # warm-start source for the next near-repeat
+            self._near_index[(fp.static, fp.near)] = key
+        while len(self._entries) > self.capacity:
+            evicted, _ = self._entries.popitem(last=False)
+            self.evictions += 1
+            self._near_index = {nk: ek for nk, ek in self._near_index.items()
+                                if ek != evicted}

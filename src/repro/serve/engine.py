@@ -37,13 +37,32 @@ pre-segment flush-barrier path (one `entropic_gw_batch` per chunk, every
 chunk running until its slowest lane finishes) is kept as
 ``scheduler="barrier"`` — the baseline `benchmarks/serve_bench.py` measures
 against.
+
+``scheduler="pipeline"`` lifts the same per-bucket loop into a multi-bucket
+ASYNC dispatcher: segment dispatches for different buckets are issued
+back-to-back (JAX arrays are futures under async dispatch — issuing never
+blocks), the host harvests whichever bucket's dispatch is ready first
+(`MirrorCarry.dispatch_ready`, a non-blocking poll), and each harvested
+bucket immediately re-issues its next segment, so host-side
+harvest/refill bookkeeping for one bucket overlaps device compute for the
+others.  In-flight depth is bounded by ``max_inflight_buckets``; pipelined
+dispatches DONATE their carry buffers (``donate_carries``), so the
+refill-scatter/segment cycle is copy-free.  Scheduling still never changes
+results — each bucket walks the identical per-bucket segment sequence, only
+the interleaving across buckets differs.  `GWEngine.serve` runs the same
+machinery as a standing event loop (admission, dispatch, harvest as
+interleaved phases over a request stream), and a geometry-fingerprint
+`repro.serve.cache.PlanCache` (``cache_capacity``/``cache_near_tol``) short-
+circuits exact repeats and warm-starts near repeats before any bucket is
+touched.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
-from typing import Callable, Optional
+import time
+from typing import Callable, Iterable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,11 +70,14 @@ import numpy as np
 
 from repro.core.geometry import as_geometry
 from repro.core.gw import (GWConfig, GWResult, _init_lane, _init_stacked,
-                           _result_of, _segment_stacked, entropic_gw_batch,
+                           _result_of, _segment_stacked,
+                           _segment_stacked_donated, entropic_gw_batch,
                            stack_problems)
-from repro.core.solver import MirrorCarry, SolveControls, info_of
+from repro.core.solver import (MirrorCarry, SolveControls, info_of,
+                               init_carry)
 from repro.models import lm
 from repro.models.common import ModelConfig
+from repro.serve.cache import Fingerprint, PlanCache, fingerprint
 
 
 @dataclasses.dataclass
@@ -119,6 +141,12 @@ class GWServeConfig:
     tol: float | None = None
     #: "continuous" — slot-based scheduler: bounded segments of outer steps
     #: per dispatch, converged lanes harvested and refilled between segments.
+    #: "pipeline" — the same per-bucket loop, but segment dispatches for
+    #: DIFFERENT buckets are issued back-to-back via JAX async dispatch and
+    #: harvested as their futures become ready, so host bookkeeping for one
+    #: bucket overlaps device compute for the others (carry buffers are
+    #: donated — see ``donate_carries``).  Results are identical to
+    #: "continuous"/"barrier"; only wall-clock changes.
     #: "barrier" — the pre-segment path: chunked `entropic_gw_batch` calls,
     #: each chunk running until its slowest lane finishes.
     scheduler: str = "continuous"
@@ -154,6 +182,29 @@ class GWServeConfig:
     #: requests ride the same admission queue/scheduler as small ones —
     #: they simply land in a "lowrank" bucket with O(N(r+d)) lanes.
     lowrank_above: int | None = None
+    #: pipeline scheduler: number of buckets allowed a dispatch in flight
+    #: simultaneously.  2 already overlaps each bucket's host-side harvest
+    #: with the other's device compute; deeper helps when many buckets have
+    #: short segments.
+    max_inflight_buckets: int = 2
+    #: pipeline scheduler: donate `MirrorCarry` buffers to each segment
+    #: dispatch (and the refill scatter), so XLA aliases the in/out carry
+    #: and the harvest/refill cycle never copies the batch state.  The
+    #: continuous/barrier paths never donate — their public segmented-batch
+    #: surface lets callers hold on to ``resume_state``.
+    donate_carries: bool = True
+    #: solved-plan cache entries (`repro.serve.cache.PlanCache`); 0 disables
+    #: caching entirely.  An exact repeat (same geometry bytes, marginals,
+    #: feature cost, and solve knobs) returns its cached `GWResult` without
+    #: any device dispatch.
+    cache_capacity: int = 0
+    #: near-hit tolerance: a request whose content matches a cached solve
+    #: after quantization to this grid (same structural spec) warm-starts
+    #: from the cached coupling instead of the cold init — principled under
+    #: entropic stability (Rioux et al.): the solve resumes inside the
+    #: cached optimum's basin and skips the ε-annealing ramp.  0 keeps the
+    #: cache exact-only.
+    cache_near_tol: float = 0.0
 
     def solver_cfg(self) -> GWConfig:
         cfg = self.solver
@@ -192,6 +243,11 @@ class _Request:
     knobs: tuple | None = None       # (eps, tol, eps_init, anneal_decay)
     plan: str | None = None          # effective plan, resolved at flush time
     theta: float | None = None       # effective FGW feature weight (None=GW)
+    #: cache identity, computed at flush time when the engine has a cache
+    fp: Fingerprint | None = None
+    #: near-hit warm-start source: the cached `GWResult` whose coupling
+    #: seeds this request's lane (annealing disabled — see _cache_lookup)
+    warm: GWResult | None = None
 
 
 def _new_stats() -> dict:
@@ -199,22 +255,39 @@ def _new_stats() -> dict:
     physically burned (vmap lanes run in lockstep: every dispatch costs
     batch-width × the slowest lane's advance); ``useful_*`` count the
     iterations requests actually needed.  executed − useful is the
-    barrier/segment waste the continuous scheduler exists to shrink."""
+    barrier/segment waste the continuous scheduler exists to shrink.
+
+    Pipeline telemetry: ``flush_wall_s`` is the flush's wall time;
+    ``dispatch_depth`` histograms the number of in-flight segment dispatches
+    at each issue (depth ≥ 2 means cross-bucket overlap actually happened);
+    ``device_idle_s`` estimates time spent with NO dispatch in flight —
+    host-only bookkeeping the pipeline exists to hide (an estimate: in-
+    flight is measured from issue to the harvest-side blocking read).
+    Cache counters mirror the flush's `PlanCache` traffic: ``cache_hits``
+    exact short-circuits, ``cache_warm_starts`` near hits that seeded a
+    lane, ``cache_misses`` requests that solved cold."""
     return {"dispatches": 0, "executed_outer": 0, "useful_outer": 0,
             "executed_inner": 0, "useful_inner": 0, "refills": 0,
-            "repacks": 0}
+            "repacks": 0, "flush_wall_s": 0.0, "dispatch_depth": {},
+            "device_idle_s": 0.0, "cache_hits": 0, "cache_misses": 0,
+            "cache_warm_starts": 0}
 
 
-@jax.jit
-def _write_lanes(stacked, lanes, idx):
+def _write_lanes_impl(stacked, lanes, idx):
     """Scatter a batch of refilled requests (operands+carry, stacked over
     the refill axis) into slots ``idx`` — ONE whole-batch copy per segment
     boundary instead of one per admitted request.  ``idx`` is a traced
     operand; callers pad the refill batch to the slot width (duplicate
     writes of the same lane are idempotent), so there is exactly one
-    compiled writer per bucket shape."""
+    compiled writer per bucket shape.  Jitted twice below: plain, and a
+    donating twin for the pipelined scheduler (the scatter's input batch is
+    rebound to its output, so XLA may update the slots in place)."""
     return jax.tree_util.tree_map(lambda s, l: s.at[idx].set(l), stacked,
                                   lanes)
+
+
+_write_lanes = jax.jit(_write_lanes_impl)
+_write_lanes_donated = jax.jit(_write_lanes_impl, donate_argnums=(0,))
 
 
 @jax.jit
@@ -229,6 +302,175 @@ def _gather_lanes(stacked, idx):
     shrink the batch width once the queue drains — stragglers stop paying
     lockstep flops for harvested neighbours' empty slots."""
     return jax.tree_util.tree_map(lambda l: l[idx], stacked)
+
+
+class _BucketRun:
+    """One bucket's continuous-batching state, split into an async-friendly
+    issue/ready/harvest surface.
+
+    ``issue()`` refills freed slots (one scatter) and dispatches the next
+    segment — under JAX async dispatch it returns immediately with the new
+    carry as a future.  ``ready()`` polls (never blocks) whether that
+    dispatch has finished.  ``harvest()`` blocks on the counters, returns
+    converged lanes' results, repacks stragglers, and reports whether the
+    bucket still has work.  The serial continuous scheduler drives one run
+    as issue→harvest in lockstep (bit-identical to the historical loop);
+    the pipeline scheduler interleaves many runs, harvesting whichever is
+    ready while the rest compute.  ``donate=True`` routes dispatches and
+    refill scatters through the carry-donating jits — only safe because
+    this class rebinds the carry on every call and never exposes the old
+    reference."""
+
+    def __init__(self, engine: "GWEngine", key, entries, donate: bool):
+        self.eng = engine
+        self.key = key
+        self.donate = donate
+        self.cfg = engine._bucket_cfg(key)
+        self.cfgk = self.cfg.static_key()
+        self.pad_to = (key[2], key[4])
+        self.segment = max(1, int(engine.cfg.segment_iters))
+        if engine.cfg.order_by_hardness:
+            entries = sorted(entries, key=engine.predicted_hardness,
+                             reverse=True)
+        self.pending = collections.deque(entries)
+        b = engine._slot_width(len(entries))
+        self.b = b
+
+        # initial slot batch: first B requests; short queues replicate the
+        # first problem into the unused slots, which are retired (done=True)
+        # before the first dispatch so they never execute a step
+        first = [self.pending.popleft()
+                 for _ in range(min(b, len(self.pending)))]
+        self.slots: list[Optional[_Request]] = (
+            list(first) + [None] * (b - len(first)))
+        filler = [(s or first[0]) for s in self.slots]
+        self.ops, _, _ = stack_problems([r.prob for r in filler], self.cfg,
+                                        self.pad_to,
+                                        [r.ctl for r in filler],
+                                        [r.feature for r in filler])
+        self.carry = _init_stacked(self.ops[0], self.ops[1], self.ops[2],
+                                   self.ops[3], self.cfgk)
+        # cache near hits in the initial batch: overwrite their cold lanes
+        # with the warm-started carries, through the same scatter a refill
+        # admission uses
+        warm = [(i, engine._lane_operands(r, self.pad_to, self.cfg,
+                                          self.cfgk))
+                for i, r in enumerate(first) if r.warm is not None]
+        if warm:
+            self._scatter(warm)
+        if len(first) < b:
+            self.carry = _retire_lanes(
+                self.carry, jnp.asarray([s is None for s in self.slots]))
+        self.t_prev = np.zeros(b, np.int64)
+        self.inner_prev = np.zeros(b, np.int64)
+        self.values = None
+
+    def live(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.pending)
+
+    def _scatter(self, refills) -> None:
+        # pad to the slot width with copies of the first refill (idempotent
+        # duplicate writes) so the writer keeps one executable per bucket
+        # shape
+        idx = [i for i, _ in refills]
+        lanes = [l for _, l in refills]
+        idx += [idx[0]] * (self.b - len(idx))
+        lanes += [lanes[0]] * (self.b - len(lanes))
+        write = _write_lanes_donated if self.donate else _write_lanes
+        self.ops, self.carry = write(
+            (self.ops, self.carry),
+            jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *lanes),
+            jnp.asarray(idx, jnp.int32))
+
+    def issue(self) -> None:
+        """Refill freed slots, then dispatch the next segment.  Under async
+        dispatch this returns as soon as the work is enqueued — the rebound
+        carry is a future; nothing here blocks."""
+        eng = self.eng
+        refills: list[tuple[int, tuple]] = []
+        for i in range(self.b):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.popleft()
+                refills.append(
+                    (i, eng._lane_operands(req, self.pad_to, self.cfg,
+                                           self.cfgk)))
+                self.slots[i] = req
+                self.t_prev[i] = self.inner_prev[i] = 0
+                eng.stats["refills"] += 1
+        if refills:
+            self._scatter(refills)
+        eng._mark_issue()
+        seg = _segment_stacked_donated if self.donate else _segment_stacked
+        self.carry, self.values = seg(*self.ops, self.carry, self.cfgk,
+                                      self.segment)
+        eng.stats["dispatches"] += 1
+
+    def ready(self) -> bool:
+        """Non-blocking: has the last issued dispatch finished?"""
+        return (self.carry.dispatch_ready()
+                and (self.values is None or self.values.is_ready()))
+
+    def harvest(self, results: dict, done: set) -> bool:
+        """Block on the issued segment's counters, harvest converged lanes
+        into ``results``/``done``, repack stragglers.  Returns ``live()`` —
+        False retires the run."""
+        eng = self.eng
+        carry, b = self.carry, self.b
+        t = np.asarray(carry.t, np.int64)
+        inner = np.asarray(carry.inner, np.int64)
+        eng._mark_drain()
+        finished = np.asarray(carry.done) | (t >= self.cfg.outer_iters)
+        adv_t, adv_i = t - self.t_prev, inner - self.inner_prev
+        eng.stats["executed_outer"] += int(b * adv_t.max())
+        eng.stats["executed_inner"] += int(b * adv_i.max())
+        live = np.asarray([s is not None for s in self.slots])
+        eng.stats["useful_outer"] += int(adv_t[live].sum())
+        eng.stats["useful_inner"] += int(adv_i[live].sum())
+        self.t_prev, self.inner_prev = t, inner
+        for i in range(b):
+            if self.slots[i] is not None and finished[i]:
+                req = self.slots[i]
+                res = eng._harvest(carry, self.values, i, req)
+                results[req.rid] = res
+                done.add(req.rid)
+                eng._cache_store(req, res)
+                self.slots[i] = None
+        # drained queue + mostly-empty batch: repack the live stragglers
+        # into a narrower slot batch (widths stay in the same power-of-two
+        # menu, so no new executables beyond the bucket bound) — lane data
+        # is only gathered, never recomputed, so results stay bit-identical
+        live_ct = sum(s is not None for s in self.slots)
+        if (not self.pending and b > 1 and 0 < live_ct <= b // 2):
+            nb = self.eng._slot_width(live_ct)
+            idx = [i for i in range(b) if self.slots[i] is not None]
+            pad_idx = idx + [idx[-1]] * (nb - live_ct)
+            gidx = jnp.asarray(pad_idx, jnp.int32)
+            self.ops, self.carry = _gather_lanes((self.ops, self.carry),
+                                                 gidx)
+            self.slots = ([self.slots[i] for i in idx]
+                          + [None] * (nb - live_ct))
+            if live_ct < nb:   # duplicated pad lanes never run
+                self.carry = _retire_lanes(self.carry,
+                                           jnp.arange(nb) >= live_ct)
+            self.t_prev = self.t_prev[pad_idx]
+            self.inner_prev = self.inner_prev[pad_idx]
+            self.b = nb
+            eng.stats["repacks"] += 1
+        return self.live()
+
+    def record_interrupt(self) -> None:
+        """After a failed dispatch: keep what the in-flight requests' error
+        traces revealed, for the hardness predictor at re-admission.  Under
+        donation the failed dispatch may have consumed the carry — then the
+        hint is simply lost (requests still re-queue cold)."""
+        try:
+            trace = np.asarray(self.carry.trace)
+        except Exception:   # noqa: BLE001 — donated/poisoned buffers
+            trace = None
+        if trace is not None:
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    req.errs = trace[i]
 
 
 class GWEngine:
@@ -270,15 +512,29 @@ class GWEngine:
     Because the driver's schedule depends only on each lane's carried step
     index, a request solved across many segments alongside changing
     slot-mates returns exactly the plan, potentials, and iteration counts
-    of an uninterrupted solve.  ``scheduler="barrier"`` keeps the previous
+    of an uninterrupted solve.  ``scheduler="pipeline"`` interleaves steps
+    3–5 ACROSS buckets: every bucket with work keeps one segment dispatch
+    in flight (up to ``max_inflight_buckets``), the host harvests whichever
+    future resolves first, and carry buffers are donated so the cycle never
+    copies batch state — per-bucket iterates are unchanged, so results stay
+    identical to "continuous".  ``scheduler="barrier"`` keeps the previous
     behaviour — power-of-two chunks through `entropic_gw_batch`, each chunk
     burning flops until its slowest lane converges — as the measurable
     baseline.  Either way the jit cache stays bounded: at most
     log2(max_batch)+1 slot widths per bucket, reused for every later flush;
     retuning any request-level knob never recompiles.
 
+    Plan cache: with ``cache_capacity > 0`` every resolved request is
+    fingerprinted (`repro.serve.cache`) before bucketing.  An exact hit
+    returns the cached `GWResult` with no device dispatch at all; a near
+    hit (``cache_near_tol``) seeds the request's lane from the cached
+    coupling with annealing disabled, so it converges in a few outer steps.
+    Solved requests are stored back under their fingerprint at harvest.
+
     ``stats`` (reset each flush) counts dispatches and executed vs useful
-    lane-iterations — the benchmark's waste metric.
+    lane-iterations — the benchmark's waste metric — plus pipeline
+    telemetry (wall time, dispatch-depth histogram, device-idle estimate)
+    and cache hit/warm-start/miss counts; see `_new_stats`.
 
     Failure isolation: each bucket is solved independently.  When a bucket
     raises, its UNSOLVED requests stay queued for retry (requests harvested
@@ -296,6 +552,12 @@ class GWEngine:
         self._next_id = 0
         self.last_errors: list[tuple[tuple, Exception]] = []
         self.stats = _new_stats()
+        self.cache: PlanCache | None = None
+        if self.cfg.cache_capacity > 0:
+            self.cache = PlanCache(self.cfg.cache_capacity,
+                                   self.cfg.cache_near_tol)
+        self._inflight = 0
+        self._idle_since: float | None = None
 
     def _bucket_size(self, size: int) -> int:
         b = self.cfg.size_bucket
@@ -403,6 +665,59 @@ class GWEngine:
         mode = ("fgw", req.theta) if req.feature is not None else ("gw",)
         return (req.plan, gx.batch_key(), pad_x, gy.batch_key(), pad_y, mode)
 
+    # -- plan cache -------------------------------------------------------
+
+    def _fingerprint(self, req: _Request) -> Fingerprint:
+        """A resolved request's cache identity: the bucket key + structural
+        solver config as the static part (plan/backend/θ flips can never
+        share an entry), every content leaf — both geometries' pytree
+        leaves, the marginals, the feature cost — plus the resolved value
+        knobs hashed exactly and (when ``cache_near_tol > 0``) quantized."""
+        gx, gy, mu, nu = req.prob
+        key = self._bucket_key(req)
+        static = (key, self._bucket_cfg(key).static_key())
+        leaves = jax.tree_util.tree_leaves((gx, gy)) + [mu, nu]
+        if req.feature is not None:
+            leaves.append(req.feature)
+        c = req.ctl
+        knobs = [float(c.eps), float(c.tol), float(c.eps_init),
+                 float(c.anneal_decay), float(c.inner_loosen),
+                 float(c.lr_gamma)]
+        near_tol = 0.0 if self.cache is None else self.cache.near_tol
+        return fingerprint(static, leaves, knobs, near_tol)
+
+    def _cache_lookup(self, req: _Request, results: dict, done: set) -> bool:
+        """Consult the plan cache for a resolved request.  True → exact hit:
+        the cached result is already in ``results`` and the request never
+        reaches a bucket (no dispatch, no jit traffic).  A near hit arms
+        the request's warm start: lane seeded from the cached coupling,
+        annealing disabled (``eps_init := eps``) — resuming inside the
+        cached optimum's basin at the ramp's starting ε would just melt the
+        plan back toward the product coupling."""
+        if self.cache is None:
+            return False
+        req.fp = self._fingerprint(req)
+        kind, entry = self.cache.lookup(req.fp)
+        if kind == "exact":
+            results[req.rid] = entry
+            done.add(req.rid)
+            self.stats["cache_hits"] += 1
+            return True
+        if (kind == "near" and entry.coupling is not None
+                and self.cfg.scheduler != "barrier"):
+            # barrier has no per-lane carry surface to seed — near hits
+            # only pay off under the continuous/pipeline schedulers
+            req.warm = entry
+            req.ctl = dataclasses.replace(req.ctl, eps_init=req.ctl.eps)
+            self.stats["cache_warm_starts"] += 1
+        else:
+            self.stats["cache_misses"] += 1
+        return False
+
+    def _cache_store(self, req: _Request, res: GWResult) -> None:
+        if self.cache is not None and req.fp is not None:
+            self.cache.store(req.fp, res)
+
     # -- difficulty-aware admission --------------------------------------
 
     def predicted_hardness(self, req: _Request) -> float:
@@ -415,6 +730,10 @@ class GWEngine:
         breaker).  Dynamic signal: when a previous run of THIS request was
         interrupted (bucket failure), the log-slope of its observed error
         trace — a slowly-decaying trace predicts many remaining steps.
+        A request holding a cached warm start is scaled to near-zero cost:
+        its lane skips the annealing ramp and converges almost immediately,
+        so repeat traffic must never be ranked with (or starve behind) the
+        hard cold solves its knobs would otherwise suggest.
         """
         if req.knobs is None:
             self._resolve(req)
@@ -440,35 +759,72 @@ class GWEngine:
             if len(e) >= 2:
                 slope = (math.log(e[0]) - math.log(e[-1])) / (len(e) - 1)
                 h += 1.0 / max(slope, 0.05)   # slow decay ⇒ hard
+        if req.warm is not None:
+            h /= 100.0
         return h
+
+    # -- pipeline telemetry ----------------------------------------------
+
+    def _mark_issue(self) -> None:
+        """A segment dispatch is entering flight: close any device-idle
+        window and histogram the resulting in-flight depth."""
+        now = time.perf_counter()
+        if self._inflight == 0 and self._idle_since is not None:
+            self.stats["device_idle_s"] += now - self._idle_since
+            self._idle_since = None
+        self._inflight += 1
+        d = self._inflight
+        hist = self.stats["dispatch_depth"]
+        hist[d] = hist.get(d, 0) + 1
+
+    def _mark_drain(self) -> None:
+        """A dispatch's results were read back; if nothing else is in
+        flight, the device is idle until the next issue."""
+        self._inflight = max(0, self._inflight - 1)
+        if self._inflight == 0:
+            self._idle_since = time.perf_counter()
 
     # -- schedulers -------------------------------------------------------
 
     def flush(self) -> dict[int, GWResult]:
-        if self.cfg.scheduler not in ("continuous", "barrier"):
+        if self.cfg.scheduler not in ("continuous", "barrier", "pipeline"):
             raise ValueError(
                 f"unknown scheduler {self.cfg.scheduler!r}: expected "
-                "'continuous' or 'barrier'")
+                "'continuous', 'pipeline', or 'barrier'")
+        t0 = time.perf_counter()
+        self.last_errors = []
+        self.stats = _new_stats()
+        self._inflight = 0
+        self._idle_since = t0
+        results: dict[int, GWResult] = {}
+        done: set[int] = set()
         buckets: dict[tuple, list[_Request]] = {}
         for req in self._queue:
             self._resolve(req)
+            if self._cache_lookup(req, results, done):
+                continue
             buckets.setdefault(self._bucket_key(req), []).append(req)
-        results: dict[int, GWResult] = {}
-        done: set[int] = set()
-        self.last_errors = []
-        self.stats = _new_stats()
-        drive = (self._drive_bucket if self.cfg.scheduler == "continuous"
-                 else self._barrier_bucket)
         try:
-            for key, entries in buckets.items():
-                try:
-                    drive(key, entries, results, done)
-                except Exception as exc:   # noqa: BLE001 — bucket isolation
-                    self.last_errors.append((key, exc))
+            if self.cfg.scheduler == "pipeline":
+                self._drive_pipeline(buckets, results, done)
+            else:
+                drive = (self._drive_bucket
+                         if self.cfg.scheduler == "continuous"
+                         else self._barrier_bucket)
+                for key, entries in buckets.items():
+                    try:
+                        drive(key, entries, results, done)
+                    except Exception as exc:   # noqa: BLE001 — isolation
+                        self.last_errors.append((key, exc))
         finally:
             # only drop what actually solved — a bad request must not
             # destroy the rest of the queue
             self._queue = [r for r in self._queue if r.rid not in done]
+            now = time.perf_counter()
+            if self._inflight == 0 and self._idle_since is not None:
+                self.stats["device_idle_s"] += now - self._idle_since
+                self._idle_since = None
+            self.stats["flush_wall_s"] += now - t0
         if self.last_errors and not results:
             raise self.last_errors[0][1]
         return results
@@ -512,9 +868,11 @@ class GWEngine:
                     + [chunk[-1].ctl] * (b - len(chunk)))
             feats = ([r.feature for r in chunk]
                      + [chunk[-1].feature] * (b - len(chunk)))
+            self._mark_issue()
             solved = entropic_gw_batch(probs, cfg, pad_to=pad_to,
                                        num_results=len(chunk),
                                        controls=ctls, features=feats)
+            self._mark_drain()
             outers = [int(r.info.outer_iters) for r in solved]
             inners = [int(r.info.inner_iters) for r in solved]
             self.stats["dispatches"] += 1
@@ -525,114 +883,182 @@ class GWEngine:
             for req, res in zip(chunk, solved):
                 results[req.rid] = res
                 done.add(req.rid)
+                self._cache_store(req, res)
 
     def _drive_bucket(self, key, entries, results, done):
         """Continuous batching for one bucket: slot batch + bounded
-        segments + harvest-and-refill."""
-        cfg = self._bucket_cfg(key)
-        cfgk = cfg.static_key()
-        pad_to = (key[2], key[4])
-        if self.cfg.order_by_hardness:
-            entries = sorted(entries, key=self.predicted_hardness,
-                             reverse=True)
-        pending = collections.deque(entries)
-        b = self._slot_width(len(entries))
-        segment = max(1, int(self.cfg.segment_iters))
-
-        # initial slot batch: first B requests; short queues replicate the
-        # first problem into the unused slots, which are retired (done=True)
-        # before the first dispatch so they never execute a step
-        first = [pending.popleft() for _ in range(min(b, len(pending)))]
-        slots: list[Optional[_Request]] = list(first) + [None] * (b - len(first))
-        filler = [(s or first[0]) for s in slots]
-        ops, _, _ = stack_problems([r.prob for r in filler], cfg, pad_to,
-                                   [r.ctl for r in filler],
-                                   [r.feature for r in filler])
-        carry = _init_stacked(ops[0], ops[1], ops[2], ops[3], cfgk)
-        if len(first) < b:
-            carry = _retire_lanes(
-                carry, jnp.asarray([s is None for s in slots]))
-        t_prev = np.zeros(b, np.int64)
-        inner_prev = np.zeros(b, np.int64)
-
+        segments + harvest-and-refill, issue and harvest in lockstep (each
+        dispatch's counters are read back before the next is issued) — the
+        historical serial loop, bit-identical to the pipelined path's
+        per-bucket iterates when donation is off (the donating dispatch is
+        a separate executable: same math, last ulp of a reduction may
+        differ)."""
+        run = _BucketRun(self, key, entries, donate=False)
+        # donate=False: this path's contract is bitwise identity with the
+        # barrier scheduler and the historical loop, and the donating
+        # dispatch is a separate executable that may reorder a reduction's
+        # last ulp
         try:
-            while any(s is not None for s in slots) or pending:
-                # refill freed slots before dispatching the next segment —
-                # all admissions of this boundary go through ONE scatter
-                refills: list[tuple[int, tuple]] = []
-                for i in range(b):
-                    if slots[i] is None and pending:
-                        req = pending.popleft()
-                        refills.append(
-                            (i, self._lane_operands(req, pad_to, cfg, cfgk)))
-                        slots[i] = req
-                        t_prev[i] = inner_prev[i] = 0
-                        self.stats["refills"] += 1
-                if refills:
-                    # pad to the slot width with copies of the first refill
-                    # (idempotent duplicate writes) so the writer keeps one
-                    # executable per bucket shape
-                    idx = [i for i, _ in refills]
-                    lanes = [l for _, l in refills]
-                    idx += [idx[0]] * (b - len(idx))
-                    lanes += [lanes[0]] * (b - len(lanes))
-                    ops, carry = _write_lanes(
-                        (ops, carry),
-                        jax.tree_util.tree_map(
-                            lambda *ls: jnp.stack(ls), *lanes),
-                        jnp.asarray(idx, jnp.int32))
-                carry, values = _segment_stacked(*ops, carry, cfgk, segment)
-                t = np.asarray(carry.t, np.int64)
-                inner = np.asarray(carry.inner, np.int64)
-                finished = (np.asarray(carry.done)
-                            | (t >= cfg.outer_iters))
-                self.stats["dispatches"] += 1
-                adv_t, adv_i = t - t_prev, inner - inner_prev
-                self.stats["executed_outer"] += int(b * adv_t.max())
-                self.stats["executed_inner"] += int(b * adv_i.max())
-                live = np.asarray([s is not None for s in slots])
-                self.stats["useful_outer"] += int(adv_t[live].sum())
-                self.stats["useful_inner"] += int(adv_i[live].sum())
-                t_prev, inner_prev = t, inner
-                for i in range(b):
-                    if slots[i] is not None and finished[i]:
-                        req = slots[i]
-                        results[req.rid] = self._harvest(carry, values, i,
-                                                         req)
-                        done.add(req.rid)
-                        slots[i] = None
-                # drained queue + mostly-empty batch: repack the live
-                # stragglers into a narrower slot batch (widths stay in the
-                # same power-of-two menu, so no new executables beyond the
-                # bucket bound) — lane data is only gathered, never
-                # recomputed, so results stay bit-identical
-                live_ct = sum(s is not None for s in slots)
-                if (not pending and b > 1 and 0 < live_ct <= b // 2):
-                    nb = self._slot_width(live_ct)
-                    idx = [i for i in range(b) if slots[i] is not None]
-                    pad_idx = idx + [idx[-1]] * (nb - live_ct)
-                    gidx = jnp.asarray(pad_idx, jnp.int32)
-                    ops, carry = _gather_lanes((ops, carry), gidx)
-                    slots = [slots[i] for i in idx] + [None] * (nb - live_ct)
-                    if live_ct < nb:   # duplicated pad lanes never run
-                        carry = _retire_lanes(
-                            carry, jnp.arange(nb) >= live_ct)
-                    t_prev = t_prev[pad_idx]
-                    inner_prev = inner_prev[pad_idx]
-                    b = nb
-                    self.stats["repacks"] += 1
+            while run.live():
+                run.issue()
+                run.harvest(results, done)
         except Exception:
-            # re-admit interrupted in-flight requests cold, but keep what
-            # their error traces revealed for the hardness predictor
-            trace = np.asarray(carry.trace)
-            for i, req in enumerate(slots):
-                if req is not None:
-                    req.errs = trace[i]
+            run.record_interrupt()
             raise
 
+    def _drive_pipeline(self, buckets, results, done):
+        """Multi-bucket async dispatcher: keep up to
+        ``max_inflight_buckets`` buckets with a segment dispatch in flight,
+        harvest whichever future is ready first (blocking on the oldest
+        only when none is), and re-issue each harvested bucket
+        immediately — so one bucket's host-side harvest/refill bookkeeping
+        overlaps the others' device compute.  Per-bucket failure isolation
+        matches the serial path: a failed bucket's error is recorded, its
+        interrupted requests keep their trace hint, and the remaining
+        buckets keep flowing."""
+        donate = bool(self.cfg.donate_carries)
+        depth = max(1, int(self.cfg.max_inflight_buckets))
+        todo = collections.deque(buckets.items())
+        inflight: list[_BucketRun] = []
+
+        def start_next():
+            while todo and len(inflight) < depth:
+                key, entries = todo.popleft()
+                run = None
+                try:
+                    run = _BucketRun(self, key, entries, donate)
+                    run.issue()
+                except Exception as exc:   # noqa: BLE001 — isolation
+                    if run is not None:
+                        run.record_interrupt()
+                    self.last_errors.append((key, exc))
+                    continue
+                inflight.append(run)
+
+        start_next()
+        while inflight:
+            run = next((r for r in inflight if r.ready()), inflight[0])
+            inflight.remove(run)
+            try:
+                if run.harvest(results, done):
+                    run.issue()
+                    inflight.append(run)
+            except Exception as exc:       # noqa: BLE001 — isolation
+                run.record_interrupt()
+                self.last_errors.append((run.key, exc))
+            start_next()
+
+    # -- standing event loop ----------------------------------------------
+
+    def serve(self, source: Iterable,
+              ) -> Iterator[tuple[int, GWResult]]:
+        """Standing event loop over a request stream: admission, dispatch,
+        and harvest run as interleaved phases instead of a synchronous
+        flush.  ``source`` yields problems — either plain
+        ``(geom_x, geom_y, mu, nu)`` tuples or ``(args, kwargs)`` pairs
+        forwarded to :meth:`submit` (so per-request knobs/plans/features
+        work).  Yields ``(rid, GWResult)`` in completion order.
+
+        Each cycle pulls up to ``max_batch`` new requests (cache exact hits
+        are yielded immediately, without touching the device), routes them
+        into the bucket runs — joining a live run's pending queue when its
+        bucket is already in flight — then runs one issue/harvest step of
+        the pipelined dispatcher.  Admission is backpressured: once
+        ``max_inflight_buckets × max_batch`` requests are unfinished, the
+        loop stops pulling from ``source`` until harvests free room — a
+        standing server must not buffer an unbounded stream (and late
+        repeats get to hit the cache entries their originals store).  In-flight depth, donation, and the plan
+        cache behave exactly as under ``scheduler="pipeline"``.  Failed
+        buckets are recorded in ``last_errors``; their unsolved requests
+        stay queued (a later `flush`/`serve` retries them with the error-
+        trace hardness hint)."""
+        donate = bool(self.cfg.donate_carries)
+        depth = max(1, int(self.cfg.max_inflight_buckets))
+        t0 = time.perf_counter()
+        self.last_errors = []
+        self.stats = _new_stats()
+        self._inflight = 0
+        self._idle_since = t0
+        src = iter(source)
+        exhausted = False
+        waiting: dict[tuple, list[_Request]] = {}
+        inflight: list[_BucketRun] = []
+        results: dict[int, GWResult] = {}
+        done: set[int] = set()
+
+        while not exhausted or waiting or inflight:
+            # -- admission: pull new requests while dispatches compute --
+            # (backpressure counts ACTIVE work only — requests stranded by
+            # a failed bucket sit in the queue for a later retry and must
+            # not wedge admission shut)
+            pulled = 0
+            active = (sum(len(v) for v in waiting.values())
+                      + sum(len(r.pending)
+                            + sum(s is not None for s in r.slots)
+                            for r in inflight))
+            room = depth * self.cfg.max_batch
+            while (not exhausted and pulled < self.cfg.max_batch
+                   and active + pulled < room):
+                try:
+                    item = next(src)
+                except StopIteration:
+                    exhausted = True
+                    break
+                if (len(item) == 2 and isinstance(item[1], dict)):
+                    rid = self.submit(*item[0], **item[1])
+                else:
+                    rid = self.submit(*item)
+                req = self._queue[-1]
+                pulled += 1
+                self._resolve(req)
+                if self._cache_lookup(req, results, done):
+                    self._queue.pop()
+                    yield rid, results.pop(rid)
+                    continue
+                key = self._bucket_key(req)
+                live = next((r for r in inflight if r.key == key), None)
+                if live is not None:
+                    live.pending.append(req)
+                else:
+                    waiting.setdefault(key, []).append(req)
+            # -- dispatch: start waiting buckets up to the depth bound --
+            while waiting and len(inflight) < depth:
+                key = next(iter(waiting))
+                entries = waiting.pop(key)
+                run = None
+                try:
+                    run = _BucketRun(self, key, entries, donate)
+                    run.issue()
+                except Exception as exc:   # noqa: BLE001 — isolation
+                    if run is not None:
+                        run.record_interrupt()
+                    self.last_errors.append((key, exc))
+                    continue
+                inflight.append(run)
+            # -- harvest: the readiest run's completed segment --
+            if inflight:
+                run = next((r for r in inflight if r.ready()), inflight[0])
+                inflight.remove(run)
+                try:
+                    if run.harvest(results, done):
+                        run.issue()
+                        inflight.append(run)
+                except Exception as exc:   # noqa: BLE001 — isolation
+                    run.record_interrupt()
+                    self.last_errors.append((run.key, exc))
+                if done:
+                    self._queue = [r for r in self._queue
+                                   if r.rid not in done]
+                for rid in list(results):
+                    yield rid, results.pop(rid)
+            self.stats["flush_wall_s"] = time.perf_counter() - t0
+
     def _lane_operands(self, req: _Request, pad_to, cfg, cfgk):
-        """One request's padded operands + fresh carry, shaped to drop into
-        a slot of the stacked batch."""
+        """One request's padded operands + carry, shaped to drop into a
+        slot of the stacked batch: a fresh cold carry, or — for a cache
+        near hit — the cached coupling padded back to the bucket shape
+        (`Coupling.pad_to`; exact zero-mass padding, so the warm lane's
+        iterates match a warm unpadded solve)."""
         gx, gy, mu, nu = req.prob
         if cfg.plan == "lowrank":
             # convert BEFORE padding (same reason as stack_problems: padded
@@ -649,6 +1075,9 @@ class GWEngine:
             feat = jnp.pad(f, ((0, pad_to[0] - f.shape[0]),
                                (0, pad_to[1] - f.shape[1])))
         lane_ops = (gx_p, gy_p, mu_p, nu_p, feat, req.ctl)
+        if req.warm is not None:
+            state0 = req.warm.coupling.pad_to(pad_to[0], pad_to[1])
+            return lane_ops, init_carry(state0, cfg.outer_iters)
         return lane_ops, _init_lane(gx_p, gy_p, mu_p, nu_p, cfgk)
 
     def _harvest(self, carry, values, i, req: _Request) -> GWResult:
@@ -663,3 +1092,19 @@ class GWEngine:
         """Direct batched solve (no queue) — thin passthrough."""
         return entropic_gw_batch(problems, self.cfg.solver_cfg(),
                                  pad_to=pad_to)
+
+
+def run_event_loop(engine: GWEngine, source: Iterable,
+                   on_result: Callable[[int, GWResult], None] | None = None,
+                   ) -> dict[int, GWResult]:
+    """Drain a request stream through `GWEngine.serve` and collect every
+    completed result.  ``on_result`` (optional) observes each
+    ``(rid, result)`` as it completes — the hook a long-running server
+    would replace with its response writer.  Re-exported by
+    `repro.launch.serve`, which wires it to a CLI demo stream."""
+    out: dict[int, GWResult] = {}
+    for rid, res in engine.serve(source):
+        out[rid] = res
+        if on_result is not None:
+            on_result(rid, res)
+    return out

@@ -1,0 +1,308 @@
+"""Plan-cache suite: fingerprints, LRU mechanics, and the engine contract.
+
+The cache's promises:
+
+  * an EXACT repeat returns the stored `GWResult` bit-for-bit with ZERO
+    device work — no segment dispatch, no new jit entries;
+  * a NEAR repeat (content within ``near_tol``) warm-starts from the
+    cached coupling and converges to the same optimum in STRICTLY fewer
+    outer iterations than the cold solve (entropic stability: the solve
+    resumes inside the cached basin and skips the annealing ramp);
+  * eviction is LRU and respects capacity;
+  * structural flips — plan representation, solver backends — change the
+    fingerprint's static part, so they can never cross-contaminate keys.
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from repro.core import GWConfig
+from repro.core.geometry import PointCloudGeometry
+from repro.core.gw import _segment_stacked
+from repro.serve.cache import Fingerprint, PlanCache, fingerprint
+from repro.serve.engine import GWEngine, GWServeConfig
+from test_serve_continuous import SOLVER, TOL, _controls, _problem
+
+# Annealed solver on which small point-cloud problems genuinely CONVERGE
+# (not cap out) — required for the strictly-fewer-iterations claim.
+WARM_SOLVER = GWConfig(eps=2e-1, outer_iters=80, sinkhorn_iters=300,
+                       sinkhorn_chunk=25, backend="dense", eps_init=1.0,
+                       anneal_decay=0.7)
+WARM_TOL = 1e-4
+
+
+def _pc_problem(m, n, seed):
+    r = np.random.default_rng(seed)
+    gx = PointCloudGeometry(jnp.asarray(r.normal(size=(m, 2))))
+    gy = PointCloudGeometry(jnp.asarray(r.normal(size=(n, 2))))
+    mu = r.random(m) + 0.5
+    nu = r.random(n) + 0.5
+    return (gx, gy, jnp.asarray(mu / mu.sum()), jnp.asarray(nu / nu.sum()))
+
+
+def _perturb(prob, delta):
+    gx, gy, mu, nu = prob
+    return (PointCloudGeometry(gx.points + delta, gx.metric),
+            PointCloudGeometry(gy.points + delta, gy.metric), mu, nu)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_exact_and_near_digests():
+    r = np.random.default_rng(0)
+    leaves = [r.normal(size=(5, 3)), r.random(5)]
+    knobs = [1e-1, 1e-6]
+    fp = fingerprint(("s",), leaves, knobs, near_tol=1e-3)
+    same = fingerprint(("s",), [np.array(a) for a in leaves], list(knobs),
+                       near_tol=1e-3)
+    assert fp == same                       # deterministic, value-based
+
+    # δ ≪ near_tol: exact digest flips, near digest survives
+    nearby = fingerprint(("s",), [leaves[0] + 1e-7, leaves[1]], knobs,
+                         near_tol=1e-3)
+    assert nearby.exact != fp.exact and nearby.near == fp.near
+    # δ ≫ near_tol: both flip
+    far = fingerprint(("s",), [leaves[0] + 1.0, leaves[1]], knobs,
+                      near_tol=1e-3)
+    assert far.exact != fp.exact and far.near != fp.near
+    # knobs are part of the content identity
+    fp2 = fingerprint(("s",), leaves, [2e-1, 1e-6], near_tol=1e-3)
+    assert fp2.exact != fp.exact
+    # near_tol=0 → exact-only mode
+    assert fingerprint(("s",), leaves, knobs).near is None
+
+
+def test_fingerprint_shape_dtype_and_static_separate():
+    a = np.arange(6, dtype=np.float64)
+    fp_flat = fingerprint(("s",), [a], [], near_tol=1e-3)
+    fp_2d = fingerprint(("s",), [a.reshape(2, 3)], [], near_tol=1e-3)
+    fp_f32 = fingerprint(("s",), [a.astype(np.float32)], [], near_tol=1e-3)
+    assert len({fp_flat.exact, fp_2d.exact, fp_f32.exact}) == 3
+    # same bytes under a different static identity: disjoint by construction
+    assert fingerprint(("t",), [a], []).static != fp_flat.static
+
+
+# ---------------------------------------------------------------------------
+# PlanCache unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_cache_rejects_bad_construction():
+    with pytest.raises(ValueError, match="capacity"):
+        PlanCache(0)
+    with pytest.raises(ValueError, match="near_tol"):
+        PlanCache(4, near_tol=-1e-3)
+
+
+def test_cache_lru_eviction_and_counters():
+    c = PlanCache(2, near_tol=1e-3)
+    fps = [fingerprint(("s",), [np.full(3, float(i))], [], 1e-3)
+           for i in range(3)]
+    c.store(fps[0], "r0")
+    c.store(fps[1], "r1")
+    assert c.lookup(fps[0]) == ("exact", "r0")   # touch 0 → 1 becomes LRU
+    c.store(fps[2], "r2")                        # evicts 1
+    assert len(c) == 2 and c.evictions == 1
+    assert c.lookup(fps[1]) == (None, None)
+    assert c.lookup(fps[0]) == ("exact", "r0")
+    assert c.lookup(fps[2]) == ("exact", "r2")
+    assert (c.hits, c.misses) == (3, 1)
+    # the evicted entry's near-index pointer was pruned with it: a near
+    # neighbour of entry 1 misses instead of resolving to a dead key
+    near1 = fingerprint(("s",), [np.full(3, 1.0) + 1e-7], [], 1e-3)
+    assert near1.near == fps[1].near
+    assert c.lookup(near1) == (None, None)
+
+
+def test_cache_near_hit_latest_wins():
+    c = PlanCache(4, near_tol=1e-3)
+    base = np.linspace(0.0, 1.0, 4)
+    fp_a = fingerprint(("s",), [base], [], 1e-3)
+    fp_b = fingerprint(("s",), [base + 1e-8], [], 1e-3)
+    assert fp_a.exact != fp_b.exact and fp_a.near == fp_b.near
+    c.store(fp_a, "old")
+    c.store(fp_b, "new")
+    probe = fingerprint(("s",), [base + 2e-8], [], 1e-3)
+    assert c.lookup(probe) == ("near", "new")    # newest solve wins
+    assert c.near_hits == 1
+    # static mismatch blocks the near path entirely
+    other = fingerprint(("t",), [base + 2e-8], [], 1e-3)
+    assert c.lookup(other) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# engine: exact hits are device-free and bit-identical
+# ---------------------------------------------------------------------------
+
+def test_exact_hit_bit_identical_without_any_dispatch():
+    eng = GWEngine(GWServeConfig(
+        solver=SOLVER, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler="pipeline", segment_iters=3, cache_capacity=8))
+    probs = [(_problem(k, 600 + k), _controls(600 + k)) for k in range(3)]
+    rids = [eng.submit(*p, controls=c) for p, c in probs]
+    cold = eng.flush()
+    assert eng.stats["cache_hits"] == 0
+    assert eng.stats["dispatches"] > 0
+
+    n_jit = _segment_stacked._cache_size()
+    rids2 = [eng.submit(*p, controls=c) for p, c in probs]
+    hot = eng.flush()
+    # all three answered from the cache: zero device work of any kind
+    assert eng.stats["cache_hits"] == 3
+    assert eng.stats["dispatches"] == 0
+    assert eng.stats["refills"] == 0
+    assert _segment_stacked._cache_size() == n_jit
+    for r0, r1 in zip(rids, rids2):
+        a, b = cold[r0], hot[r1]
+        if a.plan is not None:
+            np.testing.assert_array_equal(np.asarray(a.plan),
+                                          np.asarray(b.plan))
+        else:
+            for la, lb in zip(jax.tree_util.tree_leaves(a.coupling),
+                              jax.tree_util.tree_leaves(b.coupling)):
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb))
+        assert float(a.value) == float(b.value)          # the SAME object
+        assert int(a.info.inner_iters) == int(b.info.inner_iters)
+
+
+def test_cache_disabled_by_default_and_knob_flip_misses():
+    eng = GWEngine(GWServeConfig(solver=SOLVER, tol=TOL))
+    assert eng.cache is None                 # capacity 0 → no cache at all
+    eng2 = GWEngine(GWServeConfig(
+        solver=SOLVER, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler="pipeline", segment_iters=3, cache_capacity=8))
+    prob = _problem(1, 640)
+    eng2.submit(*prob, eps=5e-2)
+    eng2.flush()
+    # a different ε is a different solve: the knobs are hashed content
+    eng2.submit(*prob, eps=2e-2)
+    eng2.flush()
+    assert eng2.stats["cache_hits"] == 0
+    assert eng2.stats["cache_misses"] == 1
+    assert eng2.stats["dispatches"] > 0
+
+
+# ---------------------------------------------------------------------------
+# engine: near hits warm-start and converge strictly faster
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["pipeline", "continuous"])
+def test_near_hit_warm_start_converges_faster_same_optimum(scheduler):
+    eng = GWEngine(GWServeConfig(
+        solver=WARM_SOLVER, max_batch=4, size_bucket=16, tol=WARM_TOL,
+        scheduler=scheduler, segment_iters=5, cache_capacity=8,
+        cache_near_tol=1e-3))
+    probs = [_pc_problem(8, 12, 0), _pc_problem(12, 8, 1)]
+    cold_rids = [eng.submit(*p) for p in probs]
+    cold = eng.flush()
+    for rid in cold_rids:
+        assert bool(cold[rid].info.converged)   # genuinely converged, not
+        # capped — otherwise "fewer iterations" would be vacuous
+
+    # δ ≪ near_tol: same quantization cell, different exact bytes
+    warm_rids = [eng.submit(*_perturb(p, 1e-7)) for p in probs]
+    warm = eng.flush()
+    assert eng.stats["cache_warm_starts"] == 2
+    assert eng.stats["cache_hits"] == 0          # not exact repeats
+    for crid, wrid in zip(cold_rids, warm_rids):
+        c, w = cold[crid], warm[wrid]
+        assert bool(w.info.converged)
+        # strictly fewer outer steps: the ramp was skipped entirely
+        assert int(w.info.outer_iters) < int(c.info.outer_iters)
+        # same optimum (the perturbation is far below the solve tolerance)
+        assert float(np.abs(np.asarray(w.plan)
+                            - np.asarray(c.plan)).sum()) < 1e-3
+        np.testing.assert_allclose(float(w.value), float(c.value),
+                                   rtol=1e-3, atol=1e-6)
+
+
+def test_near_hit_is_miss_under_barrier():
+    """The barrier scheduler has no per-lane carry surface to seed — a
+    near repeat must fall through to a full solve, never a crash or a
+    bogus exact hit."""
+    eng = GWEngine(GWServeConfig(
+        solver=WARM_SOLVER, max_batch=4, size_bucket=16, tol=WARM_TOL,
+        scheduler="barrier", cache_capacity=8, cache_near_tol=1e-3))
+    prob = _pc_problem(8, 12, 2)
+    rid0 = eng.submit(*prob)
+    cold = eng.flush()
+    rid1 = eng.submit(*_perturb(prob, 1e-7))
+    out = eng.flush()
+    assert eng.stats["cache_warm_starts"] == 0
+    assert eng.stats["cache_misses"] == 1
+    assert eng.stats["dispatches"] > 0
+    assert (int(out[rid1].info.outer_iters)
+            == int(cold[rid0].info.outer_iters))
+
+
+# ---------------------------------------------------------------------------
+# engine: eviction + structural isolation
+# ---------------------------------------------------------------------------
+
+def test_engine_cache_eviction_respects_capacity():
+    eng = GWEngine(GWServeConfig(
+        solver=SOLVER, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler="pipeline", segment_iters=3, cache_capacity=2))
+    probs = [(_problem(0, 660 + i), _controls(660 + i)) for i in range(3)]
+    for p, c in probs:
+        eng.submit(*p, controls=c)
+    eng.flush()
+    assert len(eng.cache) == 2               # p0 was evicted at p2's store
+    assert eng.cache.evictions == 1
+
+    eng.submit(*probs[0][0], controls=probs[0][1])   # evicted → miss
+    eng.submit(*probs[2][0], controls=probs[2][1])   # resident → hit
+    out = eng.flush()
+    assert len(out) == 2
+    assert eng.stats["cache_hits"] == 1
+    assert eng.stats["cache_misses"] == 1
+    assert len(eng.cache) == 2               # re-store of p0 evicted again
+
+
+def test_plan_flip_never_cross_contaminates():
+    eng = GWEngine(GWServeConfig(
+        solver=SOLVER, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler="pipeline", segment_iters=3, cache_capacity=8,
+        cache_near_tol=1e-3))
+    prob = _problem(1, 680)
+    ctl = _controls(680)
+    eng.submit(*prob, controls=ctl)
+    full = eng.flush()
+    # identical bytes, factored representation: a DIFFERENT program — it
+    # must neither exact-hit nor warm-start from the dense entry
+    rid = eng.submit(*prob, controls=ctl, plan="lowrank")
+    out = eng.flush()
+    assert eng.stats["cache_hits"] == 0
+    assert eng.stats["cache_warm_starts"] == 0
+    assert eng.stats["cache_misses"] == 1
+    assert out[rid].plan is None and out[rid].coupling is not None
+    assert len(eng.cache) == 2               # both entries coexist
+    assert len(full) == 1
+
+
+def test_backend_flip_changes_static_fingerprint():
+    """A solver-backend retune between flushes reaches queued requests
+    (flush-time resolution) AND re-keys the cache: entries solved under
+    one backend are invisible to another."""
+    eng = GWEngine(GWServeConfig(
+        solver=SOLVER, max_batch=4, size_bucket=16, tol=TOL,
+        scheduler="pipeline", segment_iters=3, cache_capacity=8))
+    prob = _problem(1, 690)
+    ctl = _controls(690)
+    eng.submit(*prob, controls=ctl)
+    eng.flush()
+    eng.cfg.solver = dataclasses.replace(SOLVER, sinkhorn_backend="xla")
+    eng.submit(*prob, controls=ctl)
+    eng.flush()
+    assert eng.stats["cache_hits"] == 0
+    assert eng.stats["cache_misses"] == 1
+    assert len(eng.cache) == 2

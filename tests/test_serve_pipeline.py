@@ -1,0 +1,321 @@
+"""Property suite for the pipelined multi-bucket scheduler.
+
+The pipeline scheduler overlaps one bucket's host-side harvest/refill with
+other buckets' device compute (async dispatch, donated carries).  The
+contract it must keep:
+
+  (a) every request id returned exactly once, however the stream buckets;
+  (b) results BIT-identical to the barrier and continuous schedulers and
+      matching the unbatched solver — pipelining changes wall-clock
+      overlap only, never any lane's iterates (each bucket still walks the
+      same serial issue→harvest sequence; only the interleaving ACROSS
+      buckets changes, and buckets share no state).  The bitwise claim is
+      per-executable: carry DONATION compiles a twin executable whose
+      aliased buffers may reorder a reduction's last ulp, so the donated
+      path is pinned to 1e-12 with exact iteration counts instead;
+  (c) telemetry reflects real overlap: with ≥2 buckets in flight the
+      dispatch-depth histogram must record depth ≥ 2;
+  (d) per-bucket failure isolation — a poisoned bucket's error is recorded
+      and its requests requeued while other buckets' results still land;
+  (e) the standing event loop (`serve` / `run_event_loop`) is a scheduling
+      shell over the same lanes: it returns the flush results bit-for-bit.
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _prop import given, settings, st
+
+from repro.core import GWConfig, SolveControls, entropic_gw
+from repro.core.geometry import as_geometry
+from repro.core.grids import Grid1D
+from repro.serve import engine as engine_mod
+from repro.serve.engine import (GWEngine, GWServeConfig, run_event_loop)
+from test_serve_continuous import (SOLVER, TOL, _controls, _measures,
+                                   _problem)
+
+
+def _mk(sched: str, **kw) -> GWEngine:
+    kw.setdefault("max_batch", 4)
+    return GWEngine(GWServeConfig(
+        solver=SOLVER, size_bucket=16, tol=TOL,
+        scheduler=sched, segment_iters=3, **kw))
+
+
+def _mixed_stream(n: int, base_seed: int):
+    """n problems cycling over grid / point-cloud / low-rank geometries —
+    three distinct buckets, so the pipeline has cross-bucket overlap to
+    exploit."""
+    out = []
+    for i in range(n):
+        s = base_seed + i
+        out.append((_problem(i % 3, s), _controls(s)))
+    return out
+
+
+def _assert_same_result(a, b):
+    """Plans/couplings the SAME BITS; the scalar energy to reduction
+    roundoff (the padded-batch contraction order differs between slot
+    widths, so the last ulps of the float64 sum may not)."""
+    if a.plan is not None or b.plan is not None:
+        np.testing.assert_array_equal(np.asarray(a.plan), np.asarray(b.plan))
+    else:
+        for la, lb in zip(jax.tree_util.tree_leaves(a.coupling),
+                          jax.tree_util.tree_leaves(b.coupling)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_allclose(float(a.value), float(b.value),
+                               rtol=1e-12, atol=1e-15)
+    assert int(a.info.outer_iters) == int(b.info.outer_iters)
+    assert int(a.info.inner_iters) == int(b.info.inner_iters)
+
+
+# ---------------------------------------------------------------------------
+# (a) + (b): pipeline == barrier == continuous, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_pipeline_ids_once_and_identical_to_other_schedulers(seed):
+    # donation off for the BITWISE claim: the donated dispatch is its own
+    # XLA executable, whose aliased buffers may reorder a reduction's last
+    # ulp (that twin is pinned to 1e-12 in the donation test below)
+    rng = np.random.default_rng(seed)
+    pipe = _mk("pipeline", donate_carries=False)
+    cont, barr = _mk("continuous"), _mk("barrier")
+    expect: dict[int, tuple] = {}
+    got: dict[int, object] = {}
+
+    def do_flush():
+        out_p, out_c, out_b = pipe.flush(), cont.flush(), barr.flush()
+        assert set(out_p) == set(out_c) == set(out_b)
+        for rid, res in out_p.items():
+            assert rid not in got, f"request {rid} returned twice"
+            got[rid] = res
+            _assert_same_result(res, out_c[rid])
+            _assert_same_result(res, out_b[rid])
+
+    for _ in range(int(rng.integers(4, 9))):
+        if expect and rng.random() < 0.3:
+            do_flush()
+        else:
+            kind = int(rng.integers(0, 3))
+            s = int(rng.integers(0, 10 ** 8))
+            prob, ctl = _problem(kind, s), _controls(s)
+            rid = pipe.submit(*prob, controls=ctl)
+            assert cont.submit(*prob, controls=ctl) == rid
+            assert barr.submit(*prob, controls=ctl) == rid
+            expect[rid] = (prob, ctl)
+    do_flush()
+    do_flush()          # drained queue: nothing returned twice
+    assert sorted(got) == sorted(expect)
+
+    # spot-check one lane against the truly unbatched solver
+    rid = sorted(got)[int(rng.integers(len(got)))]
+    prob, ctl = expect[rid]
+    ref = entropic_gw(*prob, SOLVER, controls=ctl)
+    if got[rid].plan is not None:
+        np.testing.assert_allclose(np.asarray(got[rid].plan),
+                                   np.asarray(ref.plan), atol=1e-10)
+    assert int(got[rid].info.outer_iters) == int(ref.info.outer_iters)
+
+
+def test_pipeline_no_donation_is_bitwise_with_continuous():
+    """With donation off the pipeline runs the very same executable as the
+    continuous scheduler — its per-bucket iterates must be the SAME BITS."""
+    pipe = _mk("pipeline", donate_carries=False)
+    cont = _mk("continuous")
+    reqs = {}
+    for prob, ctl in _mixed_stream(5, 9000):
+        rid = pipe.submit(*prob, controls=ctl)
+        assert cont.submit(*prob, controls=ctl) == rid
+        reqs[rid] = prob
+    out_p, out_c = pipe.flush(), cont.flush()
+    assert set(out_p) == set(out_c) == set(reqs)
+    for rid in reqs:
+        _assert_same_result(out_p[rid], out_c[rid])
+
+
+def test_pipeline_donation_matches_to_reduction_roundoff():
+    """Donation routes dispatches through a SEPARATE XLA executable whose
+    buffer aliasing may reorder a reduction's last ulp — so the contract is
+    iteration-counts EXACT and plans to 1e-12, not bitwise."""
+    don = _mk("pipeline", donate_carries=True)
+    ref = _mk("pipeline", donate_carries=False)
+    reqs = {}
+    for prob, ctl in _mixed_stream(5, 9100):
+        rid = don.submit(*prob, controls=ctl)
+        assert ref.submit(*prob, controls=ctl) == rid
+        reqs[rid] = prob
+    out_d, out_r = don.flush(), ref.flush()
+    assert set(out_d) == set(out_r) == set(reqs)
+    for rid in reqs:
+        a, b = out_d[rid], out_r[rid]
+        if a.plan is not None:
+            np.testing.assert_allclose(np.asarray(a.plan),
+                                       np.asarray(b.plan),
+                                       rtol=0, atol=1e-12)
+        else:
+            for la, lb in zip(jax.tree_util.tree_leaves(a.coupling),
+                              jax.tree_util.tree_leaves(b.coupling)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=0, atol=1e-10)
+        assert int(a.info.outer_iters) == int(b.info.outer_iters)
+        assert int(a.info.inner_iters) == int(b.info.inner_iters)
+
+
+# ---------------------------------------------------------------------------
+# (c) pipeline telemetry: real cross-bucket overlap, wall-time accounting
+# ---------------------------------------------------------------------------
+
+def test_pipeline_telemetry_records_overlap():
+    pipe = _mk("pipeline", max_inflight_buckets=2)
+    for prob, ctl in _mixed_stream(6, 4000):
+        pipe.submit(*prob, controls=ctl)
+    out = pipe.flush()
+    assert len(out) == 6
+    s = pipe.stats
+    assert s["dispatches"] > 0
+    assert s["flush_wall_s"] > 0.0
+    assert s["device_idle_s"] >= 0.0
+    assert s["device_idle_s"] <= s["flush_wall_s"]
+    # the histogram counts every dispatch, at the depth it entered flight
+    assert sum(s["dispatch_depth"].values()) == s["dispatches"]
+    # ≥2 buckets in the stream and depth 2 allowed → real overlap happened
+    assert max(s["dispatch_depth"]) >= 2
+
+
+def test_pipeline_depth_one_degrades_to_serial():
+    """max_inflight_buckets=1 is the serial continuous scheduler with a
+    different harvest order — never more than one dispatch in flight."""
+    pipe = _mk("pipeline", max_inflight_buckets=1)
+    cont = _mk("continuous")
+    reqs = []
+    for prob, ctl in _mixed_stream(4, 4100):
+        rid = pipe.submit(*prob, controls=ctl)
+        assert cont.submit(*prob, controls=ctl) == rid
+        reqs.append(rid)
+    out_p, out_c = pipe.flush(), cont.flush()
+    assert max(pipe.stats["dispatch_depth"]) == 1
+    for rid in reqs:
+        _assert_same_result(out_p[rid], out_c[rid])
+
+
+# ---------------------------------------------------------------------------
+# (d) per-bucket failure isolation under the pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_bucket_failure_isolates_and_requeues(monkeypatch):
+    eng = _mk("pipeline", max_inflight_buckets=2)
+    good = []
+    for i in range(2):
+        p = _problem(0, 50 + i)           # sizes ≤ 16 → pad-16 bucket
+        good.append((eng.submit(*p, controls=_controls(50 + i)), p))
+    big = Grid1D(24, 1 / 23, 1)           # its own pad-24 bucket
+    pb = (as_geometry(big, SOLVER.backend), as_geometry(big, SOLVER.backend),
+          _measures(24, 90), _measures(24, 91))
+    ctl_b = SolveControls.make(8e-3, TOL, 5e-2, 0.5)
+    bad_rid = eng.submit(*pb, controls=ctl_b)
+
+    real = engine_mod._segment_stacked_donated
+    calls = {"n": 0}
+
+    def failing(gx, gy, mus, nus, feats, ctls, carry, cfg, segment):
+        if mus.shape[1] >= 24:            # only the big bucket
+            calls["n"] += 1
+            if calls["n"] >= 2:           # fail on its SECOND dispatch
+                raise RuntimeError("injected mid-solve failure")
+        return real(gx, gy, mus, nus, feats, ctls, carry, cfg, segment)
+
+    monkeypatch.setattr(engine_mod, "_segment_stacked_donated", failing)
+    out = eng.flush()                     # must NOT raise: good bucket ok
+    assert set(out) == {r for r, _ in good}
+    for rid, _ in good:
+        assert bool(out[rid].info.converged)
+    assert [r.rid for r in eng._queue] == [bad_rid]
+    assert len(eng.last_errors) == 1
+    assert isinstance(eng.last_errors[0][1], RuntimeError)
+    # fault clears → the requeued request solves exactly
+    monkeypatch.setattr(engine_mod, "_segment_stacked_donated", real)
+    out2 = eng.flush()
+    assert set(out2) == {bad_rid} and eng._queue == []
+    ref = entropic_gw(*pb, SOLVER, controls=ctl_b)
+    np.testing.assert_allclose(np.asarray(out2[bad_rid].plan),
+                               np.asarray(ref.plan), atol=1e-10)
+    assert (int(out2[bad_rid].info.outer_iters)
+            == int(ref.info.outer_iters))
+
+
+# ---------------------------------------------------------------------------
+# (e) the standing event loop is a scheduling shell over the same lanes
+# ---------------------------------------------------------------------------
+
+def test_event_loop_matches_flush():
+    """The standing loop admits incrementally, so its buckets may run at
+    different slot widths than a one-shot flush — results must match to
+    the width-crossing contract the repo holds everywhere (plans to
+    padding roundoff, iteration counts EXACTLY)."""
+    stream = _mixed_stream(6, 7000)
+    cont = _mk("continuous")
+    expect = {}
+    for prob, ctl in stream:
+        expect[cont.submit(*prob, controls=ctl)] = prob
+    ref = cont.flush()
+
+    served = _mk("pipeline", max_inflight_buckets=2)
+    source = [((*prob,), {"controls": ctl}) for prob, ctl in stream]
+    seen = []
+    got = run_event_loop(served, source,
+                         on_result=lambda rid, res: seen.append(rid))
+    assert sorted(got) == sorted(expect) == sorted(seen)
+    assert len(seen) == len(set(seen))    # each rid yielded exactly once
+    for rid in got:
+        a, b = got[rid], ref[rid]
+        if a.plan is not None:
+            np.testing.assert_allclose(np.asarray(a.plan),
+                                       np.asarray(b.plan), atol=1e-10)
+        else:
+            for la, lb in zip(jax.tree_util.tree_leaves(a.coupling),
+                              jax.tree_util.tree_leaves(b.coupling)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=1e-8)
+        assert int(a.info.outer_iters) == int(b.info.outer_iters)
+        assert int(a.info.inner_iters) == int(b.info.inner_iters)
+
+
+def test_event_loop_handles_lazy_source():
+    """Admission pulls from a generator as capacity frees up — the loop
+    must terminate with every request answered even when the source is
+    produced lazily and slower than the solver drains it."""
+    def source():
+        for prob, ctl in _mixed_stream(5, 7500):
+            yield ((*prob,), {"controls": ctl})
+
+    eng = _mk("pipeline", max_inflight_buckets=2, max_batch=2)
+    got = run_event_loop(eng, source())
+    assert sorted(got) == list(range(5))
+    for res in got.values():       # every lane ran to a terminal state
+        assert (bool(res.info.converged)
+                or int(res.info.outer_iters) >= SOLVER.outer_iters)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware admission ordering
+# ---------------------------------------------------------------------------
+
+def test_warm_start_hardness_near_zero():
+    """A request holding a cached warm start must rank far below the cold
+    solve its knobs would suggest — repeat traffic never starves behind
+    fresh hard problems."""
+    eng = GWEngine(GWServeConfig(solver=SOLVER, tol=TOL))
+    prob = _problem(1, 0)
+    cold = engine_mod._Request(0, prob, {}, knobs=(8e-3, TOL, 5e-2, 0.5))
+    warm = engine_mod._Request(1, prob, {}, knobs=(8e-3, TOL, 5e-2, 0.5))
+    warm.warm = object()                  # any cached entry
+    assert eng.predicted_hardness(warm) < eng.predicted_hardness(cold) / 10
+    easy = engine_mod._Request(2, prob, {}, knobs=(5e-2, TOL, 5e-2, 0.5))
+    assert eng.predicted_hardness(warm) < eng.predicted_hardness(easy)
