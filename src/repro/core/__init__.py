@@ -27,7 +27,7 @@ Public API:
   losses         — FGW sequence/patch alignment losses for LM training
 """
 from repro.core import (fgc, geometry, gradient, grids, sinkhorn, solver, gw,
-                        fgw, ugw, barycenter, losses, coot, coupling)
+                        fgw, ugw, barycenter, losses, coot, coupling, sliced)
 from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
                                info_of, init_carry, mirror_descent,
                                mirror_descent_segment, resolve_controls)
@@ -45,6 +45,9 @@ from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
 from repro.core.ugw import UGWConfig, entropic_ugw
 from repro.core.barycenter import BarycenterConfig, gw_barycenter
 from repro.core.losses import AlignConfig, fgw_alignment_loss
+from repro.core.sliced import (SlicedEstimate, profile_distance,
+                               sliced_embedding, sliced_gw, sliced_plan,
+                               sliced_supported)
 
 __all__ = [
     "fgc", "geometry", "gradient", "grids", "sinkhorn", "solver", "gw",
@@ -63,5 +66,7 @@ __all__ = [
     "FGWConfig", "entropic_fgw", "fgw_energy",
     "UGWConfig", "entropic_ugw",
     "BarycenterConfig", "gw_barycenter",
-    "AlignConfig", "fgw_alignment_loss", "coot",
+    "AlignConfig", "fgw_alignment_loss", "coot", "sliced",
+    "SlicedEstimate", "profile_distance", "sliced_embedding", "sliced_gw",
+    "sliced_plan", "sliced_supported",
 ]

@@ -103,6 +103,19 @@ class FullCoupling(Coupling):
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
+    @classmethod
+    def from_sliced(cls, plan, mu, nu) -> "FullCoupling":
+        """Warm start from a sliced-GW monotone plan (`repro.core.sliced.
+        sliced_plan`): the best direction's 1D coupling is already exactly
+        feasible for (μ, ν), so it drops straight into `init_carry` as the
+        solver state — the same resume surface the plan cache's near-hit
+        path uses.  Potentials start at the zero-mass-aware cold point (0
+        on the support, −inf on padding): unlike a cached coupling, the
+        sliced plan carries no converged Sinkhorn geometry to inherit."""
+        from repro.core import sinkhorn as sk
+        f, g = sk.zero_mass_potentials(mu, nu)
+        return cls(jnp.asarray(plan), f, g)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

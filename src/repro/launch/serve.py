@@ -71,7 +71,8 @@ def gw_main(args) -> None:
     engine = GWEngine(GWServeConfig(
         solver=solver, tol=5e-4, max_batch=args.batch, size_bucket=16,
         scheduler="pipeline", max_inflight_buckets=args.inflight,
-        cache_capacity=args.cache_capacity, cache_near_tol=args.near_tol))
+        cache_capacity=args.cache_capacity, cache_near_tol=args.near_tol,
+        cache_profile_tol=args.profile_tol, service=args.service))
     t0 = time.time()
     done = run_event_loop(
         engine, _gw_stream(args.requests, args.repeat_frac, args.seed),
@@ -86,7 +87,9 @@ def gw_main(args) -> None:
     print(f"dispatches={s['dispatches']} depth={s['dispatch_depth']} "
           f"device_idle={s['device_idle_s']:.3f}s "
           f"cache hits/warm/miss={s['cache_hits']}/"
-          f"{s['cache_warm_starts']}/{s['cache_misses']}")
+          f"{s['cache_warm_starts']}/{s['cache_misses']} "
+          f"(profile={s['cache_profile_hits']}) "
+          f"sliced_answers={s['sliced_answers']}")
     if engine.last_errors:
         print(f"{len(engine.last_errors)} bucket failures: "
               f"{[k for k, _ in engine.last_errors]}")
@@ -112,6 +115,13 @@ def main(argv=None):
     ap.add_argument("--inflight", type=int, default=2)
     ap.add_argument("--cache-capacity", type=int, default=64)
     ap.add_argument("--near-tol", type=float, default=1e-6)
+    ap.add_argument("--profile-tol", type=float, default=0.0,
+                    help="sliced-profile second cache stage tolerance "
+                         "(0 disables; catches rotated/re-indexed repeats)")
+    ap.add_argument("--service", default="exact",
+                    choices=["exact", "sliced", "refine"],
+                    help="answer class: full solve, O(N log N) sliced "
+                         "estimate, or sliced-then-refined")
     args = ap.parse_args(argv)
 
     if args.gw:

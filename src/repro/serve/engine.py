@@ -68,16 +68,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coupling import FullCoupling
 from repro.core.geometry import as_geometry
 from repro.core.gw import (GWConfig, GWResult, _init_lane, _init_stacked,
                            _result_of, _segment_stacked,
                            _segment_stacked_donated, entropic_gw_batch,
                            stack_problems)
-from repro.core.solver import (MirrorCarry, SolveControls, info_of,
-                               init_carry)
+from repro.core.sliced import (_canonical_keys, _sliced_core,
+                               _sliced_plan_core, sliced_embedding,
+                               sliced_supported)
+from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
+                               info_of, init_carry)
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.serve.cache import Fingerprint, PlanCache, fingerprint
+from repro.serve.calibration import HardnessCalibrator
 
 
 @dataclasses.dataclass
@@ -205,6 +210,33 @@ class GWServeConfig:
     #: cached optimum's basin and skips the ε-annealing ramp.  0 keeps the
     #: cache exact-only.
     cache_near_tol: float = 0.0
+    #: answer class for requests that don't pin one via submit(service=...):
+    #: "exact" (the full entropic solve), "sliced" (answer from the
+    #: O(N log N) sliced estimator in ONE dispatch — value + profile, no
+    #: plan), or "refine" (the sliced answer immediately, then the exact
+    #: solve warm-started from the sliced plan; `serve` yields both).
+    service: str = "exact"
+    #: sliced tier: number of random projection directions (also the
+    #: profile length the cache's second stage compares).
+    sliced_n_proj: int = 32
+    #: sliced tier: seed of the direction bank.  Fixed per engine so
+    #: profiles are comparable across requests — a cached profile can only
+    #: match a later request's if both saw the same directions.
+    sliced_seed: int = 0
+    #: second cache stage: on a byte-digest miss, a same-bucket cached
+    #: solve whose sliced profile is within this normalized distance
+    #: (`repro.core.sliced.profile_distance`) warm-starts the request —
+    #: catches rotated/re-indexed repeats, which canonicalize to the same
+    #: profile while every byte digest misses.  0 disables the stage;
+    #: needs ``cache_capacity > 0`` to have entries to match.
+    cache_profile_tol: float = 0.0
+    #: learn `predicted_hardness` online: per-bucket ridge regression from
+    #: (sliced estimate, ε-annealing stages, log size) onto observed outer
+    #: iteration counts, updated at every harvest.  The hand-tuned formula
+    #: stays the prior until a bucket has ``calib_min_obs`` observations,
+    #: so fresh engines rank exactly as before.
+    calibrate_hardness: bool = True
+    calib_min_obs: int = 12
 
     def solver_cfg(self) -> GWConfig:
         cfg = self.solver
@@ -248,6 +280,20 @@ class _Request:
     #: near-hit warm-start source: the cached `GWResult` whose coupling
     #: seeds this request's lane (annealing disabled — see _cache_lookup)
     warm: GWResult | None = None
+    #: answer class, resolved at flush time ("exact" | "sliced" | "refine")
+    service: str = "exact"
+    #: sliced fast-tier outputs, computed at most once per request
+    sliced_est: float | None = None
+    sliced_profile: np.ndarray | None = None
+    #: per-side canonical atom orders (argsort along the first canonical
+    #: axis) — the correspondence used to re-index a profile-matched
+    #: cached plan onto this request's atom ordering
+    sliced_orders: tuple | None = None
+    #: exact byte encoding of the resolved value knobs — the profile
+    #: stage's knob-compatibility key.  Captured alongside ``fp``, BEFORE
+    #: any warm-start mutation of ``ctl`` (a warm lane's eps_init tweak
+    #: must not change its stored identity).
+    knob_key: bytes | None = None
 
 
 def _new_stats() -> dict:
@@ -265,12 +311,16 @@ def _new_stats() -> dict:
     flight is measured from issue to the harvest-side blocking read).
     Cache counters mirror the flush's `PlanCache` traffic: ``cache_hits``
     exact short-circuits, ``cache_warm_starts`` near hits that seeded a
-    lane, ``cache_misses`` requests that solved cold."""
+    lane (``cache_profile_hits`` the subset found by the sliced-profile
+    second stage), ``cache_misses`` requests that solved cold.
+    ``sliced_answers`` counts results produced by the sliced fast tier —
+    every ``service="sliced"`` answer and every "refine" preliminary."""
     return {"dispatches": 0, "executed_outer": 0, "useful_outer": 0,
             "executed_inner": 0, "useful_inner": 0, "refills": 0,
             "repacks": 0, "flush_wall_s": 0.0, "dispatch_depth": {},
             "device_idle_s": 0.0, "cache_hits": 0, "cache_misses": 0,
-            "cache_warm_starts": 0}
+            "cache_warm_starts": 0, "cache_profile_hits": 0,
+            "sliced_answers": 0}
 
 
 def _write_lanes_impl(stacked, lanes, idx):
@@ -434,6 +484,7 @@ class _BucketRun:
                 results[req.rid] = res
                 done.add(req.rid)
                 eng._cache_store(req, res)
+                eng._observe_hardness(req, res)
                 self.slots[i] = None
         # drained queue + mostly-empty batch: repack the live stragglers
         # into a narrower slot batch (widths stay in the same power-of-two
@@ -556,6 +607,10 @@ class GWEngine:
         if self.cfg.cache_capacity > 0:
             self.cache = PlanCache(self.cfg.cache_capacity,
                                    self.cfg.cache_near_tol)
+        self.calib: HardnessCalibrator | None = None
+        if self.cfg.calibrate_hardness:
+            self.calib = HardnessCalibrator(
+                5, min_obs=self.cfg.calib_min_obs)
         self._inflight = 0
         self._idle_since: float | None = None
 
@@ -566,7 +621,8 @@ class GWEngine:
     def submit(self, geom_x, geom_y, mu, nu, *, eps=None, tol=None,
                eps_init=None, anneal_decay=None, plan=None,
                feature_cost=None, theta=None,
-               controls: SolveControls | None = None) -> int:
+               controls: SolveControls | None = None,
+               service: str | None = None) -> int:
         """Enqueue a problem; returns its request id.  Keyword knobs (or a
         full ``controls``) override the engine's solver defaults for THIS
         request only — they ride as traced per-lane operands.  ``plan``
@@ -580,7 +636,14 @@ class GWEngine:
         (M,r)/(N,r) factors, so only the user's own C is ever (M,N).
         ``theta`` overrides the solver config's feature weight (requires
         ``feature_cost``); like the plan it is structural, so FGW requests
-        bucket by θ."""
+        bucket by θ.
+
+        ``service`` picks this request's answer class: "exact" (default,
+        the full solve), "sliced" (the O(N log N) sliced estimate, one
+        dispatch, no plan), or "refine" (sliced answer first — yielded
+        immediately by `serve` — then the exact solve warm-started from
+        the sliced plan).  "sliced"/"refine" need geometries with a
+        coordinate embedding (`repro.core.sliced.sliced_supported`)."""
         backend = self.cfg.solver.backend
         gx = as_geometry(geom_x, backend)
         gy = as_geometry(geom_y, backend)
@@ -599,6 +662,23 @@ class GWEngine:
         if theta is not None and feature_cost is None:
             raise ValueError("theta is the FGW feature weight — it needs a "
                              "feature_cost to weight")
+        if service is not None:
+            if service not in ("exact", "sliced", "refine"):
+                raise ValueError(
+                    f"unknown service {service!r}: expected 'exact', "
+                    "'sliced', or 'refine'")
+            if service != "exact" and not (sliced_supported(gx)
+                                           and sliced_supported(gy)):
+                raise ValueError(
+                    f"service={service!r} needs geometries with a "
+                    "coordinate embedding to slice (grids, point clouds, "
+                    "or low-rank factors) — got "
+                    f"{type(gx).__name__}/{type(gy).__name__}")
+            if service != "exact" and feature_cost is not None:
+                raise ValueError(
+                    f"service={service!r} estimates the plain GW term "
+                    "only — FGW requests (feature_cost) must use the "
+                    "exact service")
         feature = None
         if feature_cost is not None:
             feature = jnp.asarray(feature_cost)
@@ -610,7 +690,8 @@ class GWEngine:
                                        ("eps_init", eps_init),
                                        ("anneal_decay", anneal_decay),
                                        ("plan", plan), ("theta", theta),
-                                       ("controls", controls)]
+                                       ("controls", controls),
+                                       ("service", service)]
                      if v is not None}
         rid = self._next_id
         self._next_id += 1
@@ -628,6 +709,20 @@ class GWEngine:
         ``lowrank_above`` says the problem is too big for a dense (M,N)."""
         o = req.overrides
         s = self.cfg.solver_cfg()
+        svc = o.get("service", self.cfg.service)
+        if svc not in ("exact", "sliced", "refine"):
+            raise ValueError(
+                f"unknown service {svc!r}: expected 'exact', 'sliced', or "
+                "'refine'")
+        if svc != "exact" and (req.feature is not None
+                               or not (sliced_supported(req.prob[0])
+                                       and sliced_supported(req.prob[1]))):
+            # the engine-level fast tier degrades gracefully on geometries
+            # with no embedding and on FGW requests (the sliced estimator
+            # knows nothing of the feature term); an EXPLICIT per-request
+            # service was already validated (and rejected) at submit()
+            svc = "exact"
+        req.service = svc
         if req.feature is not None:
             req.theta = float(o.get("theta", getattr(s, "theta", 0.5)))
         if "plan" in o:
@@ -697,6 +792,7 @@ class GWEngine:
         if self.cache is None:
             return False
         req.fp = self._fingerprint(req)
+        req.knob_key = self._knob_bytes(req)
         kind, entry = self.cache.lookup(req.fp)
         if kind == "exact":
             results[req.rid] = entry
@@ -710,13 +806,183 @@ class GWEngine:
             req.warm = entry
             req.ctl = dataclasses.replace(req.ctl, eps_init=req.ctl.eps)
             self.stats["cache_warm_starts"] += 1
+        elif self._profile_warm_start(req):
+            pass
         else:
             self.stats["cache_misses"] += 1
         return False
 
+    def _knob_bytes(self, req: _Request) -> bytes:
+        """Exact f64 encoding of the resolved value knobs — the same list
+        `_fingerprint` hashes.  Profile matches never cross knob settings
+        (same reason the near digest hashes knobs exactly)."""
+        c = req.ctl
+        return np.asarray([float(c.eps), float(c.tol), float(c.eps_init),
+                           float(c.anneal_decay), float(c.inner_loosen),
+                           float(c.lr_gamma)], np.float64).tobytes()
+
+    def _profile_warm_start(self, req: _Request) -> bool:
+        """Second cache stage: on a byte-digest miss, compare the request's
+        sliced profile against same-bucket cached solves — a rotated or
+        re-indexed repeat canonicalizes to the SAME profile while every
+        byte digest misses, and this is exactly the traffic worth
+        converting into warm starts.  Armed like a near hit: cached
+        coupling seeds the lane, annealing disabled."""
+        if (self.cfg.cache_profile_tol <= 0.0
+                or self.cfg.scheduler == "barrier"
+                or req.plan != "full"):
+            return False
+        gx, gy = req.prob[0], req.prob[1]
+        if not (sliced_supported(gx) and sliced_supported(gy)):
+            return False
+        if req.sliced_profile is None:
+            self._sliced_compute(req, with_plan=False)
+        match = self.cache.profile_match(req.fp.static, req.knob_key,
+                                         req.sliced_profile,
+                                         self.cfg.cache_profile_tol)
+        if match is None:
+            return False
+        entry, aux = match
+        if not isinstance(entry.coupling, FullCoupling):
+            return False
+        plan = np.asarray(entry.coupling.plan)
+        if plan.shape != (gx.size, gy.size):
+            # same bucket ≠ same raw sizes — a differently-sized entry's
+            # coupling cannot seed this lane
+            return False
+        warm = entry
+        if aux is not None and req.sliced_orders is not None:
+            warm = self._realign_cached(entry, plan, aux,
+                                        req.sliced_orders)
+        req.warm = warm
+        req.ctl = dataclasses.replace(req.ctl, eps_init=req.ctl.eps)
+        self.stats["cache_profile_hits"] += 1
+        self.stats["cache_warm_starts"] += 1
+        return True
+
+    def _realign_cached(self, entry: GWResult, plan: np.ndarray, aux,
+                        orders) -> GWResult:
+        """Re-index a profile-matched cached solve onto THIS request's
+        atom ordering: canonicalization is permutation-equivariant, so
+        rank k of the cached request's canonical sort order corresponds
+        to rank k of the new request's — composing the two argsorts
+        recovers the permutation a re-indexed repeat applied.  For a
+        plain rotated copy the orders coincide and this is the identity
+        (up to tie-breaks on degenerate clouds, which only soften the
+        seed)."""
+        ox_c, oy_c = aux
+        ox_n, oy_n = orders
+        aligned = np.empty_like(plan)
+        aligned[np.ix_(ox_n, oy_n)] = plan[np.ix_(ox_c, oy_c)]
+        f = np.asarray(entry.coupling.f)
+        g = np.asarray(entry.coupling.g)
+        fa, ga = np.empty_like(f), np.empty_like(g)
+        fa[ox_n] = f[ox_c]
+        ga[oy_n] = g[oy_c]
+        coup = FullCoupling(jnp.asarray(aligned), jnp.asarray(fa),
+                            jnp.asarray(ga))
+        return dataclasses.replace(entry, plan=coup.plan, f=coup.f,
+                                   g=coup.g, coupling=coup)
+
     def _cache_store(self, req: _Request, res: GWResult) -> None:
         if self.cache is not None and req.fp is not None:
-            self.cache.store(req.fp, res)
+            self.cache.store(req.fp, res, profile=req.sliced_profile,
+                             knob_key=req.knob_key,
+                             aux=req.sliced_orders)
+
+    # -- sliced fast tier -------------------------------------------------
+
+    def _sliced_compute(self, req: _Request, with_plan: bool):
+        """Run the sliced estimator for one request, padded to its BUCKET
+        sizes: zero-mass padding atoms are inert in every mass-weighted
+        moment, so the padded profile equals the unpadded one, and the jit
+        cache holds ONE `_sliced_core` executable per bucket instead of
+        one per raw shape.  Caches the estimate/profile on the request;
+        returns the true-size monotone plan when ``with_plan``."""
+        gx, gy, mu, nu = req.prob
+        ex, px = sliced_embedding(gx)
+        ey, py = sliced_embedding(gy)
+        pad_x = self._bucket_size(gx.size) if gx.paddable else gx.size
+        pad_y = self._bucket_size(gy.size) if gy.paddable else gy.size
+        ex = jnp.pad(ex, ((0, pad_x - ex.shape[0]), (0, 0)))
+        ey = jnp.pad(ey, ((0, pad_y - ey.shape[0]), (0, 0)))
+        mu_p = jnp.pad(mu, (0, pad_x - mu.shape[0]))
+        nu_p = jnp.pad(nu, (0, pad_y - nu.shape[0]))
+        key = jax.random.PRNGKey(self.cfg.sliced_seed)
+        n_proj = int(self.cfg.sliced_n_proj)
+        self._mark_issue()
+        plan = None
+        if with_plan:
+            est, prof, plan = _sliced_plan_core(ex, ey, mu_p, nu_p, key,
+                                                px, py, n_proj)
+            plan = plan[:gx.size, :gy.size]
+        else:
+            est, prof = _sliced_core(ex, ey, mu_p, nu_p, key, px, py,
+                                     n_proj)
+        # canonical sort orders (true-size): the atom correspondence that
+        # re-indexes a profile-matched cached plan onto this request.
+        # Keys come from the padded executable (one per bucket); the
+        # argsort runs on the host over the true atoms only.
+        kx = np.asarray(_canonical_keys(ex, mu_p))[:gx.size]
+        ky = np.asarray(_canonical_keys(ey, nu_p))[:gy.size]
+        req.sliced_orders = (np.argsort(kx, kind="stable"),
+                             np.argsort(ky, kind="stable"))
+        req.sliced_est = float(est)
+        req.sliced_profile = np.asarray(prof, np.float64)
+        self.stats["dispatches"] += 1
+        self._mark_drain()
+        return plan
+
+    def _sliced_result(self, req: _Request, coup=None) -> GWResult:
+        """Package the fast-tier numbers as a `GWResult`: value = sliced
+        estimate, zero iterations, converged.  With ``coup`` (the refine
+        preliminary) the result carries the best direction's monotone
+        coupling — exactly feasible by construction, so marginal_err 0."""
+        ft = jnp.result_type(float)
+        info = ConvergenceInfo(
+            outer_iters=jnp.asarray(0, jnp.int32),
+            inner_iters=jnp.asarray(0, jnp.int32),
+            marginal_err=jnp.asarray(0.0, ft),
+            converged=jnp.asarray(True),
+            err_trace=jnp.zeros((0,), ft))
+        value = jnp.asarray(req.sliced_est, ft)
+        if coup is None:
+            return GWResult(plan=None, value=value,
+                            marginal_err=jnp.asarray(0.0, ft), f=None,
+                            g=None, errs=None, info=info, coupling=None)
+        return _result_of(coup, value, jnp.asarray(0.0, ft), None, info)
+
+    def _sliced_answer(self, req: _Request) -> GWResult:
+        """The ``service="sliced"`` terminal answer — exactly one device
+        dispatch (or zero, if the profile stage already ran)."""
+        if req.sliced_est is None:
+            self._sliced_compute(req, with_plan=False)
+        self.stats["sliced_answers"] += 1
+        return self._sliced_result(req)
+
+    def _arm_sliced_warm(self, req: _Request) -> GWResult | None:
+        """``service="refine"``: compute the sliced answer and — when the
+        lane can take a dense seed — arm the request's warm start from the
+        best direction's monotone plan (`FullCoupling.from_sliced`).  A
+        cache near/profile hit keeps precedence: a CONVERGED cached
+        coupling beats a coarse monotone seed.  Unlike cache hits the
+        sliced seed keeps the ε-annealing ramp ON — it is a basin hint,
+        not an optimum to resume.  Returns the preliminary sliced
+        `GWResult` (`serve` yields it immediately; `flush` only keeps the
+        refined final)."""
+        arm = (req.warm is None and req.plan == "full"
+               and self.cfg.scheduler != "barrier")
+        coup = None
+        if arm:
+            plan = self._sliced_compute(req, with_plan=True)
+            coup = FullCoupling.from_sliced(plan, req.prob[2], req.prob[3])
+        elif req.sliced_profile is None:
+            self._sliced_compute(req, with_plan=False)
+        pre = self._sliced_result(req, coup)
+        if arm:
+            req.warm = pre
+        self.stats["sliced_answers"] += 1
+        return pre
 
     # -- difficulty-aware admission --------------------------------------
 
@@ -734,25 +1000,40 @@ class GWEngine:
         its lane skips the annealing ramp and converges almost immediately,
         so repeat traffic must never be ranked with (or starve behind) the
         hard cold solves its knobs would otherwise suggest.
+
+        With ``calibrate_hardness`` the STATIC terms are replaced, per
+        bucket, by an online ridge regression from admission-time features
+        (sliced estimate, annealing stages, log size) onto the outer
+        iteration counts harvests actually observed — the formula above
+        stays the prior until the bucket has ``calib_min_obs``
+        observations.  The dynamic signals (error-trace slope, warm-start
+        scaling) apply either way: they describe THIS request's state, not
+        the bucket's statistics.
         """
         if req.knobs is None:
             self._resolve(req)
-        eps, _tol, eps_init, decay = req.knobs
-        h = 0.0
-        if eps_init > eps and 0.0 < decay < 1.0:
-            h += math.log(eps_init / eps) / math.log(1.0 / decay)
-        h += math.log10(1.0 / max(eps, 1e-30))
-        gx, gy = req.prob[0], req.prob[1]
-        if req.plan == "lowrank":
-            # factored lanes cost O((M+N)·r) per step, not O(M·N) — the
-            # size term must match the work model or a single million-point
-            # lane would be ranked as hard as the whole rest of its bucket
-            r = self.cfg.solver.plan_rank
-            if not isinstance(r, int):        # plan_rank="auto"
-                r = self.cfg.solver.plan_rank_max
-            h += math.log2(max((gx.size + gy.size) * r, 2)) / 16.0
-        else:
-            h += math.log2(max(gx.size * gy.size, 2)) / 16.0
+        h = None
+        if self.calib is not None:
+            h = self.calib.predict(self._bucket_key(req),
+                                   self._hardness_features(req))
+        if h is None:
+            eps, _tol, eps_init, decay = req.knobs
+            h = 0.0
+            if eps_init > eps and 0.0 < decay < 1.0:
+                h += math.log(eps_init / eps) / math.log(1.0 / decay)
+            h += math.log10(1.0 / max(eps, 1e-30))
+            gx, gy = req.prob[0], req.prob[1]
+            if req.plan == "lowrank":
+                # factored lanes cost O((M+N)·r) per step, not O(M·N) —
+                # the size term must match the work model or a single
+                # million-point lane would be ranked as hard as the whole
+                # rest of its bucket
+                r = self.cfg.solver.plan_rank
+                if not isinstance(r, int):        # plan_rank="auto"
+                    r = self.cfg.solver.plan_rank_max
+                h += math.log2(max((gx.size + gy.size) * r, 2)) / 16.0
+            else:
+                h += math.log2(max(gx.size * gy.size, 2)) / 16.0
         if req.errs is not None:
             e = np.asarray(req.errs)
             e = e[np.isfinite(e) & (e > 0)]
@@ -762,6 +1043,34 @@ class GWEngine:
         if req.warm is not None:
             h /= 100.0
         return h
+
+    def _hardness_features(self, req: _Request) -> np.ndarray:
+        """Admission-time feature vector for the hardness calibrator:
+        [bias, sliced estimate, estimate-present flag, ε-annealing stage
+        count, log₂ problem size].  The flag lets the regression keep a
+        separate intercept for requests that never ran the sliced tier
+        (est = 0 is then a placeholder, not a measurement)."""
+        eps, _tol, eps_init, decay = req.knobs
+        stages = 0.0
+        if eps_init > eps and 0.0 < decay < 1.0:
+            stages = math.log(eps_init / eps) / math.log(1.0 / decay)
+        gx, gy = req.prob[0], req.prob[1]
+        est = req.sliced_est
+        return np.asarray([1.0,
+                           0.0 if est is None else float(est),
+                           0.0 if est is None else 1.0,
+                           stages,
+                           math.log2(max(gx.size * gy.size, 2))],
+                          np.float64)
+
+    def _observe_hardness(self, req: _Request, res: GWResult) -> None:
+        """Harvest-side calibration update: fold (features → observed
+        outer iterations) into the request's bucket statistics."""
+        if self.calib is None or req.knobs is None or res.info is None:
+            return
+        self.calib.observe(self._bucket_key(req),
+                           self._hardness_features(req),
+                           float(res.info.outer_iters))
 
     # -- pipeline telemetry ----------------------------------------------
 
@@ -801,8 +1110,14 @@ class GWEngine:
         buckets: dict[tuple, list[_Request]] = {}
         for req in self._queue:
             self._resolve(req)
+            if req.service == "sliced":
+                results[req.rid] = self._sliced_answer(req)
+                done.add(req.rid)
+                continue
             if self._cache_lookup(req, results, done):
                 continue
+            if req.service == "refine":
+                self._arm_sliced_warm(req)
             buckets.setdefault(self._bucket_key(req), []).append(req)
         try:
             if self.cfg.scheduler == "pipeline":
@@ -884,6 +1199,7 @@ class GWEngine:
                 results[req.rid] = res
                 done.add(req.rid)
                 self._cache_store(req, res)
+                self._observe_hardness(req, res)
 
     def _drive_bucket(self, key, entries, results, done):
         """Continuous batching for one bucket: slot batch + bounded
@@ -960,7 +1276,11 @@ class GWEngine:
         work).  Yields ``(rid, GWResult)`` in completion order.
 
         Each cycle pulls up to ``max_batch`` new requests (cache exact hits
-        are yielded immediately, without touching the device), routes them
+        are yielded immediately, without touching the device;
+        ``service="sliced"`` requests are answered from the fast tier in
+        one dispatch; ``service="refine"`` requests yield their sliced
+        preliminary immediately and their refined exact result later —
+        the same rid appears twice), routes them
         into the bucket runs — joining a live run's pending queue when its
         bucket is already in flight — then runs one issue/harvest step of
         the pipelined dispatcher.  Admission is backpressured: once
@@ -986,72 +1306,97 @@ class GWEngine:
         results: dict[int, GWResult] = {}
         done: set[int] = set()
 
-        while not exhausted or waiting or inflight:
-            # -- admission: pull new requests while dispatches compute --
-            # (backpressure counts ACTIVE work only — requests stranded by
-            # a failed bucket sit in the queue for a later retry and must
-            # not wedge admission shut)
-            pulled = 0
-            active = (sum(len(v) for v in waiting.values())
-                      + sum(len(r.pending)
-                            + sum(s is not None for s in r.slots)
-                            for r in inflight))
-            room = depth * self.cfg.max_batch
-            while (not exhausted and pulled < self.cfg.max_batch
-                   and active + pulled < room):
-                try:
-                    item = next(src)
-                except StopIteration:
-                    exhausted = True
-                    break
-                if (len(item) == 2 and isinstance(item[1], dict)):
-                    rid = self.submit(*item[0], **item[1])
-                else:
-                    rid = self.submit(*item)
-                req = self._queue[-1]
-                pulled += 1
-                self._resolve(req)
-                if self._cache_lookup(req, results, done):
-                    self._queue.pop()
-                    yield rid, results.pop(rid)
-                    continue
-                key = self._bucket_key(req)
-                live = next((r for r in inflight if r.key == key), None)
-                if live is not None:
-                    live.pending.append(req)
-                else:
-                    waiting.setdefault(key, []).append(req)
-            # -- dispatch: start waiting buckets up to the depth bound --
-            while waiting and len(inflight) < depth:
-                key = next(iter(waiting))
-                entries = waiting.pop(key)
-                run = None
-                try:
-                    run = _BucketRun(self, key, entries, donate)
-                    run.issue()
-                except Exception as exc:   # noqa: BLE001 — isolation
-                    if run is not None:
-                        run.record_interrupt()
-                    self.last_errors.append((key, exc))
-                    continue
-                inflight.append(run)
-            # -- harvest: the readiest run's completed segment --
-            if inflight:
-                run = next((r for r in inflight if r.ready()), inflight[0])
-                inflight.remove(run)
-                try:
-                    if run.harvest(results, done):
+        try:
+            while not exhausted or waiting or inflight:
+                # -- admission: pull new requests while dispatches compute
+                # (backpressure counts ACTIVE work only — requests stranded
+                # by a failed bucket sit in the queue for a later retry and
+                # must not wedge admission shut)
+                pulled = 0
+                active = (sum(len(v) for v in waiting.values())
+                          + sum(len(r.pending)
+                                + sum(s is not None for s in r.slots)
+                                for r in inflight))
+                room = depth * self.cfg.max_batch
+                while (not exhausted and pulled < self.cfg.max_batch
+                       and active + pulled < room):
+                    try:
+                        item = next(src)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    if (len(item) == 2 and isinstance(item[1], dict)):
+                        rid = self.submit(*item[0], **item[1])
+                    else:
+                        rid = self.submit(*item)
+                    req = self._queue[-1]
+                    pulled += 1
+                    self._resolve(req)
+                    if req.service == "sliced":
+                        # fast-tier terminal answer: one dispatch, no
+                        # bucket, no cache traffic
+                        self._queue.pop()
+                        yield rid, self._sliced_answer(req)
+                        continue
+                    if self._cache_lookup(req, results, done):
+                        self._queue.pop()
+                        yield rid, results.pop(rid)
+                        continue
+                    if req.service == "refine":
+                        # the preliminary NOW, the refined exact solve
+                        # later — the same rid is yielded twice
+                        pre = self._arm_sliced_warm(req)
+                        if pre is not None:
+                            yield rid, pre
+                    key = self._bucket_key(req)
+                    live = next((r for r in inflight if r.key == key), None)
+                    if live is not None:
+                        live.pending.append(req)
+                    else:
+                        waiting.setdefault(key, []).append(req)
+                # -- dispatch: start waiting buckets up to the depth bound
+                while waiting and len(inflight) < depth:
+                    key = next(iter(waiting))
+                    entries = waiting.pop(key)
+                    run = None
+                    try:
+                        run = _BucketRun(self, key, entries, donate)
                         run.issue()
-                        inflight.append(run)
-                except Exception as exc:   # noqa: BLE001 — isolation
-                    run.record_interrupt()
-                    self.last_errors.append((run.key, exc))
-                if done:
-                    self._queue = [r for r in self._queue
-                                   if r.rid not in done]
-                for rid in list(results):
-                    yield rid, results.pop(rid)
-            self.stats["flush_wall_s"] = time.perf_counter() - t0
+                    except Exception as exc:   # noqa: BLE001 — isolation
+                        if run is not None:
+                            run.record_interrupt()
+                        self.last_errors.append((key, exc))
+                        continue
+                    inflight.append(run)
+                # -- harvest: the readiest run's completed segment --
+                if inflight:
+                    run = next((r for r in inflight if r.ready()),
+                               inflight[0])
+                    inflight.remove(run)
+                    try:
+                        if run.harvest(results, done):
+                            run.issue()
+                            inflight.append(run)
+                    except Exception as exc:   # noqa: BLE001 — isolation
+                        run.record_interrupt()
+                        self.last_errors.append((run.key, exc))
+                    if done:
+                        self._queue = [r for r in self._queue
+                                       if r.rid not in done]
+                    for rid in list(results):
+                        yield rid, results.pop(rid)
+                self.stats["flush_wall_s"] = time.perf_counter() - t0
+        finally:
+            # close the trailing device-idle window on loop exit — exactly
+            # what flush() does.  serve historically stamped flush_wall_s
+            # each cycle but never folded the final harvest→exit idle span
+            # into device_idle_s, so a served stream under-reported idle
+            # time relative to the identical pipelined flush.
+            now = time.perf_counter()
+            if self._inflight == 0 and self._idle_since is not None:
+                self.stats["device_idle_s"] += now - self._idle_since
+                self._idle_since = None
+            self.stats["flush_wall_s"] = now - t0
 
     def _lane_operands(self, req: _Request, pad_to, cfg, cfgk):
         """One request's padded operands + carry, shaped to drop into a

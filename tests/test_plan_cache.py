@@ -306,3 +306,194 @@ def test_backend_flip_changes_static_fingerprint():
     assert eng.stats["cache_hits"] == 0
     assert eng.stats["cache_misses"] == 1
     assert len(eng.cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# digest regressions: non-finite leaves, knob quantization
+# ---------------------------------------------------------------------------
+
+def test_nan_leaf_never_collides_with_inf_leaf():
+    """Regression: quantization used to map NaN onto +inf inside the value
+    bytes, so a NaN-bearing request could warm-start from an inf entry's
+    plan.  NaNs now get their own bitmask channel — all three non-finite
+    flavours land on distinct digests, in BOTH layers."""
+    a = np.array([1.0, np.nan, 3.0])
+    b = np.array([1.0, np.inf, 3.0])
+    c = np.array([1.0, -np.inf, 3.0])
+    fa = fingerprint(("s",), [a], [], near_tol=1e-3)
+    fb = fingerprint(("s",), [b], [], near_tol=1e-3)
+    fc = fingerprint(("s",), [c], [], near_tol=1e-3)
+    assert len({fa.near, fb.near, fc.near}) == 3
+    assert len({fa.exact, fb.exact, fc.exact}) == 3
+    # and the near digest is a function of WHERE the NaNs are, not of
+    # their payload bits (raw bytes still split the exact layer)
+    payload = np.frombuffer(np.uint64(0x7FF8000000000001).tobytes(),
+                            np.float64)[0]
+    fa2 = fingerprint(("s",), [np.array([1.0, payload, 3.0])], [],
+                      near_tol=1e-3)
+    assert fa2.near == fa.near and fa2.exact != fa.exact
+    # NaN position matters
+    fa3 = fingerprint(("s",), [np.array([np.nan, 1.0, 3.0])], [],
+                      near_tol=1e-3)
+    assert fa3.near != fa.near
+
+
+def test_near_digest_separates_close_knobs():
+    """Regression: the near digest used to quantize the knob vector on the
+    content grid, so ε=1e-3 and ε=1e-4 both rounded to 0 and a loose solve
+    could seed a tight request.  Knobs now hash exactly in both layers."""
+    leaves = [np.arange(6.0)]
+    f3 = fingerprint(("s",), leaves, [1e-3], near_tol=1e-2)
+    f4 = fingerprint(("s",), leaves, [1e-4], near_tol=1e-2)
+    assert f3.exact != f4.exact
+    assert f3.near != f4.near
+
+
+# ---------------------------------------------------------------------------
+# second stage: sliced-profile matching
+# ---------------------------------------------------------------------------
+
+def test_profile_match_unit_gates_on_knobs_static_and_distance():
+    cache = PlanCache(4, near_tol=1e-3)
+    fp = fingerprint(("s",), [np.arange(4.0)], [0.1], near_tol=1e-3)
+    prof = np.array([1.0, 2.0, 3.0])
+    cache.store(fp, "R", profile=prof, knob_key=b"k1", aux=("ox", "oy"))
+    hit = cache.profile_match(("s",), b"k1", prof + 1e-9, 0.05)
+    assert hit == ("R", ("ox", "oy"))            # result + aux hand-back
+    assert cache.profile_hits == 1
+    assert cache.profile_match(("s",), b"k2", prof, 0.05) is None  # knobs
+    assert cache.profile_match(("t",), b"k1", prof, 0.05) is None  # static
+    assert cache.profile_match(("s",), b"k1", prof * 3, 0.05) is None
+    assert cache.profile_match(("s",), b"k1", np.ones(5), 0.05) is None
+    # entries stored WITHOUT a profile never match
+    fp2 = fingerprint(("s",), [np.arange(4.0) + 9], [0.1], near_tol=1e-3)
+    cache.store(fp2, "S")
+    assert cache.profile_match(("s",), None, prof * 0 + 99, 1e9) is None
+
+    # eviction prunes the profile index with its entry
+    small = PlanCache(1, near_tol=1e-3)
+    small.store(fp, "R", profile=prof, knob_key=b"k", aux=None)
+    small.store(fp2, "S", profile=prof + 10, knob_key=b"k", aux=None)
+    assert small.profile_match(("s",), b"k", prof, 0.05) is None
+    assert small.profile_match(("s",), b"k", prof + 10, 0.05) is not None
+
+
+def _rot_perm(prob, seed, rotate=True, permute=True):
+    """A semantically-identical copy of a point-cloud problem: each side
+    independently rotated (isometry of the metric) and/or re-indexed
+    (atoms and weights permuted together)."""
+    r = np.random.default_rng(seed)
+
+    def side(g, w):
+        p, wn = np.asarray(g.points), np.asarray(w)
+        if rotate:
+            th = r.uniform(0.0, 2.0 * np.pi)
+            q = np.array([[np.cos(th), -np.sin(th)],
+                          [np.sin(th), np.cos(th)]])
+            p = p @ q.T
+        if permute:
+            perm = r.permutation(len(p))
+            p, wn = p[perm], wn[perm]
+        return PointCloudGeometry(jnp.asarray(p), g.metric), jnp.asarray(wn)
+
+    gx, gy, mu, nu = prob
+    (gx2, mu2), (gy2, nu2) = side(gx, mu), side(gy, nu)
+    return (gx2, gy2, mu2, nu2)
+
+
+def _profile_engine(**kw):
+    defaults = dict(solver=WARM_SOLVER, max_batch=4, size_bucket=16,
+                    tol=WARM_TOL, scheduler="pipeline", segment_iters=5,
+                    cache_capacity=16, cache_near_tol=1e-3,
+                    cache_profile_tol=0.08)
+    defaults.update(kw)
+    return GWEngine(GWServeConfig(**defaults))
+
+
+@pytest.mark.parametrize("variant", ["rotate", "permute", "both"])
+def test_profile_stage_realigns_rotated_and_reindexed_repeats(variant):
+    """A rotated and/or re-indexed copy misses every byte digest, but its
+    canonicalized sliced profile matches the cached solve — and the
+    canonical-order realignment re-indexes the cached plan onto the new
+    atom ordering, so the warm start converges in strictly fewer outer
+    steps to the SAME optimum (a misaligned seed would find a different
+    basin — that was the bug the realignment fixes)."""
+    eng = _profile_engine()
+    prob = _pc_problem(10, 12, 40)
+    rid0 = eng.submit(*prob)
+    cold = eng.flush()[rid0]
+    assert bool(cold.info.converged)
+    assert int(cold.info.outer_iters) > 1
+
+    copy = _rot_perm(prob, 41, rotate=variant != "permute",
+                     permute=variant != "rotate")
+    rid1 = eng.submit(*copy)
+    warm = eng.flush()[rid1]
+    assert eng.stats["cache_hits"] == 0          # every byte digest missed
+    assert eng.stats["cache_profile_hits"] == 1  # ...the profile didn't
+    assert eng.stats["cache_warm_starts"] == 1
+    assert eng.stats["cache_misses"] == 0
+    assert bool(warm.info.converged)
+    assert int(warm.info.outer_iters) < int(cold.info.outer_iters)
+    np.testing.assert_allclose(float(warm.value), float(cold.value),
+                               rtol=1e-3, atol=1e-6)
+
+
+def test_mixed_stream_converts_majority_of_misses_to_warm_starts():
+    """The acceptance stream: fresh traffic mixed with ~30% rotated /
+    re-indexed repeats.  Every repeat is an exact-hash miss; the profile
+    second stage must convert the majority into warm starts that converge
+    in strictly fewer outer iterations to the same optimum."""
+    eng = _profile_engine()
+    bases = [_pc_problem(10, 12, 50 + i) for i in range(5)]
+    cold_rids = [eng.submit(*p) for p in bases]
+    res = eng.flush()
+    cold = [res[r] for r in cold_rids]
+    assert all(bool(c.info.converged) for c in cold)
+
+    rng = np.random.default_rng(60)
+    repeats, fresh = [], []
+    for j in range(10):
+        if j % 3 == 0:                      # ~30% of the mixed phase
+            i = int(rng.integers(len(bases)))
+            repeats.append((i, eng.submit(*_rot_perm(bases[i], 70 + j))))
+        else:
+            fresh.append(eng.submit(*_pc_problem(10, 12, 80 + j)))
+    out = eng.flush()
+
+    assert eng.stats["cache_hits"] == 0     # nothing repeats byte-for-byte
+    converted = eng.stats["cache_profile_hits"]
+    assert converted >= (len(repeats) + 1) // 2 + 1   # strict majority
+    for i, rid in repeats:
+        w = out[rid]
+        assert bool(w.info.converged)
+        assert int(w.info.outer_iters) < int(cold[i].info.outer_iters)
+        np.testing.assert_allclose(float(w.value), float(cold[i].value),
+                                   rtol=1e-3, atol=1e-6)
+    for rid in fresh:                       # fresh traffic still solves
+        assert bool(out[rid].info.converged)
+
+
+def test_profile_stage_respects_barrier_and_knob_boundaries():
+    """No profile warm starts under the barrier scheduler (no lane carry
+    to seed), and never across knob settings (ε=0.2 solve must not seed an
+    ε=0.1 request even when the geometry profile matches exactly)."""
+    eng = GWEngine(GWServeConfig(
+        solver=WARM_SOLVER, max_batch=4, size_bucket=16, tol=WARM_TOL,
+        scheduler="barrier", cache_capacity=8, cache_near_tol=1e-3,
+        cache_profile_tol=0.08))
+    prob = _pc_problem(8, 12, 90)
+    eng.submit(*prob)
+    eng.flush()
+    eng.submit(*_rot_perm(prob, 91))
+    eng.flush()
+    assert eng.stats["cache_profile_hits"] == 0
+    assert eng.stats["cache_misses"] == 1
+
+    eng2 = _profile_engine()
+    eng2.submit(*prob, eps=2e-1)
+    eng2.flush()
+    eng2.submit(*_rot_perm(prob, 92), eps=1e-1)
+    eng2.flush()
+    assert eng2.stats["cache_profile_hits"] == 0
+    assert eng2.stats["cache_misses"] == 1      # per-flush counter

@@ -319,3 +319,41 @@ def test_warm_start_hardness_near_zero():
     assert eng.predicted_hardness(warm) < eng.predicted_hardness(cold) / 10
     easy = engine_mod._Request(2, prob, {}, knobs=(5e-2, TOL, 5e-2, 0.5))
     assert eng.predicted_hardness(warm) < eng.predicted_hardness(easy)
+
+
+# ---------------------------------------------------------------------------
+# serve telemetry: the trailing idle window is accounted
+# ---------------------------------------------------------------------------
+
+def test_serve_closes_trailing_idle_window_and_matches_flush_stats():
+    """Regression: `serve` opened a device-idle window at the last harvest
+    and never folded it into ``device_idle_s`` (flush's epilogue did, so
+    the two paths disagreed and a standing server under-reported idle
+    forever).  Both paths must leave the clock closed and the same
+    telemetry invariants holding on the same stream."""
+    stream = _mixed_stream(6, 8200)
+
+    flushed = _mk("pipeline", max_inflight_buckets=2)
+    for prob, ctl in stream:
+        flushed.submit(*prob, controls=ctl)
+    flushed.flush()
+
+    served = _mk("pipeline", max_inflight_buckets=2)
+    source = [((*prob,), {"controls": ctl}) for prob, ctl in stream]
+    got = run_event_loop(served, source)
+    assert len(got) == len(stream)
+
+    for eng in (flushed, served):
+        s = eng.stats
+        assert eng._idle_since is None          # clock closed, not dangling
+        assert eng._inflight == 0
+        assert s["flush_wall_s"] > 0.0
+        assert 0.0 <= s["device_idle_s"] <= s["flush_wall_s"]
+    # the final harvest always strands the device idle for at least the
+    # harvest's host time — serve must have captured that trailing window
+    assert served.stats["device_idle_s"] > 0.0
+    # identical telemetry keys on both paths (incremental admission may
+    # legitimately split the same work into MORE dispatches, so counts are
+    # not compared — result parity is test_event_loop_matches_flush's job)
+    assert set(served.stats) == set(flushed.stats)
+    assert served.stats["dispatches"] >= flushed.stats["dispatches"]

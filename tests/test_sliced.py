@@ -1,0 +1,410 @@
+"""Sliced-GW suite: the closed form, its invariances, and the serving tier.
+
+The estimator's promises:
+
+  * the per-direction closed form IS the 1D GW optimum — it matches a
+    brute-force evaluation of both monotone rearrangements exactly, and a
+    genuinely 1D problem (two `Grid1D` geometries) needs no projections at
+    all: the estimate equals the exact 1D solve;
+  * canonicalization makes the estimate isometry/re-indexing invariant:
+    a rotated + permuted copy of a point cloud scores ~0 against its
+    original while every byte-level cache digest misses;
+  * more projections → lower estimator variance;
+  * the serving tier answers ``service="sliced"`` with exactly ONE device
+    dispatch and stays jit-cache-stable across every request of a bucket,
+    and ``service="refine"``'s final result matches the cold exact solve.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from repro.core import GWConfig, entropic_gw
+from repro.core.geometry import (DenseGeometry, GridGeometry,
+                                 PointCloudGeometry)
+from repro.core.grids import Grid1D
+from repro.core.sliced import (_sliced_core, profile_distance,
+                               sliced_embedding, sliced_gw, sliced_plan,
+                               sliced_supported)
+from repro.serve.engine import GWEngine, GWServeConfig
+from test_plan_cache import WARM_SOLVER, WARM_TOL
+
+RNG = np.random.default_rng(0)
+
+
+def _cloud(n, seed, d=3, scale=1.0):
+    return np.random.default_rng(seed).normal(size=(n, d)) * scale
+
+
+def _uni(n):
+    return jnp.full((n,), 1.0 / n)
+
+
+def _brute_1d(x, wx, y, wy, px, py):
+    """Exact 1D GW by brute force: materialize the NW coupling between
+    the sorted marginals for both orientations, evaluate the quadratic
+    energy directly, take the min."""
+    def nw(wa, wb):
+        plan = np.zeros((len(wa), len(wb)))
+        i = j = 0
+        ra, rb = wa[0], wb[0]
+        while True:
+            m = min(ra, rb)
+            plan[i, j] += m
+            ra -= m
+            rb -= m
+            if ra <= 1e-15:
+                i += 1
+                if i == len(wa):
+                    break
+                ra = wa[i]
+            if rb <= 1e-15:
+                j += 1
+                if j == len(wb):
+                    break
+                rb = wb[j]
+        return plan
+
+    def energy(xs, ys, plan):
+        cx = np.abs(xs[:, None] - xs[None, :]) ** px
+        cy = np.abs(ys[:, None] - ys[None, :]) ** py
+        c2 = (cx[:, None, :, None] - cy[None, :, None, :]) ** 2
+        return np.einsum("ij,kl,ijkl->", plan, plan, c2)
+
+    ox, oy = np.argsort(x), np.argsort(y)
+    xs, wxs = x[ox], wx[ox]
+    ys, wys = y[oy], wy[oy]
+    e_inc = energy(xs, ys, nw(wxs, wys))
+    e_dec = energy(xs, ys[::-1], nw(wxs, wys[::-1]))
+    return min(e_inc, e_dec)
+
+
+# ---------------------------------------------------------------------------
+# the closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [(1, 1), (2, 2)])
+def test_closed_form_matches_brute_force_1d(p):
+    px, py = p
+    x = RNG.normal(size=7)
+    y = RNG.normal(size=9) * 1.7
+    wx = RNG.random(7) + 0.2
+    wy = RNG.random(9) + 0.2
+    wx, wy = wx / wx.sum(), wy / wy.sum()
+    # energies of a co-monotone coupling are translation-invariant, so the
+    # centered closed form and the uncentered brute force must agree
+    gx = GridGeometry(Grid1D(2, 1.0, px), "dense")
+    est = sliced_gw(PointCloudGeometry(jnp.asarray(x[:, None]),
+                                       "sqeuclidean" if px == 2
+                                       else "euclidean"),
+                    PointCloudGeometry(jnp.asarray(y[:, None]),
+                                       "sqeuclidean" if py == 2
+                                       else "euclidean"),
+                    jnp.asarray(wx), jnp.asarray(wy), n_proj=1)
+    ref = _brute_1d(x, wx, y, wy, px, py)
+    np.testing.assert_allclose(float(est.estimate), ref, rtol=1e-8,
+                               atol=1e-10)
+    assert gx.grid.k == px  # sanity: metric powers line up with geometries
+
+
+def test_1d_grids_match_exact_entropic_solve():
+    """A genuinely 1D problem (two Grid1D geometries) is direction-free:
+    the sliced estimate IS the 1D GW optimum, which the full entropic
+    solver approaches as ε → 0."""
+    gx = GridGeometry(Grid1D(9, 0.13, 1), "dense")
+    gy = GridGeometry(Grid1D(12, 0.07, 1), "dense")
+    mu, nu = _uni(9), _uni(12)
+    est = sliced_gw(gx, gy, mu, nu, n_proj=1)
+    cfg = GWConfig(eps=1e-3, outer_iters=200, sinkhorn_iters=2000,
+                   tol=1e-10, backend="dense", eps_init=1e-1,
+                   anneal_decay=0.5)
+    ref = entropic_gw(gx, gy, mu, nu, cfg)
+    np.testing.assert_allclose(float(est.estimate), float(ref.value),
+                               rtol=2e-2)
+    # and brute force agrees tightly (no entropic smoothing at all)
+    x = np.arange(9) * 0.13
+    y = np.arange(12) * 0.07
+    ref_bf = _brute_1d(x, np.asarray(mu), y, np.asarray(nu), 1, 1)
+    np.testing.assert_allclose(float(est.estimate), ref_bf, rtol=1e-8)
+
+
+def test_self_distance_and_symmetry():
+    pts = _cloud(15, 3)
+    g = PointCloudGeometry(jnp.asarray(pts))
+    self_est = sliced_gw(g, g, n_proj=8)
+    assert abs(float(self_est.estimate)) < 1e-8
+    h = PointCloudGeometry(jnp.asarray(_cloud(11, 4, scale=2.0)))
+    ab = sliced_gw(g, h, n_proj=16)
+    ba = sliced_gw(h, g, n_proj=16)
+    np.testing.assert_allclose(float(ab.estimate), float(ba.estimate),
+                               rtol=1e-6)
+    assert float(ab.estimate) > 1e-2    # genuinely different scales
+
+
+# ---------------------------------------------------------------------------
+# invariance: rotated / re-indexed copies
+# ---------------------------------------------------------------------------
+
+def test_rotated_permuted_copy_scores_zero_while_digests_miss():
+    pts = _cloud(18, 5)
+    q, _ = np.linalg.qr(np.random.default_rng(6).normal(size=(3, 3)))
+    perm = np.random.default_rng(7).permutation(18)
+    rot = (pts @ q.T)[perm]
+    ga = PointCloudGeometry(jnp.asarray(pts))
+    gb = PointCloudGeometry(jnp.asarray(rot))
+    est = sliced_gw(ga, gb, n_proj=16)
+    assert abs(float(est.estimate)) < 1e-8
+    # the two copies' profiles against a COMMON third geometry coincide
+    gc = PointCloudGeometry(jnp.asarray(_cloud(14, 8, scale=1.5)))
+    pa = sliced_gw(ga, gc, n_proj=16).profile
+    pb = sliced_gw(gb, gc, n_proj=16).profile
+    assert profile_distance(pa, pb) < 1e-6
+    # ...while the byte-level digests (the first two cache stages) miss
+    from repro.serve.cache import fingerprint
+    fa = fingerprint(("s",), [pts], [], near_tol=1e-3)
+    fb = fingerprint(("s",), [rot], [], near_tol=1e-3)
+    assert fa.exact != fb.exact and fa.near != fb.near
+
+
+def test_variance_shrinks_with_n_proj():
+    ga = PointCloudGeometry(jnp.asarray(_cloud(16, 10)))
+    gb = PointCloudGeometry(jnp.asarray(_cloud(16, 11, scale=1.4)))
+
+    def spread(n_proj):
+        ests = [float(sliced_gw(ga, gb, n_proj=n_proj,
+                                key=jax.random.PRNGKey(k)).estimate)
+                for k in range(12)]
+        return np.std(ests)
+
+    s4, s64 = spread(4), spread(64)
+    assert s64 < s4    # Monte-Carlo averaging over more directions
+
+
+# ---------------------------------------------------------------------------
+# the plan surface
+# ---------------------------------------------------------------------------
+
+def test_sliced_plan_exactly_feasible():
+    m, n = 13, 17
+    r = np.random.default_rng(12)
+    mu = r.random(m) + 0.3
+    nu = r.random(n) + 0.3
+    mu, nu = mu / mu.sum(), nu / nu.sum()
+    ga = PointCloudGeometry(jnp.asarray(_cloud(m, 13)))
+    gb = PointCloudGeometry(jnp.asarray(_cloud(n, 14)))
+    est = sliced_plan(ga, gb, jnp.asarray(mu), jnp.asarray(nu), n_proj=8)
+    plan = np.asarray(est.plan)
+    assert plan.shape == (m, n)
+    np.testing.assert_allclose(plan.sum(1), mu, atol=1e-12)
+    np.testing.assert_allclose(plan.sum(0), nu, atol=1e-12)
+    assert (plan >= 0).all()
+
+
+def test_grid_method_agrees_with_sorted():
+    ga = PointCloudGeometry(jnp.asarray(_cloud(24, 20, d=2)))
+    gb = PointCloudGeometry(jnp.asarray(_cloud(20, 21, d=2, scale=1.3)))
+    sorted_est = sliced_gw(ga, gb, n_proj=6)
+    grid_est = sliced_gw(ga, gb, n_proj=6, method="grid", grid_n=64)
+    # the grid path carries resampling + entropic bias — agreement is
+    # a few percent, not exact
+    np.testing.assert_allclose(float(grid_est.estimate),
+                               float(sorted_est.estimate), rtol=0.1)
+    c = np.corrcoef(np.asarray(sorted_est.profile),
+                    np.asarray(grid_est.profile))[0, 1]
+    assert c > 0.9
+
+
+def test_supported_and_embedding_contract():
+    assert sliced_supported(GridGeometry(Grid1D(8, 0.1, 2), "dense"))
+    assert sliced_supported(PointCloudGeometry(jnp.asarray(_cloud(5, 0))))
+    dense = DenseGeometry(jnp.asarray(RNG.random((4, 4))))
+    assert not sliced_supported(dense)
+    with pytest.raises(ValueError, match="no coordinate embedding"):
+        sliced_embedding(dense)
+    with pytest.raises(ValueError, match="unknown sliced method"):
+        sliced_gw(PointCloudGeometry(jnp.asarray(_cloud(5, 0))),
+                  PointCloudGeometry(jnp.asarray(_cloud(5, 1))),
+                  method="bogus")
+
+
+# ---------------------------------------------------------------------------
+# serving tier
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    defaults = dict(solver=WARM_SOLVER, max_batch=4, size_bucket=16,
+                    tol=WARM_TOL, scheduler="pipeline", segment_iters=5)
+    defaults.update(kw)
+    return GWEngine(GWServeConfig(**defaults))
+
+
+def test_sliced_service_single_dispatch_and_jit_stable():
+    eng = _engine(service="sliced")
+    probs = [(PointCloudGeometry(jnp.asarray(_cloud(m, 30 + m))),
+              PointCloudGeometry(jnp.asarray(_cloud(n, 60 + n))),
+              _uni(m), _uni(n))
+             for m, n in [(9, 11), (12, 8), (10, 14)]]   # one 16×16 bucket
+    n_jit = _sliced_core._cache_size()
+    rids = [eng.submit(*p) for p in probs]
+    out = eng.flush()
+    # one dispatch per request, nothing else — no buckets, no segments
+    assert eng.stats["dispatches"] == 3
+    assert eng.stats["sliced_answers"] == 3
+    assert eng.stats["refills"] == 0
+    # ONE new executable for the whole bucket: ragged sizes pad to 16
+    assert _sliced_core._cache_size() <= n_jit + 1
+    for rid, p in zip(rids, probs):
+        res = out[rid]
+        assert res.plan is None and res.coupling is None
+        assert int(res.info.outer_iters) == 0
+        assert bool(res.info.converged)
+        ref = sliced_gw(*p, n_proj=eng.cfg.sliced_n_proj)
+        np.testing.assert_allclose(float(res.value), float(ref.estimate),
+                                   rtol=1e-5)
+
+
+def test_sliced_answer_padding_invariant():
+    """A request's sliced answer must not depend on its bucket padding:
+    zero-mass atoms are inert in every mass-weighted moment."""
+    m, n = 9, 11
+    prob = (PointCloudGeometry(jnp.asarray(_cloud(m, 40))),
+            PointCloudGeometry(jnp.asarray(_cloud(n, 41))),
+            _uni(m), _uni(n))
+    small = _engine(service="sliced", size_bucket=16)
+    big = _engine(service="sliced", size_bucket=64)
+    r1 = small.submit(*prob)
+    r2 = big.submit(*prob)
+    v1 = float(small.flush()[r1].value)
+    v2 = float(big.flush()[r2].value)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5)
+
+
+def test_refine_matches_cold_exact():
+    """On a problem where the sliced seed is exactly right — one side a
+    rotated + re-indexed copy of the other, so the best-direction monotone
+    coupling IS the GW optimum — the refined solve must land where the
+    cold solve lands.  (On generic problems GW is non-convex and a seed
+    may legitimately select a different basin; the service promises a
+    converged solve from the seed, not basin equality.)"""
+    pts = _cloud(12, 50, d=2)
+    th = 0.7
+    q = np.array([[np.cos(th), -np.sin(th)], [np.sin(th), np.cos(th)]])
+    rot = (pts @ q.T)[np.random.default_rng(51).permutation(12)]
+    prob = (PointCloudGeometry(jnp.asarray(pts)),
+            PointCloudGeometry(jnp.asarray(rot)), _uni(12), _uni(12))
+    cold_eng = _engine()
+    rc = cold_eng.submit(*prob)
+    cold = cold_eng.flush()[rc]
+    assert bool(cold.info.converged)
+
+    eng = _engine(service="refine")
+    rr = eng.submit(*prob)
+    out = eng.flush()[rr]
+    assert bool(out.info.converged)
+    assert float(cold.value) < 1e-2          # isometric copies: GW ≈ 0
+    np.testing.assert_allclose(float(out.value), float(cold.value),
+                               atol=1e-3)
+    assert eng.stats["sliced_answers"] == 1
+
+
+def test_refine_yields_preliminary_then_final_in_serve():
+    prob = (PointCloudGeometry(jnp.asarray(_cloud(10, 52, d=2))),
+            PointCloudGeometry(jnp.asarray(_cloud(12, 53, d=2))),
+            _uni(10), _uni(12))
+    eng = _engine(service="refine")
+    outs = list(eng.serve(iter([prob])))
+    rids = [rid for rid, _ in outs]
+    assert len(outs) == 2 and rids[0] == rids[1]
+    pre, final = outs[0][1], outs[1][1]
+    assert int(pre.info.outer_iters) == 0        # the sliced preliminary
+    assert pre.coupling is not None              # carries the seed plan
+    assert int(final.info.outer_iters) > 0
+    assert bool(final.info.converged)
+    ref = sliced_gw(*prob, n_proj=eng.cfg.sliced_n_proj)
+    np.testing.assert_allclose(float(pre.value), float(ref.estimate),
+                               rtol=1e-5)
+
+
+def test_submit_rejects_unsliceable_and_fgw_fast_requests():
+    dense = DenseGeometry(jnp.asarray(RNG.random((6, 6))))
+    eng = _engine()
+    with pytest.raises(ValueError, match="coordinate embedding"):
+        eng.submit(dense, dense, _uni(6), _uni(6), service="sliced")
+    ga = PointCloudGeometry(jnp.asarray(_cloud(6, 70)))
+    with pytest.raises(ValueError, match="exact service"):
+        eng.submit(ga, ga, _uni(6), _uni(6), service="refine",
+                   feature_cost=jnp.zeros((6, 6)))
+    with pytest.raises(ValueError, match="unknown service"):
+        eng.submit(ga, ga, _uni(6), _uni(6), service="turbo")
+    # engine-level sliced service degrades gracefully on dense geometries
+    eng2 = _engine(service="sliced")
+    rid = eng2.submit(dense, dense, _uni(6), _uni(6))
+    res = eng2.flush()[rid]
+    assert res.plan is not None                  # solved exactly instead
+    assert eng2.stats["sliced_answers"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hardness calibration
+# ---------------------------------------------------------------------------
+
+def test_calibrator_fallback_then_learns():
+    from repro.serve.calibration import HardnessCalibrator
+    cal = HardnessCalibrator(2, min_obs=4)
+    assert cal.predict("k", [1.0, 1.0]) is None   # no data → prior formula
+    for i in range(8):
+        x = float(i)
+        cal.observe("k", [1.0, x], 3.0 + 2.0 * x)
+    assert cal.n_obs("k") == 8
+    # learned the affine trend: predictions order (and approximate) y
+    lo = cal.predict("k", [1.0, 1.0])
+    hi = cal.predict("k", [1.0, 5.0])
+    assert lo is not None and hi is not None and hi > lo
+    np.testing.assert_allclose(hi, 13.0, rtol=0.15)
+    assert cal.predict("other", [1.0, 1.0]) is None   # per-key statistics
+    # non-finite observations are dropped, not folded into the normals
+    cal.observe("k", [1.0, np.nan], 1.0)
+    assert cal.n_obs("k") == 8
+    with pytest.raises(ValueError):
+        cal.observe("k", [1.0], 1.0)
+    with pytest.raises(ValueError):
+        HardnessCalibrator(0)
+
+
+def test_engine_calibration_observes_and_takes_over():
+    eng = _engine(calibrate_hardness=True, calib_min_obs=3)
+    probs = [(PointCloudGeometry(jnp.asarray(_cloud(10, 80 + i, d=2))),
+              PointCloudGeometry(jnp.asarray(_cloud(12, 90 + i, d=2))),
+              _uni(10), _uni(12)) for i in range(4)]
+    for p in probs:
+        eng.submit(*p)
+    eng.flush()
+    assert eng.calib.observations == 4
+    # with min_obs reached, predicted_hardness now returns the calibrated
+    # iteration estimate — a nonnegative count-scale number, not the
+    # formula's log-scale score
+    rid = eng.submit(*probs[0])
+    req = eng._queue[-1]
+    eng._resolve(req)
+    key = eng._bucket_key(req)
+    assert eng.calib.n_obs(key) >= 3
+    h = eng.predicted_hardness(req)
+    assert h >= 0.0
+    assert eng.calib.predict(key, eng._hardness_features(req)) is not None
+    eng.flush()
+
+    # a fresh engine (no observations) falls back to the prior formula —
+    # the ordering contract existing tests rely on
+    fresh = _engine(calibrate_hardness=True)
+    r2 = fresh.submit(*probs[0])
+    req2 = fresh._queue[-1]
+    fresh._resolve(req2)
+    assert fresh.calib.predict(fresh._bucket_key(req2),
+                               fresh._hardness_features(req2)) is None
+    assert fresh.predicted_hardness(req2) > 0.0
+    fresh.flush()
