@@ -18,7 +18,10 @@ Public API:
   solver         — the convergence-controlled mirror-descent driver
                    (SolveControls, ConvergenceInfo, mirror_descent) behind
                    every solver: tol-based early stopping, ε-annealing,
-                   per-problem masking under vmap
+                   per-problem masking under vmap; fixed_point_value /
+                   ImplicitSpec — the implicit-differentiation surface
+                   (custom_vjp around the fixed point) every solver's
+                   gradients route through
   sinkhorn       — log/kernel/unbalanced Sinkhorn (+ chunked adaptive
                    variants with early stopping)
   gw / fgw / ugw — entropic (Fused/Unbalanced) GW solvers over any geometry;
@@ -28,8 +31,9 @@ Public API:
 """
 from repro.core import (fgc, geometry, gradient, grids, sinkhorn, solver, gw,
                         fgw, ugw, barycenter, losses, coot, coupling, sliced)
-from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
-                               info_of, init_carry, mirror_descent,
+from repro.core.solver import (ConvergenceInfo, ImplicitSpec, MirrorCarry,
+                               SolveControls, fixed_point_value, info_of,
+                               init_carry, mirror_descent,
                                mirror_descent_segment, resolve_controls)
 from repro.core.coupling import (Coupling, FullCoupling, LowRankCoupling,
                                  coupling_delta, full_init, lowrank_init)
@@ -55,9 +59,9 @@ __all__ = [
     "LowRankGradientOperator",
     "Coupling", "FullCoupling", "LowRankCoupling", "coupling_delta",
     "full_init", "lowrank_init",
-    "ConvergenceInfo", "MirrorCarry", "SolveControls", "info_of",
-    "init_carry", "mirror_descent", "mirror_descent_segment",
-    "resolve_controls",
+    "ConvergenceInfo", "ImplicitSpec", "MirrorCarry", "SolveControls",
+    "fixed_point_value", "info_of", "init_carry", "mirror_descent",
+    "mirror_descent_segment", "resolve_controls",
     "Geometry", "GridGeometry", "LowRankGeometry", "PointCloudGeometry",
     "DenseGeometry", "as_geometry",
     "Grid1D", "Grid2D", "gw_product", "gw_product_dense",

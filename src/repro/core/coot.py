@@ -73,7 +73,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
     uniform grid, or a low-rank factorization — to switch those products to
     the fast apply (GW specialization).
     """
-    ctl, unroll = resolve_controls(cfg)
+    ctl = resolve_controls(cfg)
     x2 = x * x
     y2 = y * y
     state0 = (mu_s[:, None] * nu_s[None, :], mu_v[:, None] * nu_v[None, :],
@@ -91,8 +91,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                                         cfg.backend))
         pi_s, f_s, g_s, err_s, used_s = sk.solve_adaptive(
             m_s, mu_s, nu_s, eps_s, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, "log", f_s, g_s, unroll=unroll,
-            backend=cfg.sinkhorn_backend)
+            inner_tol, "log", f_s, g_s, backend=cfg.sinkhorn_backend)
         # features half-step
         c = x2.T @ pi_s.sum(axis=1)
         d = y2.T @ pi_s.sum(axis=0)
@@ -100,8 +99,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
                - 2.0 * (x.T @ pi_s @ y))
         pi_v, f_v, g_v, err_v, used_v = sk.solve_adaptive(
             m_v, mu_v, nu_v, eps_v, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, "log", f_v, g_v, unroll=unroll,
-            backend=cfg.sinkhorn_backend)
+            inner_tol, "log", f_v, g_v, backend=cfg.sinkhorn_backend)
         # gate on the worse of the two residuals: each half-step drives its
         # OWN residual to ≤ tol, so summing would demand 2× what the inner
         # solves deliver and could wedge convergence just above tol
@@ -112,8 +110,7 @@ def entropic_coot(x, y, mu_s, nu_s, mu_v, nu_v,
         return (jnp.abs(new[0] - old[0]).sum()
                 + jnp.abs(new[1] - old[1]).sum())
 
-    state, info = mirror_descent(step, state0, delta, ctl, cfg.outer_iters,
-                                 unroll=unroll)
+    state, info = mirror_descent(step, state0, delta, ctl, cfg.outer_iters)
     pi_s, pi_v, f_s, g_s, f_v, g_v = state
     # final objective
     a = x2 @ pi_v.sum(axis=1)

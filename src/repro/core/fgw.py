@@ -23,9 +23,11 @@ import jax.numpy as jnp
 
 from repro.core import sinkhorn as sk
 from repro.core.coupling import FullCoupling, coupling_delta, full_init
+from repro.core.geometry import as_geometry
 from repro.core.gradient import (GeometryLike, GradientOperator,
                                  LowRankGradientOperator)
-from repro.core.gw import (GWConfig, GWResult, _result_of, lowrank_descent)
+from repro.core.gw import (GWConfig, GWResult, _result_of, fixed_point_value,
+                           implicit_spec, lowrank_descent)
 from repro.core.solver import (SolveControls, mirror_descent,
                                resolve_controls)
 
@@ -49,8 +51,7 @@ def fgw_full_value(op: GradientOperator, feature_cost, gamma, theta):
     return (1.0 - theta) * lin + theta * op.energy(gamma)
 
 
-def fgw_step_fn(op: GradientOperator, c2, theta, mu, nu, cfg: FGWConfig,
-                unroll: bool = False):
+def fgw_step_fn(op: GradientOperator, c2, theta, mu, nu, cfg: FGWConfig):
     """The full-plan FGW mirror-descent step closure — same shape as
     `gw.gw_step_fn` but with the blended constant term ``c2 =
     (1−θ)·C⊙C + θ·c1`` and the quadratic gradient scaled by θ.  The ONE
@@ -60,8 +61,8 @@ def fgw_step_fn(op: GradientOperator, c2, theta, mu, nu, cfg: FGWConfig,
         grad = c2 - 4.0 * theta * op.product(state.plan)
         gamma, f, g, err, used = sk.solve_adaptive(
             grad, mu, nu, eps, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.sinkhorn_mode, state.f, state.g, unroll=unroll,
-            backend=cfg.sinkhorn_backend)
+            inner_tol, cfg.sinkhorn_mode, state.f, state.g,
+            backend=cfg.sinkhorn_backend, cost_dtype=cfg.cost_dtype)
         return FullCoupling(gamma, f, g), err, used
 
     return step
@@ -92,7 +93,8 @@ def fgw_lr_step_fn(op: LowRankGradientOperator, dx2, dy2, fsq, theta,
         q, r, g, err, used = sk.lr_mirror_step(
             state.q, state.r, state.g, gq, gr, gg, mu, nu, eps,
             lr_gamma, cfg.sinkhorn_iters, cfg.sinkhorn_chunk,
-            inner_tol, cfg.g_floor, cfg.lowrank_backend)
+            inner_tol, cfg.g_floor, cfg.lowrank_backend,
+            cost_dtype=cfg.cost_dtype)
         return type(state)(q, r, g), err, used
 
     return step
@@ -118,23 +120,27 @@ def entropic_fgw(grid_x: GeometryLike, grid_y: GeometryLike, feature_cost,
     feature cost is a user-supplied dense (M,N) input, so FGW cannot be
     fully (M,N)-free: its square is built ONCE per solve and each step pays
     one O(MNr) product against the factors — but the PLAN and all solver
-    state stay factored (no new per-iteration (M,N) arrays)."""
-    ctl, unroll = resolve_controls(cfg, controls)
-    theta = cfg.theta
+    state stay factored (no new per-iteration (M,N) arrays).
+
+    Reverse-mode differentiable in the geometries, measures, feature cost,
+    and controls under every backend/plan combination — the solve routes
+    through `repro.core.solver.fixed_point_value` exactly like
+    `entropic_gw` (the feature-cost cotangent is inherently (M,N))."""
+    ctl = resolve_controls(cfg, controls)
     if cfg.plan == "lowrank":
         if gamma0 is not None:
             raise ValueError("gamma0 is a dense-plan warm start; "
                              "unavailable under plan='lowrank'")
-        return _entropic_fgw_lowrank(grid_x, grid_y, feature_cost, mu, nu,
-                                     cfg, ctl)
-    op = GradientOperator(grid_x, grid_y, cfg.backend)
-    c1, _, _ = op.constant_term(mu, nu)
-    c2 = (1.0 - theta) * feature_cost ** 2 + theta * c1
-    state0 = full_init(mu, nu, gamma0)
-    step = fgw_step_fn(op, c2, theta, mu, nu, cfg, unroll=unroll)
-    coup, info = mirror_descent(step, state0, coupling_delta, ctl,
-                                cfg.outer_iters, unroll=unroll)
-    value = fgw_full_value(op, feature_cost, coup.plan, theta)
+        if isinstance(cfg.plan_rank, str):
+            return _entropic_fgw_lowrank(grid_x, grid_y, feature_cost, mu,
+                                         nu, cfg, ctl)
+        state0 = None
+    else:
+        state0 = full_init(mu, nu, gamma0) if gamma0 is not None else None
+    gx = as_geometry(grid_x, cfg.backend)
+    gy = as_geometry(grid_y, cfg.backend)
+    value, coup, info = fixed_point_value(
+        implicit_spec(cfg), (gx, gy, mu, nu, feature_cost, state0), ctl)
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
 

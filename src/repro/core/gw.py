@@ -65,8 +65,9 @@ from repro.core.coupling import (Coupling, FullCoupling, LowRankCoupling,
                                  coupling_delta, full_init, lowrank_init)
 from repro.core.geometry import Geometry, as_geometry
 from repro.core.gradient import GradientOperator, LowRankGradientOperator
-from repro.core.solver import (ConvergenceInfo, MirrorCarry, SolveControls,
-                               info_of, init_carry, mirror_descent,
+from repro.core.solver import (ConvergenceInfo, ImplicitSpec, MirrorCarry,
+                               SolveControls, fixed_point_value, info_of,
+                               init_carry, mirror_descent,
                                mirror_descent_segment, resolve_controls)
 
 
@@ -80,15 +81,38 @@ class GWConfig:
     sinkhorn_mode: str = "log"
     #: log-mode Sinkhorn dual-update backend: "auto" (fused Pallas kernels
     #: on TPU, XLA scans elsewhere) | "pallas" | "xla".  Structural (part of
-    #: the jit cache key, kept by `static_key`); the unroll/reverse-AD path
-    #: always runs XLA (see `sinkhorn.solve_adaptive`).
+    #: the jit cache key, kept by `static_key`); reverse-mode AD never needs
+    #: XLA here — the implicit backward pass linearizes its own XLA one-step
+    #: map (see `grad_mode`), so any backend is trainable.
     sinkhorn_backend: str = "auto"
     tol: float = 0.0           # early-stop tolerance (0 → fixed-iteration)
     eps_init: float | None = None   # ε-annealing start (None/≤eps → off)
     anneal_decay: float = 0.5  # geometric ε decay per outer step
     sinkhorn_chunk: int = 25   # inner iterations between residual checks
-    unroll: bool = False       # scan-only path (reverse-mode differentiable)
     inner_loosen: float = 1.0  # inner-tol ε-scaling strength (0 → flat tol)
+    #: reverse-mode gradient construction (structural): "implicit" = the
+    #: envelope term plus the Neumann fixed-point correction from
+    #: `repro.core.solver.fixed_point_value` (matches unrolled AD to solver
+    #: tolerance); "envelope" = Danskin term only (exact as tol→0, cheaper).
+    grad_mode: str = "implicit"
+    #: differentiable one-step map shape for the backward pass: Sinkhorn
+    #: dual-update pairs per T̃ application (full plan) and Dykstra sweeps
+    #: per T̃ application (lowrank — its projection re-walks its duals from
+    #: zero, so it needs enough sweeps to re-converge them)
+    implicit_inner_steps: int = 1
+    implicit_lr_sweeps: int = 25
+    #: Neumann-series cap / early-exit threshold for the implicit
+    #: correction (∂T̃'s spectral radius approaches 1 as ε shrinks, so the
+    #: series needs headroom; the early exit keeps well-conditioned
+    #: problems cheap)
+    implicit_solve_iters: int = 60
+    implicit_solve_tol: float = 1e-10
+    #: cost-tile element type for the FUSED kernels ("f32" | "bf16"):
+    #: "bf16" streams C (full plan) / the log-kernels (factored plan)
+    #: through the MXU-native 16-bit tiles with f32 accumulators — half the
+    #: HBM traffic on the dominant operand.  Structural; the XLA expressions
+    #: ignore it.
+    cost_dtype: str = "f32"
     #: plan representation: "full" (dense (M,N) plan + Sinkhorn potentials)
     #: or "lowrank" (factored P = Q diag(1/g) Rᵀ, Scetbon et al. 2021 —
     #: O((M+N)r) state, no (M,N) array anywhere).  STRUCTURAL: part of the
@@ -125,21 +149,17 @@ class GWConfig:
     g_floor: float = 1e-10
 
     def __post_init__(self):
-        # unroll is the fixed-length differentiable path: it ignores tol by
-        # design, so pairing them is always a misconfiguration — and a
-        # silent one (results would look like hard non-converged problems)
-        if self.unroll and self.tol > 0.0:
-            raise ValueError(
-                "unroll=True runs the fixed-length scan path and ignores "
-                "tol; set tol=0 (fixed mode) or unroll=False (adaptive)")
         if self.plan not in ("full", "lowrank"):
             raise ValueError(
                 f"unknown plan {self.plan!r}: expected 'full' or 'lowrank'")
-        if self.unroll and self.plan == "lowrank":
+        if self.grad_mode not in ("implicit", "envelope"):
             raise ValueError(
-                "unroll=True is the reverse-differentiable scan path; the "
-                "factored plan's Dykstra projection is a while_loop and "
-                "has no unrolled form — use plan='full' for unroll")
+                f"unknown grad_mode {self.grad_mode!r}: expected "
+                "'implicit' or 'envelope'")
+        if self.cost_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"unknown cost_dtype {self.cost_dtype!r}: expected "
+                "'f32' or 'bf16'")
         if isinstance(self.plan_rank, str) and self.plan_rank != "auto":
             raise ValueError(
                 f"plan_rank={self.plan_rank!r}: expected an int or 'auto'")
@@ -209,8 +229,7 @@ def gw_energy(grid_x, grid_y, gamma, backend: str = "cumsum",
         gamma, dx2_mu, dy2_nu)
 
 
-def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
-               unroll: bool = False):
+def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig):
     """The full-plan GW mirror-descent step closure — the ONE step body
     behind the one-shot solve, the batched solve, and the segmented
     (continuous batching) solve, so all three walk identical iterates.
@@ -220,7 +239,8 @@ def gw_step_fn(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
         gamma, f, g, err, used = sk.solve_adaptive(
             op.grad(state.plan, c1), mu, nu, eps, cfg.sinkhorn_iters,
             cfg.sinkhorn_chunk, inner_tol, cfg.sinkhorn_mode, state.f,
-            state.g, unroll=unroll, backend=cfg.sinkhorn_backend)
+            state.g, backend=cfg.sinkhorn_backend,
+            cost_dtype=cfg.cost_dtype)
         return FullCoupling(gamma, f, g), err, used
 
     return step
@@ -243,7 +263,7 @@ def gw_lr_step_fn(op: LowRankGradientOperator, dx2, dy2, mu, nu,
         q, r, g, err, used = sk.lr_mirror_step(
             state.q, state.r, state.g, gq, gr, gg, mu, nu, eps, lr_gamma,
             cfg.sinkhorn_iters, cfg.sinkhorn_chunk, inner_tol, cfg.g_floor,
-            cfg.lowrank_backend)
+            cfg.lowrank_backend, cost_dtype=cfg.cost_dtype)
         return LowRankCoupling(q, r, g), err, used
 
     return step
@@ -280,12 +300,12 @@ def gw_plan_solve(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
     operator — the plan-solve shared by `entropic_gw` and the barycenter's
     inner solves.  ``state0``: optional `FullCoupling` warm start.  Returns
     ``(FullCoupling, ConvergenceInfo)``."""
-    ctl, unroll = resolve_controls(cfg, controls)
+    ctl = resolve_controls(cfg, controls)
     if state0 is None:
         state0 = full_init(mu, nu)
-    step = gw_step_fn(op, c1, mu, nu, cfg, unroll=unroll)
+    step = gw_step_fn(op, c1, mu, nu, cfg)
     return mirror_descent(step, state0, coupling_delta, ctl,
-                          cfg.outer_iters, unroll=unroll)
+                          cfg.outer_iters)
 
 
 def gw_plan_segment(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
@@ -300,13 +320,168 @@ def gw_plan_segment(op: GradientOperator, c1, mu, nu, cfg: GWConfig,
                                   cfg.outer_iters, carry, segment)
 
 
+def _implicit_solve(cfg: GWConfig, inputs, controls):
+    """`ImplicitSpec.solve` for GW/FGW in either plan representation: the
+    exact forward solve the unwrapped solvers ran (same operators, same
+    step closures, any backend)."""
+    gx, gy, mu, nu, feat, state0 = inputs
+    if cfg.plan == "lowrank":
+        op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank,
+                                     cfg.lowrank_backend)
+        dx2, dy2 = op.constant_term(mu, nu)
+        if feat is None:
+            step = gw_lr_step_fn(op, dx2, dy2, mu, nu, cfg,
+                                 controls.lr_gamma)
+        else:
+            from repro.core import fgw as _fgw
+            step = _fgw.fgw_lr_step_fn(op, dx2, dy2, feat ** 2, cfg.theta,
+                                       mu, nu, cfg, controls.lr_gamma)
+        if state0 is None:
+            state0 = lowrank_init(mu, nu, _static_rank(cfg),
+                                  method=cfg.lowrank_init, geom_x=op.geom_x,
+                                  geom_y=op.geom_y)
+        return mirror_descent(step, state0, coupling_delta, controls,
+                              cfg.outer_iters)
+    op = GradientOperator(gx, gy, cfg.backend)
+    c1, _, _ = op.constant_term(mu, nu)
+    if state0 is None:
+        state0 = full_init(mu, nu)
+    if feat is None:
+        step = gw_step_fn(op, c1, mu, nu, cfg)
+    else:
+        from repro.core import fgw as _fgw
+        c2 = (1.0 - cfg.theta) * feat ** 2 + cfg.theta * c1
+        step = _fgw.fgw_step_fn(op, c2, cfg.theta, mu, nu, cfg)
+    return mirror_descent(step, state0, coupling_delta, controls,
+                          cfg.outer_iters)
+
+
+def _implicit_step(cfg: GWConfig, state, inputs, controls):
+    """`ImplicitSpec.step` — ONE differentiable mirror step T̃ at the
+    converged state, pure XLA.
+
+    Full plan: rebuild the linearized cost at the plan, run
+    ``implicit_inner_steps`` warm-started dual-update pairs (idempotent at
+    the solution), reassemble the plan.  Factored plan: the LR gradients +
+    prox kernels + ``implicit_lr_sweeps`` differentiable Dykstra sweeps —
+    everything (N, r)-sized, so the backward jaxpr carries no (M, N) aval
+    for pure GW.  Linearized at the TARGET ε (a converged annealed solve
+    has finished its ramp; an unconverged mid-ramp solve's gradient is an
+    approximation at ε_target by construction).
+    """
+    gx, gy, mu, nu, feat, _ = inputs
+    eps = controls.eps
+    if cfg.plan == "lowrank":
+        op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank,
+                                     "xla")
+        dx2, dy2 = op.constant_term(mu, nu)
+
+        def half(state):
+            gq, gr, gg = op.grads(state, dx2, dy2, cfg.g_floor)
+            if feat is not None:
+                # the FGW feature blend of `fgw.fgw_lr_step_fn`
+                fsq = feat ** 2
+                iq = 1.0 / jnp.maximum(state.g, cfg.g_floor)
+                fr = fsq @ state.r
+                fq = fsq.T @ state.q
+                lin_diag = jnp.sum(state.q * fr, axis=0)
+                th = cfg.theta
+                gq = th * gq + (1.0 - th) * fr * iq[None, :]
+                gr = th * gr + (1.0 - th) * fq * iq[None, :]
+                gg = th * gg - (1.0 - th) * (iq ** 2) * lin_diag
+            q, r, g = sk.lr_mirror_step_diff(
+                state.q, state.r, state.g, gq, gr, gg, mu, nu, eps,
+                controls.lr_gamma, cfg.implicit_lr_sweeps, cfg.g_floor)
+            return type(state)(q, r, g)
+
+        # T̃ is the DOUBLE mirror step: the factored solver converges to a
+        # period-2 orbit in FACTOR space (the plan Q diag(1/g) Rᵀ is exactly
+        # fixed, but Dykstra's zero-dual restart leaves (Q, R, g) flipping
+        # between two gauge representatives), so the single step has no
+        # fixed point to linearize — T̃² does, to machine precision
+        return half(half(state))
+    op = GradientOperator(gx, gy, cfg.backend)
+    c1, _, _ = op.constant_term(mu, nu)
+    if feat is None:
+        cost = op.grad(state.plan, c1)
+    else:
+        th = cfg.theta
+        c2 = (1.0 - th) * feat ** 2 + th * c1
+        cost = c2 - 4.0 * th * op.product(state.plan)
+    f, g = sk.sinkhorn_step_diff(cost, mu, nu, eps, state.f, state.g,
+                                 cfg.implicit_inner_steps)
+    eps = jnp.asarray(eps, mu.dtype)
+    plan = jnp.exp((f[:, None] + g[None, :] - cost) / eps)
+    return FullCoupling(plan, f, g)
+
+
+def _implicit_value(cfg: GWConfig, state, inputs, controls):
+    """`ImplicitSpec.value` — the PRIMAL objective, bit-compatible with the
+    historical forward expressions (precomputed (D∘D)-applies at (μ, ν) for
+    full GW; the cfg's own — possibly fused — factored energy for
+    lowrank)."""
+    gx, gy, mu, nu, feat, _ = inputs
+    if cfg.plan == "lowrank":
+        op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank,
+                                     cfg.lowrank_backend)
+        if feat is None:
+            return op.energy(state, cfg.g_floor)
+        from repro.core import fgw as _fgw
+        return _fgw.fgw_lr_value(op, feat ** 2, state, cfg.theta,
+                                 cfg.g_floor)
+    op = GradientOperator(gx, gy, cfg.backend)
+    if feat is None:
+        _, dx2_mu, dy2_nu = op.constant_term(mu, nu)
+        return op.energy(state.plan, dx2_mu, dy2_nu)
+    from repro.core import fgw as _fgw
+    return _fgw.fgw_full_value(op, feat, state.plan, cfg.theta)
+
+
+def _implicit_value_bwd(cfg: GWConfig, state, inputs, controls):
+    """`ImplicitSpec.value_bwd` — the gradient-correct objective for the
+    backward pass: the plan's OWN marginals everywhere (E(Γ) depends on μ/ν
+    only through the constraint, which the implicit term owns — the primal
+    shortcut of substituting (μ, ν) for the marginals would add a spurious
+    direct μ-dependence), and the XLA factored energy (the fused Gram-chain
+    kernels have no VJP)."""
+    gx, gy, mu, nu, feat, _ = inputs
+    if cfg.plan == "lowrank":
+        op = LowRankGradientOperator(gx, gy, cfg.backend, cfg.cost_rank,
+                                     "xla")
+        if feat is None:
+            return op.energy(state, cfg.g_floor)
+        from repro.core import fgw as _fgw
+        return _fgw.fgw_lr_value(op, feat ** 2, state, cfg.theta,
+                                 cfg.g_floor)
+    op = GradientOperator(gx, gy, cfg.backend)
+    if feat is None:
+        return op.energy(state.plan)
+    from repro.core import fgw as _fgw
+    return _fgw.fgw_full_value(op, feat, state.plan, cfg.theta)
+
+
+def implicit_spec(cfg: GWConfig) -> ImplicitSpec:
+    """The `ImplicitSpec` for a GW/FGW config — module-level partials over
+    the cfg only (hashable, never closing over tracers), so the spec rides
+    `fixed_point_value` as its static argument."""
+    return ImplicitSpec(solve=partial(_implicit_solve, cfg),
+                        step=partial(_implicit_step, cfg),
+                        value=partial(_implicit_value, cfg),
+                        value_bwd=partial(_implicit_value_bwd, cfg),
+                        grad_mode=cfg.grad_mode,
+                        solve_iters=cfg.implicit_solve_iters,
+                        solve_tol=cfg.implicit_solve_tol)
+
+
 def entropic_gw(grid_x, grid_y, mu, nu,
                 cfg: GWConfig = GWConfig(), gamma0=None,
                 controls: SolveControls | None = None) -> GWResult:
-    """Entropic GW distance + plan. jit-compatible.  The default fixed mode
-    (``tol=0``) runs on the scan path and is differentiable by unroll, as
-    before; adaptive mode (``tol>0``) uses the bounded while_loop and
-    supports forward-mode / envelope (stop_gradient) differentiation only.
+    """Entropic GW distance + plan. jit-compatible, and reverse-mode
+    differentiable in the geometries, measures, and controls under EVERY
+    backend/plan combination: the solve is wrapped in
+    `repro.core.solver.fixed_point_value`, whose implicit backward pass is
+    built from the converged coupling alone (O(1) solve memory — the
+    forward loop is never unrolled or replayed).
 
     ``grid_x``/``grid_y``: Geometry instances, or raw Grid1D/Grid2D (adapted
     with ``cfg.backend``).  ``controls`` overrides the cfg's traced value
@@ -315,21 +490,32 @@ def entropic_gw(grid_x, grid_y, mu, nu,
 
     With ``cfg.plan="lowrank"`` the solve runs entirely on the factored
     representation (result.coupling is a `LowRankCoupling`; plan/f/g are
-    None — no (M,N) array is built, so a 10⁵–10⁶-point problem fits).
-    ``gamma0`` warm starts are a dense-plan concept and are rejected there.
+    None — no (M,N) array is built, so a 10⁵–10⁶-point problem fits), and
+    the backward pass stays (N, r)-sized too.  ``gamma0`` warm starts are a
+    dense-plan concept and are rejected there.  ``plan_rank="auto"`` keeps
+    the host-level restart driver (not differentiable — it branches on
+    concrete residuals).
     """
+    ctl = resolve_controls(cfg, controls)
     if cfg.plan == "lowrank":
         if gamma0 is not None:
             raise ValueError(
                 "gamma0 is a dense-plan warm start; the factored path "
                 "resumes from a LowRankCoupling carry instead (see "
                 "entropic_gw_batch(resume_state=...))")
-        return _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg, controls)
-    op = GradientOperator(grid_x, grid_y, cfg.backend)
-    c1, dx2_mu, dy2_nu = op.constant_term(mu, nu)
+        if isinstance(cfg.plan_rank, str):
+            return _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg, ctl)
+        gx = as_geometry(grid_x, cfg.backend)
+        gy = as_geometry(grid_y, cfg.backend)
+        value, coup, info = fixed_point_value(
+            implicit_spec(cfg), (gx, gy, mu, nu, None, None), ctl)
+        return _result_of(coup, value, info.marginal_err, info.err_trace,
+                          info)
+    gx = as_geometry(grid_x, cfg.backend)
+    gy = as_geometry(grid_y, cfg.backend)
     state0 = full_init(mu, nu, gamma0) if gamma0 is not None else None
-    coup, info = gw_plan_solve(op, c1, mu, nu, cfg, controls, state0)
-    value = op.energy(coup.plan, dx2_mu, dy2_nu)
+    value, coup, info = fixed_point_value(
+        implicit_spec(cfg), (gx, gy, mu, nu, None, state0), ctl)
     return _result_of(coup, value, info.marginal_err, info.err_trace, info)
 
 
@@ -402,10 +588,11 @@ def lowrank_descent(step, mu, nu, cfg: GWConfig, ctl: SolveControls,
 
 
 def _entropic_gw_lowrank(grid_x, grid_y, mu, nu, cfg: GWConfig,
-                         controls: SolveControls | None) -> GWResult:
-    """Factored-plan entropic GW: mirror descent on (Q, R, g) through the
-    same convergence-controlled driver, O((M+N)·(r+cost_rank)) per step."""
-    ctl, _ = resolve_controls(cfg, controls)
+                         ctl: SolveControls) -> GWResult:
+    """Factored-plan entropic GW under ``plan_rank="auto"``: the host-level
+    rank-growth restart driver (`lowrank_descent`).  Not differentiable —
+    it branches on concrete residuals; static ranks route through
+    `fixed_point_value` in `entropic_gw` instead."""
     op = LowRankGradientOperator(grid_x, grid_y, cfg.backend, cfg.cost_rank,
                                  cfg.lowrank_backend)
     dx2, dy2 = op.constant_term(mu, nu)

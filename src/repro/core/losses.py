@@ -9,19 +9,25 @@ the solver runs in O(S·T) per iteration instead of O(S²T + ST²).
 
 Used by the trainer for cross-model distillation (different d_model and/or
 tokenizers), audio-token alignment (musicgen) and patch-grid alignment
-(qwen2-vl, 2D).  Gradients flow through the feature-cost matrix with the plan
-treated as constant (envelope theorem) by default; set ``unroll_grad=True``
-to differentiate through the whole mirror-descent unroll.
+(qwen2-vl, 2D).  The losses return ``entropic_fgw(...).value`` directly:
+the solve routes through the solver stack's implicit-differentiation
+surface (`repro.core.solver.fixed_point_value`), so reverse-mode gradients
+flow into the feature cost (and geometries/measures) with O(1) solve memory
+under any backend/plan.  ``grad_mode`` picks between the pure envelope
+gradient ("envelope": plan treated as constant — exact at tight tolerances)
+and the implicitly corrected one ("implicit": adds the plan's response via
+the implicit function theorem — pays a few extra linearized steps per
+backward pass, exact even at loose tolerances).
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.fgw import FGWConfig, entropic_fgw, fgw_energy
+from repro.core.fgw import FGWConfig, entropic_fgw
 from repro.core.grids import Grid1D, Grid2D
+from repro.core.gw import entropic_gw_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +38,37 @@ class AlignConfig:
     sinkhorn_iters: int = 50
     k: int = 1
     backend: str = "cumsum"
-    unroll_grad: bool = False
+    #: "implicit" (IFT-corrected) or "envelope" (plan held constant)
+    grad_mode: str = "implicit"
+    #: Neumann-series length for the implicit correction.  The series tail
+    #: is ρ^iters/(1−ρ) with ρ the outer map's contraction rate, so slowly
+    #: contracting problems (small ε) need more terms for tight gradients;
+    #: the early exit keeps fast-contracting solves cheap regardless.
+    implicit_solve_iters: int = 60
+    #: "full" dense plans or "lowrank" factored plans (rank ``plan_rank``)
+    plan: str = "full"
+    plan_rank: int = 8
+    #: factored-plan mirror step size (small sequence problems want a much
+    #: gentler γ than the solver's large-N default)
+    lr_gamma: float = 5.0
+    #: accelerator knobs, forwarded verbatim to the solver config
+    sinkhorn_backend: str = "auto"
+    lowrank_backend: str = "auto"
+    cost_dtype: str = "f32"
+
+
+def _fgw_config(cfg: AlignConfig) -> FGWConfig:
+    kwargs = {}
+    if cfg.plan == "lowrank":
+        kwargs = {"plan": "lowrank", "plan_rank": cfg.plan_rank,
+                  "lowrank_backend": cfg.lowrank_backend,
+                  "lr_gamma": cfg.lr_gamma}
+    return FGWConfig(eps=cfg.eps, outer_iters=cfg.outer_iters,
+                     sinkhorn_iters=cfg.sinkhorn_iters, backend=cfg.backend,
+                     theta=cfg.theta, grad_mode=cfg.grad_mode,
+                     implicit_solve_iters=cfg.implicit_solve_iters,
+                     sinkhorn_backend=cfg.sinkhorn_backend,
+                     cost_dtype=cfg.cost_dtype)
 
 
 def _feature_cost(h_src, h_tgt):
@@ -43,13 +79,7 @@ def _feature_cost(h_src, h_tgt):
     return jnp.sqrt(jnp.maximum(sq, 1e-12))
 
 
-def fgw_alignment_loss(h_src, h_tgt, cfg: AlignConfig = AlignConfig(),
-                       feature_cost=None):
-    """FGW(seq_src, seq_tgt) with positions as structure. (S,d), (T,d') → scalar.
-
-    If feature dims differ, pass ``feature_cost`` explicitly or use θ=1
-    (pure GW — feature-free, dimension-agnostic).
-    """
+def _seq_problem(h_src, h_tgt, cfg: AlignConfig, feature_cost):
     s, t = h_src.shape[0], h_tgt.shape[0]
     gx = Grid1D(s, h=1.0 / max(s - 1, 1), k=cfg.k)
     gy = Grid1D(t, h=1.0 / max(t - 1, 1), k=cfg.k)
@@ -58,16 +88,41 @@ def fgw_alignment_loss(h_src, h_tgt, cfg: AlignConfig = AlignConfig(),
     if feature_cost is None:
         feature_cost = (_feature_cost(h_src, h_tgt) if cfg.theta < 1.0
                         else jnp.zeros((s, t), h_src.dtype))
-    fcfg = FGWConfig(eps=cfg.eps, outer_iters=cfg.outer_iters,
-                     sinkhorn_iters=cfg.sinkhorn_iters, backend=cfg.backend,
-                     theta=cfg.theta, unroll=cfg.unroll_grad)
-    if cfg.unroll_grad:
-        res = entropic_fgw(gx, gy, feature_cost, mu, nu, fcfg)
-        return res.value
-    plan = jax.lax.stop_gradient(
-        entropic_fgw(gx, gy, jax.lax.stop_gradient(feature_cost), mu, nu,
-                     fcfg).plan)
-    return fgw_energy(gx, gy, feature_cost, plan, cfg.theta, cfg.backend)
+    return gx, gy, mu, nu, feature_cost
+
+
+def fgw_alignment_loss(h_src, h_tgt, cfg: AlignConfig = AlignConfig(),
+                       feature_cost=None):
+    """FGW(seq_src, seq_tgt) with positions as structure. (S,d), (T,d') → scalar.
+
+    If feature dims differ, pass ``feature_cost`` explicitly or use θ=1
+    (pure GW — feature-free, dimension-agnostic).  Reverse-differentiable
+    in the hidden states through the feature cost (implicit or envelope
+    gradients per ``cfg.grad_mode``).
+    """
+    gx, gy, mu, nu, feature_cost = _seq_problem(h_src, h_tgt, cfg,
+                                                feature_cost)
+    res = entropic_fgw(gx, gy, feature_cost, mu, nu, _fgw_config(cfg))
+    return res.value
+
+
+def fgw_alignment_loss_batch(h_srcs, h_tgts, cfg: AlignConfig = AlignConfig()):
+    """Mean FGW alignment loss over a batch of sequence pairs in ONE vmapped
+    solve: ``h_srcs`` (B, S, d), ``h_tgts`` (B, T, d').
+
+    Routes through `entropic_gw_batch`, so every lane shares one compiled
+    executable and the whole batch back-propagates through the implicit
+    surface together — this is the trainer's path (train/loop.py), replacing
+    a per-sequence vmap of solves.
+    """
+    problems, features = [], []
+    for h_s, h_t in zip(h_srcs, h_tgts):
+        gx, gy, mu, nu, fc = _seq_problem(h_s, h_t, cfg, None)
+        problems.append((gx, gy, mu, nu))
+        features.append(fc)
+    results = entropic_gw_batch(problems, _fgw_config(cfg),
+                                features=features)
+    return jnp.mean(jnp.stack([r.value for r in results]))
 
 
 def fgw_patch_alignment_loss(h_src, h_tgt, grid_n: int,
@@ -83,10 +138,5 @@ def fgw_patch_alignment_loss(h_src, h_tgt, grid_n: int,
     if feature_cost is None:
         feature_cost = (_feature_cost(h_src, h_tgt) if cfg.theta < 1.0
                         else jnp.zeros((n2, n2), h_src.dtype))
-    fcfg = FGWConfig(eps=cfg.eps, outer_iters=cfg.outer_iters,
-                     sinkhorn_iters=cfg.sinkhorn_iters, backend=cfg.backend,
-                     theta=cfg.theta)
-    plan = jax.lax.stop_gradient(
-        entropic_fgw(gx, gy, jax.lax.stop_gradient(feature_cost), mu, nu,
-                     fcfg).plan)
-    return fgw_energy(gx, gy, feature_cost, plan, cfg.theta, cfg.backend)
+    res = entropic_fgw(gx, gy, feature_cost, mu, nu, _fgw_config(cfg))
+    return res.value

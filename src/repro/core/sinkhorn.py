@@ -30,8 +30,15 @@ SMEM operand so ε-annealing never recompiles — and "auto" picks Pallas on
 TPU (compiled) and the XLA logsumexp scans elsewhere.  Off-TPU, an explicit
 "pallas" runs the interpreter (the test suite's parity path: ≤1 ulp per
 half-step vs the XLA expressions, with EXACT within-backend scheduling
-invariances — see tests/test_sinkhorn_backend.py).  The reverse-mode
-``unroll`` path always runs XLA.
+invariances — see tests/test_sinkhorn_backend.py).
+
+Reverse-mode differentiation never runs these loops backwards: the
+implicit surface (`repro.core.solver.fixed_point_value`) linearizes ONE
+differentiable application of the dual update at the converged potentials.
+:func:`sinkhorn_step_diff` (full plan) and :func:`lr_mirror_step_diff`
+(factored plan) are those one-step maps — pure XLA, with zero-mass-safe
+logs and logsumexps so padded lanes yield exact-zero cotangents instead of
+NaN (``jnp.log(0)`` and all-(−inf) logsumexp slices both have NaN VJPs).
 """
 from __future__ import annotations
 
@@ -73,6 +80,37 @@ def _use_pallas_lr(backend: str) -> bool:
     return ops.resolve_lowrank_backend(backend) == "pallas"
 
 
+def _safe_log(w):
+    """log with −inf at zero mass AND a zero (not NaN) cotangent there.
+
+    ``jnp.log(w)`` is −inf at w=0 forward, but its VJP is ct/w = NaN·0 at a
+    padded atom even under a zero cotangent.  The double-where keeps the
+    primal bit-identical (log of positive mass, −inf at zero) while routing
+    the gradient through a branch that never evaluates log(0).
+    """
+    return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)),
+                     jnp.asarray(-jnp.inf, w.dtype))
+
+
+def safe_logsumexp(z, axis=-1):
+    """logsumexp whose VJP is exact-zero on all-(−inf) slices.
+
+    ``jax.scipy.special.logsumexp`` returns −inf on an all-(−inf) slice but
+    its VJP there is 0/0 softmax = NaN — and a NaN survives multiplication
+    by a zero cotangent, so one padded low-rank lane poisons the whole
+    batch gradient.  Max-shift with a stopped gradient, mask dead entries
+    before exponentiating, and guard the final log; primal values match
+    the standard implementation exactly (including the −inf slices).
+    """
+    m = jax.lax.stop_gradient(jnp.max(z, axis=axis, keepdims=True))
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    live = z > -jnp.inf
+    e = jnp.where(live, jnp.exp(jnp.where(live, z, 0.0) - m), 0.0)
+    s = e.sum(axis=axis)
+    out = jnp.log(jnp.where(s > 0, s, 1.0)) + jnp.squeeze(m, axis)
+    return jnp.where(s > 0, out, jnp.asarray(-jnp.inf, out.dtype))
+
+
 def zero_mass_potentials(mu, nu):
     """Initial (f, g) with −inf on zero-mass atoms — their exact value at
     the Sinkhorn fixed point.  Starting there keeps the FIRST iteration's
@@ -92,7 +130,8 @@ def zero_mass_potentials(mu, nu):
 # both the fixed scans and the chunked early-stopping loops
 # ---------------------------------------------------------------------------
 
-def _log_pieces(cost, mu, nu, eps, backend: str = "xla"):
+def _log_pieces(cost, mu, nu, eps, backend: str = "xla",
+                cost_dtype: str = "f32"):
     """step((f,g))->(f,g) and plan_err((f,g))->(plan, L1 row-marginal gap).
 
     ``backend`` selects the dual-update implementation: the XLA logsumexp
@@ -102,6 +141,10 @@ def _log_pieces(cost, mu, nu, eps, backend: str = "xla"):
     so ε-annealing across outer stages never recompiles them.  Plan
     assembly and the residual stay in XLA either way (they run once per
     chunk, not once per iteration).
+
+    ``cost_dtype="bf16"`` streams the kernels' cost tiles in bfloat16
+    (accumulators stay f32) — a fused-kernel-only bandwidth knob; the XLA
+    expressions, plan assembly, and residual ignore it.
     """
     # one ε dtype for every entry point: the fixed scan historically passed
     # a weak Python float where the chunked loop passes a strong scalar —
@@ -118,8 +161,10 @@ def _log_pieces(cost, mu, nu, eps, backend: str = "xla"):
 
         def step(carry):
             _f, g = carry
-            fn = kops.sinkhorn_row_update(cost, g, log_mu, eps)
-            gn = kops.sinkhorn_col_update(cost, fn, log_nu, eps)
+            fn = kops.sinkhorn_row_update(cost, g, log_mu, eps,
+                                          cost_dtype=cost_dtype)
+            gn = kops.sinkhorn_col_update(cost, fn, log_nu, eps,
+                                          cost_dtype=cost_dtype)
             return fn, gn
     else:
         def step(carry):
@@ -235,7 +280,8 @@ def sinkhorn_log(cost, mu, nu, eps, iters, f0=None, g0=None,
 
 
 def sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
-                         f0=None, g0=None, backend: str = "xla"):
+                         f0=None, g0=None, backend: str = "xla",
+                         cost_dtype: str = "f32"):
     """Log-domain Sinkhorn with chunked early stopping.
 
     Returns (plan, f, g, err, iters_used).  ``tol=0`` runs exactly ``iters``
@@ -247,7 +293,7 @@ def sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
     # under x64); pin it to the measures' dtype so the scan carry keeps the
     # caller's precision instead of being promoted
     eps = jnp.asarray(eps, mu.dtype)
-    step, plan_err = _log_pieces(cost, mu, nu, eps, backend)
+    step, plan_err = _log_pieces(cost, mu, nu, eps, backend, cost_dtype)
     f = jnp.zeros_like(mu) if f0 is None else f0
     g = jnp.zeros_like(nu) if g0 is None else g0
     (f, g), it, _ = _chunked_loop((f, g), step,
@@ -325,7 +371,8 @@ def sinkhorn_unbalanced_log_chunked(cost, mu, nu, eps, rho_x, rho_y, iters,
 # ---------------------------------------------------------------------------
 
 def _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu, log_floor,
-                       backend: str = "xla"):
+                       backend: str = "xla", lse=logsumexp,
+                       cost_dtype: str = "f32"):
     """state0, sweep, residual for the log-domain Dykstra projection.
 
     One home for the sweep under both backends, exposed separately from
@@ -337,10 +384,15 @@ def _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu, log_floor,
     reductions with an HBM round trip between them.  The (r,)-sized
     dual/geometric-mean algebra and the residual stay in XLA under either
     backend (O(r) work, once per sweep/chunk).
+
+    ``lse`` is the logsumexp used by the XLA sweep: the forward solvers
+    keep the standard one (bit-compat), the differentiable one-step map
+    passes :func:`safe_logsumexp` — padded atoms' kernel rows are all
+    −inf, whose standard-logsumexp VJP is NaN.
     """
     ft = mu.dtype
-    log_mu = jnp.log(mu)
-    log_nu = jnp.log(nu)
+    log_mu = _safe_log(mu)
+    log_nu = _safe_log(nu)
     rank = lk_g.shape[-1]
     zr = jnp.zeros((rank,), ft)
     neg_inf = jnp.asarray(-jnp.inf, ft)
@@ -357,17 +409,19 @@ def _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu, log_floor,
         if use_kernel:
             # fused: new row duals AND the column LSE at those duals in one
             # streaming pass per factor side
-            f1, cq = kops.lr_dykstra_half(lk_q, g1, log_mu)
-            f2, cr = kops.lr_dykstra_half(lk_r, g2, log_nu)
+            f1, cq = kops.lr_dykstra_half(lk_q, g1, log_mu,
+                                          cost_dtype=cost_dtype)
+            f2, cr = kops.lr_dykstra_half(lk_r, g2, log_nu,
+                                          cost_dtype=cost_dtype)
         else:
             f1 = jnp.where(mu > 0,
-                           log_mu - logsumexp(g1[None, :] + lk_q, axis=1),
+                           log_mu - lse(g1[None, :] + lk_q, axis=1),
                            neg_inf)
             f2 = jnp.where(nu > 0,
-                           log_nu - logsumexp(g2[None, :] + lk_r, axis=1),
+                           log_nu - lse(g2[None, :] + lk_r, axis=1),
                            neg_inf)
-            cq = logsumexp(f1[:, None] + lk_q, axis=0)
-            cr = logsumexp(f2[:, None] + lk_r, axis=0)
+            cq = lse(f1[:, None] + lk_q, axis=0)
+            cr = lse(f2[:, None] + lk_r, axis=0)
         hp = h + w_gi
         h = jnp.maximum(hp, log_floor)
         w_gi = hp - h
@@ -392,7 +446,7 @@ def _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu, log_floor,
 
 
 def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor,
-                   backend: str = "xla"):
+                   backend: str = "xla", cost_dtype: str = "f32"):
     """Log-domain Dykstra projection onto the low-rank coupling polytope.
 
     Finds the KL projection of the kernels (K_Q, K_R, K_g) onto
@@ -420,7 +474,8 @@ def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor,
     """
     ft = mu.dtype
     state0, sweep, residual = _lr_dykstra_pieces(lk_q, lk_r, lk_g, mu, nu,
-                                                 log_floor, backend)
+                                                 log_floor, backend,
+                                                 cost_dtype=cost_dtype)
     s, it, _ = _chunked_loop(state0, sweep, residual, iters, chunk, tol, ft)
     f1, f2, g1, g2, h = s[0], s[1], s[2], s[3], s[4]
     q = jnp.exp(lk_q + f1[:, None] + g1[None, :])
@@ -429,7 +484,8 @@ def lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol, log_floor,
 
 
 def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
-                   iters, chunk, tol, g_floor, backend: str = "xla"):
+                   iters, chunk, tol, g_floor, backend: str = "xla",
+                   cost_dtype: str = "f32"):
     """One mirror-descent step on the factored plan (Q, R, g).
 
     Builds the KL-prox kernels of Scetbon et al. (2021):
@@ -452,6 +508,18 @@ def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
     row-marginal gap.
     """
     ft = mu.dtype
+    lk_q, lk_r, lk_g = _lr_prox_kernels(q, r, g, grad_q, grad_r, grad_g,
+                                        mu, nu, eps, gamma)
+    return lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol,
+                          jnp.log(jnp.asarray(g_floor, ft)), backend,
+                          cost_dtype=cost_dtype)
+
+
+def _lr_prox_kernels(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma):
+    """The KL-prox kernels of one factored mirror step (see
+    :func:`lr_mirror_step`) — one home for the forward solvers and the
+    differentiable one-step map."""
+    ft = mu.dtype
     eps = jnp.asarray(eps, ft)
     gamma = jnp.asarray(gamma, ft)
     gq_m = jnp.where((mu > 0)[:, None], grad_q, 0.0)
@@ -468,9 +536,77 @@ def lr_mirror_step(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
                      - gamma_eff * gq_m, neg_inf)
     lk_r = jnp.where(r > 0, coef * jnp.log(jnp.where(r > 0, r, 1.0))
                      - gamma_eff * gr_m, neg_inf)
-    lk_g = coef * jnp.log(g) - gamma_eff * grad_g
-    return lr_dykstra_log(lk_q, lk_r, lk_g, mu, nu, iters, chunk, tol,
-                          jnp.log(jnp.asarray(g_floor, ft)), backend)
+    lk_g = coef * _safe_log(g) - gamma_eff * grad_g
+    return lk_q, lk_r, lk_g
+
+
+def lr_mirror_step_diff(q, r, g, grad_q, grad_r, grad_g, mu, nu, eps, gamma,
+                        sweeps, g_floor):
+    """One DIFFERENTIABLE factored mirror step: the prox kernels of
+    :func:`lr_mirror_step` projected by a fixed number of XLA Dykstra
+    ``sweeps`` (a scan — reverse-differentiable), starting from zero duals.
+
+    This is the factored plan's T̃ for the implicit surface
+    (`repro.core.solver.fixed_point_value`): unlike the full plan's
+    Sinkhorn update it is not idempotent at the solution (Dykstra re-walks
+    its corrections from scratch), but its fixed points coincide with the
+    solver's, which is all the implicit function theorem needs; more
+    ``sweeps`` tightens the linearization.  Everything is (N, r)-sized —
+    the backward jaxpr stays free of (M, N) avals — and every logsumexp is
+    the zero-mass-safe variant (padded factor rows are all-(−inf) slices,
+    whose standard-logsumexp VJP is NaN).
+
+    Returns (q, r, g).
+    """
+    ft = mu.dtype
+    lk_q, lk_r, lk_g = _lr_prox_kernels(q, r, g, grad_q, grad_r, grad_g,
+                                        mu, nu, eps, gamma)
+    state0, sweep, _ = _lr_dykstra_pieces(
+        lk_q, lk_r, lk_g, mu, nu, jnp.log(jnp.asarray(g_floor, ft)),
+        backend="xla", lse=safe_logsumexp)
+    s, _ = jax.lax.scan(lambda c, _: (sweep(c), ()), state0, None,
+                        length=sweeps)
+    f1, f2, g1, g2, h = s[0], s[1], s[2], s[3], s[4]
+    qn = jnp.exp(lk_q + f1[:, None] + g1[None, :])
+    rn = jnp.exp(lk_r + f2[:, None] + g2[None, :])
+    return qn, rn, jnp.exp(h)
+
+
+def sinkhorn_step_diff(cost, mu, nu, eps, f, g, pairs: int = 1):
+    """``pairs`` DIFFERENTIABLE log-domain dual-update pairs, warm-started
+    at (f, g) — the full plan's T̃ for the implicit surface
+    (`repro.core.solver.fixed_point_value`).
+
+    At converged potentials one update pair is (approximately) idempotent,
+    so this is an exact fixed-point map to linearize; pure XLA (two
+    logsumexps per pair — `pallas_call` has no VJP, and the backward pass
+    is the one place the XLA expressions are still required).  Zero-mass
+    atoms are guarded: their potentials pin to −inf with exact-zero
+    cotangents (``_safe_log``; each logsumexp slice here contains at least
+    the finite cost entries, so the standard VJP is safe for the rest).
+
+    Returns (f, g).
+    """
+    eps = jnp.asarray(eps, mu.dtype)
+    log_mu = _safe_log(mu)
+    log_nu = _safe_log(nu)
+    zero_mu = mu <= 0
+    zero_nu = nu <= 0
+    neg_inf = jnp.asarray(-jnp.inf, mu.dtype)
+
+    def pair(carry, _):
+        f, g = carry
+        gm = jnp.where(zero_nu, neg_inf, g)
+        fn = eps * (log_mu - safe_logsumexp((gm[None, :] - cost) / eps,
+                                            axis=1))
+        fn = jnp.where(zero_mu, neg_inf, fn)
+        gn = eps * (log_nu - safe_logsumexp((fn[:, None] - cost) / eps,
+                                            axis=0))
+        gn = jnp.where(zero_nu, neg_inf, gn)
+        return (fn, gn), ()
+
+    (f, g), _ = jax.lax.scan(pair, (f, g), None, length=pairs)
+    return f, g
 
 
 def _warm_scalings(f0, eps):
@@ -503,30 +639,24 @@ def solve(cost, mu, nu, cfg: SinkhornConfig, f0=None, g0=None):
 
 
 def solve_adaptive(cost, mu, nu, eps, iters, chunk, tol, mode="log",
-                   f0=None, g0=None, unroll=False, backend: str = "xla"):
+                   f0=None, g0=None, backend: str = "xla",
+                   cost_dtype: str = "f32"):
     """Mode dispatch for the convergence-controlled driver.
 
     Returns (plan, f, g, err, iters_used) with warm-startable potentials in
-    either mode.  ``unroll=True`` uses the fixed-length scans (reverse-mode
-    differentiable; ``tol`` ignored, ``iters_used == iters``).
+    either mode.
 
     ``backend`` routes log-mode dual updates through the fused Pallas
-    kernels ("pallas"/"auto"-on-TPU) or the XLA scans ("xla").  The unroll
-    path always runs XLA — it exists for reverse-mode AD, and
-    ``pallas_call`` has no VJP.  Kernel/unbalanced modes are XLA-only.
+    kernels ("pallas"/"auto"-on-TPU) or the XLA scans ("xla").
+    Kernel/unbalanced modes are XLA-only.  Reverse-mode AD never runs this
+    loop backwards (see :func:`sinkhorn_step_diff`), so there is no
+    unrolled variant anymore.
     """
     eps = jnp.asarray(eps, mu.dtype)
     if mode == "log":
-        if unroll:
-            plan, f, g, err = sinkhorn_log(cost, mu, nu, eps, iters, f0, g0)
-            return plan, f, g, err, jnp.asarray(iters, jnp.int32)
         return sinkhorn_log_chunked(cost, mu, nu, eps, iters, chunk, tol,
-                                    f0, g0, backend)
+                                    f0, g0, backend, cost_dtype)
     a0 = _warm_scalings(f0, eps)
-    if unroll:
-        plan, a, b, err = sinkhorn_kernel(cost, mu, nu, eps, iters, a0)
-        used = jnp.asarray(iters, jnp.int32)
-    else:
-        plan, a, b, err, used = sinkhorn_kernel_chunked(
-            cost, mu, nu, eps, iters, chunk, tol, a0)
+    plan, a, b, err, used = sinkhorn_kernel_chunked(
+        cost, mu, nu, eps, iters, chunk, tol, a0)
     return plan, eps * jnp.log(a), eps * jnp.log(b), err, used

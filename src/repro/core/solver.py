@@ -55,16 +55,21 @@ step's sweeps through the fused Pallas kernels) stay static on the configs;
 because ε reaches the Pallas kernels as a traced operand too, ε-annealing
 across stages reuses one executable under either backend.
 
-``unroll=True`` swaps the while_loop for a ``lax.scan`` over the full outer
-cap (no early stopping) — the reverse-mode-differentiable path.  Solvers
-auto-select it whenever ``tol=0`` and no explicit controls are passed, so
-the default fixed mode keeps the pre-driver differentiable-by-unroll
-semantics; ``losses.fgw_alignment_loss(unroll_grad=True)`` requests it
-explicitly.
+Reverse-mode differentiation is NOT a separate loop mode: every solve runs
+the while_loop driver, and :func:`fixed_point_value` wraps it in a
+``jax.custom_vjp`` whose backward pass is built from the converged state
+alone — the envelope gradient of the objective plus an implicit
+(fixed-point) correction obtained by linearizing ONE differentiable mirror
+step at the solution.  The forward pass may therefore run any backend
+(fused Pallas kernels included) and any plan representation; the backward
+pass replays only the one-step map, so reverse memory is O(1) in the
+iteration counts.  The historical ``unroll=True`` scan path is gone.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +186,7 @@ class MirrorCarry:
 
     state: object            # solver state pytree (plan, duals, ...)
     t: jax.Array             # int32: outer steps executed so far
+    stage: jax.Array         # int32: annealing-schedule position (≤ t)
     inner: jax.Array         # int32: total inner iterations so far
     err: jax.Array           # residual after the last executed step
     done: jax.Array          # bool: converged (never set under tol=0)
@@ -197,8 +203,8 @@ class MirrorCarry:
                    if hasattr(leaf, "is_ready"))
 
     def tree_flatten(self):
-        return (self.state, self.t, self.inner, self.err, self.done,
-                self.trace), None
+        return (self.state, self.t, self.stage, self.inner, self.err,
+                self.done, self.trace), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -209,7 +215,7 @@ def init_carry(state0, outer_cap: int) -> MirrorCarry:
     """A fresh carry: no steps taken, trace all-NaN, not converged."""
     ft = jnp.result_type(float)
     zero = jnp.zeros((), jnp.int32)
-    return MirrorCarry(state=state0, t=zero, inner=zero,
+    return MirrorCarry(state=state0, t=zero, stage=zero, inner=zero,
                        err=jnp.asarray(jnp.inf, ft),
                        done=jnp.zeros((), bool),
                        trace=jnp.full((outer_cap,), jnp.nan, ft))
@@ -223,26 +229,14 @@ def info_of(carry: MirrorCarry) -> ConvergenceInfo:
 
 
 def resolve_controls(cfg, controls: SolveControls | None = None):
-    """The one home of each solver's mode-selection preamble.
+    """Traced controls built from ``cfg`` unless given explicitly.
 
-    Returns ``(ctl, unroll)``: traced controls built from ``cfg`` unless
-    given explicitly, and the scan-path decision — ``cfg.unroll`` when the
-    config has that field, else automatic for the fixed mode (``tol=0``
-    with no explicit controls), which keeps the default paper mode
-    reverse-mode differentiable.  Explicit ``controls`` (the batched /
-    serving path) always use the while_loop driver so tolerance values stay
-    traced operands.
-
-    The factored-plan mode (``cfg.plan="lowrank"``) never auto-unrolls:
-    its inner solver is Dykstra's projection loop (a bounded while_loop,
-    not reverse-differentiable), so the scan path would buy nothing —
-    configs reject ``unroll=True`` with a low-rank plan outright.
+    Every solver runs the same while_loop driver: reverse-mode
+    differentiation happens through :func:`fixed_point_value`'s implicit
+    backward pass, not through a loop-structure choice, so there is no
+    mode decision to make here anymore.
     """
-    unroll = getattr(cfg, "unroll", False) or (
-        controls is None and cfg.tol == 0.0
-        and getattr(cfg, "plan", "full") == "full")
-    ctl = SolveControls.from_config(cfg) if controls is None else controls
-    return ctl, unroll
+    return SolveControls.from_config(cfg) if controls is None else controls
 
 
 def plan_delta(new_state, old_state):
@@ -269,14 +263,30 @@ def mirror_descent_segment(step_fn, delta_fn, controls: SolveControls,
     runs exactly ``outer_cap`` steps (the paper-faithful fixed mode).
 
     Segmenting changes nothing but the dispatch granularity: every schedule
-    quantity is a function of the carried global ``t``, and the body is the
-    identical step sequence, so N segments of k steps reproduce one run of
-    N·k steps bit-for-bit.  That exactness is what the continuous-batching
-    engine's harvest-and-refill loop relies on.
+    quantity is a function of the carried ``stage``/``t`` counters, and the
+    body is the identical step sequence, so N segments of k steps reproduce
+    one run of N·k steps bit-for-bit.  That exactness is what the
+    continuous-batching engine's harvest-and-refill loop relies on.
+
+    **Annealing stage clock.** Schedule quantities (ε_t, the inner
+    tolerance) are read at the carried ``stage`` counter, not the raw step
+    counter ``t``.  The stage advances with every step *whose inner solve
+    actually reached its stage tolerance* — when the inner Sinkhorn solve
+    caps out mid-ramp (``step_err > inner_tol_at(stage)``), the stage
+    holds, so the next outer step retries at the same ε instead of
+    sharpening an already-unconverged subproblem.  Deep ramps
+    (eps_init/eps spanning many stages at small final ε) otherwise leave
+    the solve permanently behind its own schedule and the residual
+    oscillates without converging.  Whenever every inner solve converges
+    within its caps — all shallow-ramp and non-annealed runs — ``stage``
+    equals ``t`` and the iterates are bit-identical to the un-clocked
+    driver; dwell is also disabled under ``tol=0`` (fixed mode) and
+    bounded overall by ``outer_cap // 2`` extra steps.
     """
     t_end = (jnp.asarray(outer_cap, jnp.int32) if segment is None
              else jnp.minimum(jnp.asarray(outer_cap, jnp.int32),
                               carry.t + segment))
+    dwell_cap = jnp.asarray(max(outer_cap // 2, 1), jnp.int32)
 
     def cond(c):
         return (c.t < t_end) & jnp.logical_not(c.done)
@@ -290,16 +300,26 @@ def mirror_descent_segment(step_fn, delta_fn, controls: SolveControls,
         # the explicit mask here states the invariant in code rather than
         # leaning on the batching rule alone.
         active = jnp.logical_not(c.done) & (c.t < t_end)
-        new_state, step_err, used = step_fn(c.state, controls.eps_at(c.t),
-                                            controls.inner_tol_at(c.t))
-        conv = ((controls.tol > 0.0) & controls.anneal_done(c.t)
+        inner_tol = controls.inner_tol_at(c.stage)
+        new_state, step_err, used = step_fn(c.state,
+                                            controls.eps_at(c.stage),
+                                            inner_tol)
+        conv = ((controls.tol > 0.0) & controls.anneal_done(c.stage)
                 & (delta_fn(new_state, c.state) <= controls.tol)
                 & (step_err <= controls.tol))
+        # hold the annealing stage while the inner solver is capped out
+        # mid-ramp; (t - stage) counts holds already spent, bounding dwell.
+        hold = ((controls.tol > 0.0)
+                & jnp.logical_not(controls.anneal_done(c.stage))
+                & (step_err > inner_tol)
+                & ((c.t - c.stage) < dwell_cap))
         state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(active, n, o), new_state, c.state)
         return MirrorCarry(
             state=state,
             t=jnp.where(active, c.t + 1, c.t),
+            stage=jnp.where(active & jnp.logical_not(hold),
+                            c.stage + 1, c.stage),
             inner=jnp.where(active, c.inner + used, c.inner),
             err=jnp.where(active, step_err.astype(c.err.dtype), c.err),
             done=c.done | (active & conv),
@@ -309,7 +329,7 @@ def mirror_descent_segment(step_fn, delta_fn, controls: SolveControls,
 
 
 def mirror_descent(step_fn, state0, delta_fn, controls: SolveControls,
-                   outer_cap: int, unroll: bool = False):
+                   outer_cap: int):
     """Run ``step_fn`` to convergence (or to ``outer_cap``).
 
     One-shot front end over :func:`mirror_descent_segment` — see its
@@ -317,22 +337,155 @@ def mirror_descent(step_fn, state0, delta_fn, controls: SolveControls,
 
     Returns ``(final_state, ConvergenceInfo)``.
     """
-    if unroll:
-        # differentiable fixed-length path: scan, no early stop
-        def body(carry, t):
-            state, inner = carry
-            state, err, used = step_fn(state, controls.eps_at(t),
-                                       controls.inner_tol_at(t))
-            return (state, inner + used), err
-
-        (state, inner), errs = jax.lax.scan(
-            body, (state0, jnp.zeros((), jnp.int32)),
-            jnp.arange(outer_cap, dtype=jnp.int32))
-        return state, ConvergenceInfo(
-            outer_iters=jnp.asarray(outer_cap, jnp.int32),
-            inner_iters=inner, marginal_err=errs[-1],
-            converged=jnp.zeros((), bool), err_trace=errs)
-
     carry = mirror_descent_segment(step_fn, delta_fn, controls, outer_cap,
                                    init_carry(state0, outer_cap))
     return carry.state, info_of(carry)
+
+
+# ---------------------------------------------------------------------------
+# The implicit-differentiation surface.
+#
+# Entropic GW gradients do not need unrolled loops: by the envelope /
+# Danskin argument (Rioux, Goldfeld & Kato 2023) the derivative of the
+# entropic value depends only on the converged plan, and for loose
+# tolerances the residual sensitivity is recovered by the implicit function
+# theorem applied to the mirror-descent fixed point s* = T(s*, θ).  For any
+# downstream function F(s*, θ),
+#
+#   dF/dθ = ∂θF + (∂θT)ᵀ u,     u = (I − ∂sTᵀ)⁻¹ w,     w = ∂sF-cotangent,
+#
+# where u is computed by a Neumann series u = Σₖ (∂sTᵀ)ᵏ w — each term is
+# one VJP of the *one-step* map at the converged state, so reverse memory
+# is O(1) in the forward iteration count and the forward solve can run any
+# backend (fused Pallas kernels included): only `step` below must be
+# differentiable, never the solve loop itself.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplicitSpec:
+    """Static description of one differentiable fixed-point problem.
+
+    All callables must be module-level functions or ``functools.partial``
+    closures over *static* configuration only (never traced values) — the
+    spec rides through ``jax.custom_vjp`` as a non-differentiable argument.
+
+    - ``solve(inputs, controls) -> (state, info)``: the full solve, free to
+      use any backend / while_loop / Pallas kernel.
+    - ``step(state, inputs, controls) -> state``: ONE differentiable
+      application of the fixed-point map T̃ at the solution (XLA ops only);
+      linearized by the backward pass.  At a converged state it must be
+      (approximately) idempotent.
+    - ``value(state, inputs, controls) -> scalar``: the primal objective
+      reported forward (bit-compatible with the historical expressions).
+    - ``value_bwd``: optional gradient-correct replacement for ``value``
+      used only in the backward pass (e.g. the XLA energy expression when
+      the forward value came from a fused kernel without a VJP).
+    - ``grad_mode``: ``"implicit"`` (envelope + Neumann fixed-point
+      correction) or ``"envelope"`` (Danskin term only — exact in the
+      tol→0 limit, cheaper, skips the correction).
+    - ``solve_iters`` / ``solve_tol``: Neumann series cap and early-exit
+      threshold on the L1 norm of the latest term.
+    """
+
+    solve: Callable
+    step: Callable
+    value: Callable
+    value_bwd: Optional[Callable] = None
+    grad_mode: str = "implicit"
+    solve_iters: int = 30
+    solve_tol: float = 1e-10
+
+
+def _is_float0(x) -> bool:
+    return getattr(x, "dtype", None) == jax.dtypes.float0
+
+
+def _add_cotangents(a, b):
+    """Leafwise sum of two cotangent pytrees, preserving float0 leaves
+    (integer-valued primals carry no gradient)."""
+    def add(x, y):
+        if _is_float0(x):
+            return x if _is_float0(y) else y
+        if _is_float0(y):
+            return x
+        return x + y
+    return jax.tree_util.tree_map(add, a, b)
+
+
+def _ct_l1(tree):
+    """L1 mass of a cotangent pytree (float0 leaves contribute nothing)."""
+    total = jnp.zeros((), jnp.result_type(float))
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not _is_float0(leaf):
+            total = total + jnp.abs(leaf).sum()
+    return total
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fixed_point_value(spec: ImplicitSpec, inputs, controls):
+    """Solve the fixed point described by ``spec`` and return
+    ``(value, state, info)`` — reverse-mode differentiable in ``inputs``
+    and ``controls`` through the implicit backward pass, regardless of how
+    ``spec.solve`` runs forward.
+
+    When not differentiated this is exactly ``spec.solve`` +
+    ``spec.value`` — ``jax.custom_vjp`` is the identity on the primal
+    path, so forward results are bit-identical to the unwrapped solver.
+    """
+    state, info = spec.solve(inputs, controls)
+    value = spec.value(state, inputs, controls)
+    return value, state, info
+
+
+def _fpv_fwd(spec, inputs, controls):
+    state, info = spec.solve(inputs, controls)
+    value = spec.value(state, inputs, controls)
+    return (value, state, info), (state, inputs, controls)
+
+
+def _fpv_bwd(spec, res, cts):
+    state, inputs, controls = res
+    ct_value, ct_state, _ct_info = cts
+
+    # stop any residual tracer linkage: the backward pass linearizes at the
+    # *converged* state, treated as a point, exactly as the envelope/IFT
+    # argument prescribes.
+    state = jax.lax.stop_gradient(state)
+
+    val_fn = spec.value_bwd if spec.value_bwd is not None else spec.value
+    _, vjp_val = jax.vjp(val_fn, state, inputs, controls)
+    dv_s, dv_x, dv_c = vjp_val(ct_value)
+
+    # cotangent entering the fixed point: from the value plus any direct
+    # cotangent on the returned state (e.g. a loss reading the plan).
+    w = _add_cotangents(dv_s, ct_state)
+
+    if spec.grad_mode == "envelope":
+        return dv_x, dv_c
+
+    # u = Σₖ (∂sT̃ᵀ)ᵏ w by Neumann iteration with early exit; one jax.vjp
+    # of the one-step map stores its residuals once, each series term is a
+    # single transpose application.
+    _, vjp_state = jax.vjp(lambda s: spec.step(s, inputs, controls), state)
+
+    def n_cond(c):
+        term, _, k = c
+        return (k < spec.solve_iters) & (_ct_l1(term) > spec.solve_tol)
+
+    def n_body(c):
+        term, acc, k = c
+        (term,) = vjp_state(term)
+        return term, _add_cotangents(acc, term), k + 1
+
+    _, u, _ = jax.lax.while_loop(
+        n_cond, n_body, (w, w, jnp.zeros((), jnp.int32)))
+
+    # pull u back through the map's dependence on inputs and controls.
+    _, vjp_inputs = jax.vjp(lambda x, c: spec.step(state, x, c),
+                            inputs, controls)
+    dx_imp, dc_imp = vjp_inputs(u)
+    return (_add_cotangents(dv_x, dx_imp), _add_cotangents(dv_c, dc_imp))
+
+
+fixed_point_value.defvjp(_fpv_fwd, _fpv_bwd)

@@ -64,7 +64,7 @@ def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
                  cfg: UGWConfig = UGWConfig(), gamma0=None,
                  controls: SolveControls | None = None) -> GWResult:
     """``grid_x``/``grid_y``: Grids or any Geometry (repro.core.geometry)."""
-    ctl, unroll = resolve_controls(cfg, controls)
+    ctl = resolve_controls(cfg, controls)
     # reuse the materialized operator: rebuilding it inside the loop body
     # would re-trace point-cloud gram construction every outer step
     op = GradientOperator(grid_x, grid_y, cfg.backend)
@@ -78,21 +78,14 @@ def entropic_ugw(grid_x: GeometryLike, grid_y: GeometryLike, mu, nu,
         cost = local_cost(op, gamma, mu, nu, eps, cfg.rho)
         eps_t = eps * mass
         rho_t = cfg.rho * mass
-        if unroll:
-            new, f2, g2 = sk.sinkhorn_unbalanced_log(
-                cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters, f, g)
-            drift = jnp.abs(f2 - f).max() + jnp.abs(g2 - g).max()
-            used = jnp.asarray(cfg.sinkhorn_iters, jnp.int32)
-            f, g = f2, g2
-        else:
-            new, f, g, drift, used = sk.sinkhorn_unbalanced_log_chunked(
-                cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters,
-                cfg.sinkhorn_chunk, inner_tol, f, g)
+        new, f, g, drift, used = sk.sinkhorn_unbalanced_log_chunked(
+            cost, mu, nu, eps_t, rho_t, rho_t, cfg.sinkhorn_iters,
+            cfg.sinkhorn_chunk, inner_tol, f, g)
         new = new * jnp.sqrt(mass / jnp.maximum(new.sum(), 1e-300))
         return (new, f, g), drift, used
 
     (gamma, f, g), info = mirror_descent(step, (gamma, f, g), plan_delta,
-                                         ctl, cfg.outer_iters, unroll=unroll)
+                                         ctl, cfg.outer_iters)
     # UGW divergence value at the returned plan: the shared energy() plus
     # marginal/mass penalties.
     mu_g, nu_g = gamma.sum(1), gamma.sum(0)

@@ -58,7 +58,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sinkhorn_step import (BM, _finish_lse, _online_lse_update,
+from repro.kernels.sinkhorn_step import (BM, _cast_cost, _finish_lse,
+                                         _online_lse_update,
                                          default_interpret)
 
 #: rank/cost lane tile — factor ranks are small (8..64), one 128-lane tile
@@ -86,7 +87,8 @@ def _dykstra_half_kernel(lk_ref, gcol_ref, logw_ref, f_ref, col_ref,
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    lk = lk_ref[...]                                       # (BM, RP)
+    # astype upcasts bf16 kernel tiles (cost_dtype="bf16"); no-op otherwise
+    lk = lk_ref[...].astype(gcol_ref.dtype)                # (BM, RP)
     z = gcol_ref[...][None, :] + lk
     # row-LSE over the rank lanes (−inf-padded): matches jax.scipy's
     # logsumexp — amax + log Σ exp(z − amax), all-(−inf) rows pinned to −inf
@@ -106,8 +108,9 @@ def _dykstra_half_kernel(lk_ref, gcol_ref, logw_ref, f_ref, col_ref,
         col_ref[...] = _finish_lse(m_ref[...][0, :], s_ref[...][0, :])
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lr_dykstra_half_pallas(lk, gcol, logw, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "cost_dtype"))
+def lr_dykstra_half_pallas(lk, gcol, logw, interpret: bool | None = None,
+                           cost_dtype: str = "f32"):
     """One factor side of a Dykstra sweep, fused:
 
         f   = log w − LSE_lanes(gcol ⊕ lk)        (−inf on zero-mass rows)
@@ -115,10 +118,15 @@ def lr_dykstra_half_pallas(lk, gcol, logw, interpret: bool | None = None):
 
     for lk an (N, r) log-kernel, gcol the (r,) column duals, log w the row
     log-masses.  All operands traced; returns (f, col).
+
+    ``cost_dtype="bf16"`` streams the dominant (N, r) log-kernel tiles in
+    bfloat16 (duals, accumulators, and outputs stay full precision; ±inf
+    pins survive the cast) — see `sinkhorn_step._cast_cost`.
     """
     n, r = lk.shape
     dtype = lk.dtype
     lkp = _pad_axis(_pad_axis(lk, 0, BM, -jnp.inf), 1, BR, -jnp.inf)
+    lkp = _cast_cost(lkp, cost_dtype)
     gp = _pad_axis(gcol, 0, BR, 0.0)
     logwp = _pad_axis(logw, 0, BM, -jnp.inf)
     rp = lkp.shape[1]
@@ -144,10 +152,12 @@ def lr_dykstra_half_pallas(lk, gcol, logw, interpret: bool | None = None):
 
 
 def lr_dykstra_half_pallas_batched(lk, gcol, logw,
-                                   interpret: bool | None = None):
+                                   interpret: bool | None = None,
+                                   cost_dtype: str = "f32"):
     """Fused half-sweep over (B, N, r) lanes in one grid-extended launch."""
     return jax.vmap(functools.partial(lr_dykstra_half_pallas,
-                                      interpret=interpret))(lk, gcol, logw)
+                                      interpret=interpret,
+                                      cost_dtype=cost_dtype))(lk, gcol, logw)
 
 
 # ---------------------------------------------------------------------------

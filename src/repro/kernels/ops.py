@@ -80,24 +80,30 @@ def _sinkhorn_f32(cost, vec, logm):
     return cost, vec, logm, orig
 
 
-def sinkhorn_row_update(cost, g, log_mu, eps, interpret: bool | None = None):
+def sinkhorn_row_update(cost, g, log_mu, eps, interpret: bool | None = None,
+                        cost_dtype: str = "f32"):
     """Fused log-domain Sinkhorn row half-step (see sinkhorn_step.py).
 
     ``eps`` is a traced scalar — ε-annealing reuses one executable.
     ``interpret=None`` auto-selects compiled-on-TPU / interpreter elsewhere.
+    ``cost_dtype="bf16"`` streams C's tiles in bfloat16, accumulating in
+    full precision (opt-in bandwidth knob; see sinkhorn_step._cast_cost).
     """
     cost, g, log_mu, orig = _sinkhorn_f32(cost, g, log_mu)
     f = sinkhorn_step.sinkhorn_row_update_pallas(cost, g, log_mu, eps,
-                                                 interpret=interpret)
+                                                 interpret=interpret,
+                                                 cost_dtype=cost_dtype)
     return f.astype(orig)
 
 
-def sinkhorn_col_update(cost, f, log_nu, eps, interpret: bool | None = None):
+def sinkhorn_col_update(cost, f, log_nu, eps, interpret: bool | None = None,
+                        cost_dtype: str = "f32"):
     """Column half-step — a true Cᵀ-twin kernel (row axis innermost over the
     same row-major C tiles), so no transposed (M,N) copy is materialized."""
     cost, f, log_nu, orig = _sinkhorn_f32(cost, f, log_nu)
     g = sinkhorn_step.sinkhorn_col_update_pallas(cost, f, log_nu, eps,
-                                                 interpret=interpret)
+                                                 interpret=interpret,
+                                                 cost_dtype=cost_dtype)
     return g.astype(orig)
 
 
@@ -124,13 +130,16 @@ def _lr_f32(*arrays):
     return (*arrays, orig)
 
 
-def lr_dykstra_half(lk, gcol, logw, interpret: bool | None = None):
+def lr_dykstra_half(lk, gcol, logw, interpret: bool | None = None,
+                    cost_dtype: str = "f32"):
     """Fused factored-plan Dykstra half-sweep: new row duals f AND the
     per-column LSE of one (N, r) log-kernel in a single streaming pass
-    (see lr_step.py).  All operands traced — retunes never recompile."""
+    (see lr_step.py).  All operands traced — retunes never recompile.
+    ``cost_dtype="bf16"`` streams the log-kernel tiles in bfloat16."""
     lk, gcol, logw, orig = _lr_f32(lk, gcol, logw)
     f, col = lr_step.lr_dykstra_half_pallas(lk, gcol, logw,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            cost_dtype=cost_dtype)
     return f.astype(orig), col.astype(orig)
 
 

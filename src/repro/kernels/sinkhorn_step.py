@@ -98,8 +98,10 @@ def _row_kernel(eps_ref, cost_ref, g_ref, logmu_ref, f_ref, m_ref, s_ref, *,
         s_ref[...] = jnp.zeros_like(s_ref)
 
     # divide (not reciprocal-multiply) so interpret mode matches the XLA
-    # path's (g − C)/ε rounding bit-for-bit
-    z = (g_ref[...][None, :] - cost_ref[...]) / eps        # (BM, BN)
+    # path's (g − C)/ε rounding bit-for-bit; the astype upcasts bf16 cost
+    # tiles (cost_dtype="bf16") and is a no-op at matching dtypes
+    z = (g_ref[...][None, :]
+         - cost_ref[...].astype(g_ref.dtype)) / eps        # (BM, BN)
     _online_lse_update(z, m_ref, s_ref, axis=1)
 
     @pl.when(col == n_col_blocks - 1)
@@ -118,7 +120,8 @@ def _col_kernel(eps_ref, cost_ref, f_ref, lognu_ref, g_ref, m_ref, s_ref, *,
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    z = (f_ref[...][:, None] - cost_ref[...]) / eps        # (BM, BN)
+    z = (f_ref[...][:, None]
+         - cost_ref[...].astype(f_ref.dtype)) / eps        # (BM, BN)
     _online_lse_update(z, m_ref, s_ref, axis=0)
 
     @pl.when(row == n_row_blocks - 1)
@@ -136,14 +139,31 @@ def _pad_operands(cost, v, w, bm: int, bn: int):
     return costp, jnp.pad(v, (0, np_)), jnp.pad(w, (0, mp))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _cast_cost(costp, cost_dtype: str):
+    """The opt-in bandwidth knob: ``cost_dtype="bf16"`` streams the cost
+    tiles as bfloat16 (half the HBM traffic of the dominant operand); the
+    kernels upcast each tile before the f32 online reduction, so duals,
+    scratch accumulators, and outputs keep full precision.  ±inf padding
+    survives the cast (bf16 carries infinities)."""
+    if cost_dtype == "f32":
+        return costp
+    if cost_dtype == "bf16":
+        return costp.astype(jnp.bfloat16)
+    raise ValueError(f"unknown cost_dtype {cost_dtype!r}: "
+                     "expected 'f32' or 'bf16'")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "cost_dtype"))
 def sinkhorn_row_update_pallas(cost, g, log_mu, eps,
-                               interpret: bool | None = None):
+                               interpret: bool | None = None,
+                               cost_dtype: str = "f32"):
     """f = ε(log μ − LSE_p((g_p − C_ip)/ε)) for (M,N) cost; fused single
-    pass.  ``eps`` is traced (SMEM scalar): annealing never recompiles."""
+    pass.  ``eps`` is traced (SMEM scalar): annealing never recompiles.
+    ``cost_dtype="bf16"`` streams C's tiles in bfloat16 (see `_cast_cost`)."""
     m, _ = cost.shape
     dtype = cost.dtype
     costp, gp, logmup = _pad_operands(cost, g, log_mu, BM, BN)
+    costp = _cast_cost(costp, cost_dtype)
     grid = (costp.shape[0] // BM, costp.shape[1] // BN)
     eps_arr = jnp.asarray(eps, dtype).reshape((1,))
 
@@ -165,15 +185,17 @@ def sinkhorn_row_update_pallas(cost, g, log_mu, eps,
     return f[:m]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "cost_dtype"))
 def sinkhorn_col_update_pallas(cost, f, log_nu, eps,
-                               interpret: bool | None = None):
+                               interpret: bool | None = None,
+                               cost_dtype: str = "f32"):
     """g = ε(log ν − LSE_i((f_i − C_ip)/ε)): the Cᵀ twin as a true column
     kernel — the SAME row-major C tiles stream through VMEM with the row
     axis innermost, so no transposed copy of C is ever materialized."""
     _, n = cost.shape
     dtype = cost.dtype
     costp, lognup, fp = _pad_operands(cost, log_nu, f, BM, BN)
+    costp = _cast_cost(costp, cost_dtype)
     grid = (costp.shape[1] // BN, costp.shape[0] // BM)
     eps_arr = jnp.asarray(eps, dtype).reshape((1,))
 
@@ -195,24 +217,27 @@ def sinkhorn_col_update_pallas(cost, f, log_nu, eps,
     return g[:n]
 
 
-def _batched(fn, cost, v, w, eps, interpret):
+def _batched(fn, cost, v, w, eps, interpret, cost_dtype):
     eps = jnp.broadcast_to(jnp.asarray(eps, cost.dtype), cost.shape[:1])
-    return jax.vmap(functools.partial(fn, interpret=interpret))(cost, v, w,
-                                                                eps)
+    return jax.vmap(functools.partial(fn, interpret=interpret,
+                                      cost_dtype=cost_dtype))(cost, v, w,
+                                                              eps)
 
 
 def sinkhorn_row_update_pallas_batched(cost, g, log_mu, eps,
-                                       interpret: bool | None = None):
+                                       interpret: bool | None = None,
+                                       cost_dtype: str = "f32"):
     """Row half-step over (B, M, N) lanes in ONE grid-extended launch —
     Pallas' vmap batching rule prepends the lane axis as the outermost grid
     dimension.  ``eps`` may be scalar (shared) or (B,) (per-lane, as the
     serving path's stacked `SolveControls` deliver it)."""
     return _batched(sinkhorn_row_update_pallas, cost, g, log_mu, eps,
-                    interpret)
+                    interpret, cost_dtype)
 
 
 def sinkhorn_col_update_pallas_batched(cost, f, log_nu, eps,
-                                       interpret: bool | None = None):
+                                       interpret: bool | None = None,
+                                       cost_dtype: str = "f32"):
     """Column half-step over (B, M, N) lanes; see the row twin."""
     return _batched(sinkhorn_col_update_pallas, cost, f, log_nu, eps,
-                    interpret)
+                    interpret, cost_dtype)

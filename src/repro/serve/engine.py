@@ -216,6 +216,16 @@ class GWServeConfig:
     #: plan), or "refine" (the sliced answer immediately, then the exact
     #: solve warm-started from the sliced plan; `serve` yields both).
     service: str = "exact"
+    #: low-priority admission lane for ``service="refine"`` background
+    #: refinement: exact requests are scheduled ahead of refine ones at
+    #: every decision point — bucket queues sort exact-first (stable within
+    #: each tier, so hardness ordering is preserved), exact admissions into
+    #: a live run jump ahead of queued refine work, and buckets holding
+    #: only refine requests dispatch after every exact-bearing bucket.
+    #: Refine requests already answered their preliminary from the sliced
+    #: tier, so deferring their exact polish never starves a caller —
+    #: while an exact request has nothing until its solve finishes.
+    refine_priority: bool = True
     #: sliced tier: number of random projection directions (also the
     #: profile length the cache's second stage compares).
     sliced_n_proj: int = 32
@@ -354,6 +364,12 @@ def _gather_lanes(stacked, idx):
     return jax.tree_util.tree_map(lambda l: l[idx], stacked)
 
 
+def _service_tier(req: "_Request") -> int:
+    """Admission priority tier: 0 = exact (a caller is blocked on this),
+    1 = refine (its caller already has the sliced preliminary)."""
+    return 1 if req.service == "refine" else 0
+
+
 class _BucketRun:
     """One bucket's continuous-batching state, split into an async-friendly
     issue/ready/harvest surface.
@@ -382,6 +398,9 @@ class _BucketRun:
         if engine.cfg.order_by_hardness:
             entries = sorted(entries, key=engine.predicted_hardness,
                              reverse=True)
+        if engine.cfg.refine_priority:
+            # stable: exact-first, hardness order preserved within a tier
+            entries = sorted(entries, key=_service_tier)
         self.pending = collections.deque(entries)
         b = engine._slot_width(len(entries))
         self.b = b
@@ -1119,6 +1138,11 @@ class GWEngine:
             if req.service == "refine":
                 self._arm_sliced_warm(req)
             buckets.setdefault(self._bucket_key(req), []).append(req)
+        if self.cfg.refine_priority:
+            # refine-only buckets drive last (stable within each class)
+            buckets = dict(sorted(
+                buckets.items(),
+                key=lambda kv: all(_service_tier(r) for r in kv[1])))
         try:
             if self.cfg.scheduler == "pipeline":
                 self._drive_pipeline(buckets, results, done)
@@ -1351,12 +1375,26 @@ class GWEngine:
                     key = self._bucket_key(req)
                     live = next((r for r in inflight if r.key == key), None)
                     if live is not None:
-                        live.pending.append(req)
+                        if (self.cfg.refine_priority
+                                and _service_tier(req) == 0):
+                            # exact admissions jump ahead of queued refine
+                            # polish (FIFO among exacts is preserved)
+                            at = next((i for i, p in enumerate(live.pending)
+                                       if _service_tier(p)),
+                                      len(live.pending))
+                            live.pending.insert(at, req)
+                        else:
+                            live.pending.append(req)
                     else:
                         waiting.setdefault(key, []).append(req)
                 # -- dispatch: start waiting buckets up to the depth bound
                 while waiting and len(inflight) < depth:
-                    key = next(iter(waiting))
+                    if self.cfg.refine_priority:
+                        # exact-bearing buckets first (stable among ties)
+                        key = min(waiting, key=lambda k: all(
+                            _service_tier(r) for r in waiting[k]))
+                    else:
+                        key = next(iter(waiting))
                     entries = waiting.pop(key)
                     run = None
                     try:

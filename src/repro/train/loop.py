@@ -26,8 +26,9 @@ class TrainConfig:
     remat: bool = True
     gather_params: bool = False    # ZeRO-3 in-loop param gather (bf16 wire)
     gw_align_weight: float = 0.0   # >0 enables the FGC-FGW alignment loss
-    # θ<1: the feature (linear) term carries the student gradient under the
-    # envelope theorem; θ=1 (pure GW) is feature-free and gives zero grad.
+    # θ<1: the feature (linear) term carries the student gradient (envelope
+    # term + implicit plan response, per gw_align.grad_mode); θ=1 (pure GW)
+    # is feature-free and gives zero grad.
     gw_align: gw_losses.AlignConfig = gw_losses.AlignConfig(
         theta=0.5, outer_iters=3, sinkhorn_iters=30)
     optimizer: optim.OptimizerConfig = optim.OptimizerConfig()
@@ -46,10 +47,12 @@ def _microbatch_loss(params, mb, cfg: ModelConfig, tcfg: TrainConfig):
     if tcfg.gw_align_weight > 0.0 and "teacher_h" in mb:
         logits, aux, hidden = lm.forward(params, mb, cfg, remat=tcfg.remat,
                                          return_hidden=True)
-        def per_seq(h_s, h_t):
-            return gw_losses.fgw_alignment_loss(h_s, h_t, tcfg.gw_align)
-        gw = jnp.mean(jax.vmap(per_seq)(hidden.astype(jnp.float32),
-                                        mb["teacher_h"].astype(jnp.float32)))
+        # one vmapped batch solve (not a per-seq vmap of solves): every lane
+        # shares an executable and backprop runs once through the solver
+        # stack's implicit surface
+        gw = gw_losses.fgw_alignment_loss_batch(
+            hidden.astype(jnp.float32),
+            mb["teacher_h"].astype(jnp.float32), tcfg.gw_align)
         loss = loss + tcfg.gw_align_weight * gw
         metrics = {**metrics, "gw_align": gw}
     return loss, metrics

@@ -15,8 +15,8 @@ the whole mirror descent on P = Q diag(1/g) Rᵀ.  Contracts pinned here:
   (5) serving — GWEngine routes by ``lowrank_above``/``submit(plan=...)``,
       factored and dense requests share one flush, and factored engine
       results match the direct solver;
-  (6) config hygiene — invalid plan strings, unroll+lowrank, and dense
-      warm starts under the factored plan are rejected loudly.
+  (6) config hygiene — invalid plan strings and dense warm starts under
+      the factored plan are rejected loudly.
 """
 import dataclasses
 
@@ -300,8 +300,6 @@ def test_engine_hardness_is_plan_aware():
 def test_invalid_plan_configs_rejected():
     with pytest.raises(ValueError, match="unknown plan"):
         GWConfig(plan="midrank")
-    with pytest.raises(ValueError, match="unroll"):
-        GWConfig(plan="lowrank", unroll=True)
     gx, gy = _cloud(8, seed=0), _cloud(8, seed=1)
     mu = _unif(8)
     with pytest.raises(ValueError, match="warm start"):

@@ -330,6 +330,64 @@ def test_refine_yields_preliminary_then_final_in_serve():
                                rtol=1e-5)
 
 
+def test_refine_priority_sorts_bucket_queue_exact_first():
+    """The admission tier: a bucket's queue orders exact requests ahead of
+    refine ones (stable within each tier, so hardness order survives)."""
+    from repro.serve.engine import _BucketRun
+    eng = _engine(max_batch=2)
+    probs = [(PointCloudGeometry(jnp.asarray(_cloud(10, 80 + i, d=2))),
+              PointCloudGeometry(jnp.asarray(_cloud(12, 90 + i, d=2))),
+              _uni(10), _uni(12)) for i in range(4)]
+    svcs = ["refine", "exact", "refine", "exact"]
+    for p, s in zip(probs, svcs):
+        eng.submit(*p, service=s)
+    for req in eng._queue:
+        eng._resolve(req)
+    key = eng._bucket_key(eng._queue[0])
+    run = _BucketRun(eng, key, list(eng._queue), donate=False)
+    order = [r.service for r in list(run.slots) + list(run.pending)
+             if r is not None]
+    assert order[:2] == ["exact", "exact"]
+    assert order[2:] == ["refine", "refine"]
+    eng._queue.clear()
+
+
+def test_exact_requests_never_starved_by_refine_backlog():
+    """The starvation property under contention (max_batch=2): a backlog
+    of refine requests is already in flight when two exact requests
+    arrive; the exacts jump the live run's pending queue, so BOTH finish
+    before the refine backlog drains.  Refine callers already hold their
+    sliced preliminary — exact callers hold nothing until their solve
+    lands.  (max_inflight_buckets widens the admission window so the whole
+    backlog is IN the engine when the exacts arrive — the priority lane
+    reorders admitted work, not the upstream stream.)"""
+    eng = _engine(max_batch=2, max_inflight_buckets=4)
+    probs = [(PointCloudGeometry(jnp.asarray(_cloud(10, 100 + i, d=2))),
+              PointCloudGeometry(jnp.asarray(_cloud(12, 120 + i, d=2))),
+              _uni(10), _uni(12)) for i in range(8)]
+    svcs = ["refine"] * 6 + ["exact"] * 2
+
+    def stream():
+        for p, s in zip(probs, svcs):
+            yield p, {"service": s}
+
+    outs = list(eng.serve(stream()))
+    # every request completes: 6 refine (preliminary + final) + 2 exact
+    finals = {}
+    for pos, (rid, res) in enumerate(outs):
+        finals[rid] = (pos, res)                 # keep the LAST yield
+    assert len(finals) == 8
+    assert sum(1 for rid, _ in outs) == 6 * 2 + 2
+    rids = sorted(finals)                        # rids are submit-ordered
+    refine_rids, exact_rids = rids[:6], rids[6:]
+    for rid in rids:
+        assert bool(finals[rid][1].info.converged)
+    # the property: no exact final lands after the refine backlog's tail
+    last_exact = max(finals[r][0] for r in exact_rids)
+    last_refine = max(finals[r][0] for r in refine_rids)
+    assert last_exact < last_refine
+
+
 def test_submit_rejects_unsliceable_and_fgw_fast_requests():
     dense = DenseGeometry(jnp.asarray(RNG.random((6, 6))))
     eng = _engine()
